@@ -1,0 +1,98 @@
+"""Shared benchmark harness: paper-experiment runner + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per variant):
+``us_per_call`` is the mean optimizer-step wall time; ``derived`` packs the
+figure's headline quantity (accuracy / consensus / rate), semicolon-keyed.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_topology, make_optimizer
+from repro.core.trainer import CollaborativeTrainer, train_loop
+from repro.data import AgentPartitioner, make_classification
+from repro.nn.paper_models import (
+    classifier_loss,
+    cnn_classifier_apply,
+    cnn_classifier_template,
+    mlp_classifier_apply,
+    mlp_classifier_template,
+)
+from repro.nn.param import init_params
+
+MLP_LOSS = functools.partial(classifier_loss, mlp_classifier_apply)
+CNN_LOSS = functools.partial(classifier_loss, cnn_classifier_apply)
+
+
+@functools.lru_cache(maxsize=4)
+def dataset(kind: str = "flat", n: int = 4096, n_classes: int = 10):
+    if kind == "image":
+        return make_classification(n, n_classes=n_classes, image_hw=16, seed=0)
+    return make_classification(n, n_classes=n_classes, dim=64, seed=0)
+
+
+@functools.lru_cache(maxsize=4)
+def base_params(kind: str = "flat", n_classes: int = 10):
+    key = jax.random.PRNGKey(0)
+    if kind == "image":
+        return init_params(cnn_classifier_template(16, 3, n_classes), key)
+    return init_params(mlp_classifier_template(64, n_classes, width=50, depth=6), key)
+
+
+def run_experiment(
+    name: str,
+    optimizer: str,
+    *,
+    kind: str = "flat",
+    steps: int = 150,
+    agents: int = 5,
+    topology: str = "fully_connected",
+    lr: float = 0.05,
+    schedule=None,
+    batch: int = 64,
+    eval_every: int = 25,
+    n_classes: int = 10,
+    non_iid: bool = False,
+    **opt_kw,
+) -> Dict:
+    train, val = dataset(kind, n_classes=n_classes)
+    params = base_params(kind, n_classes)
+    loss = CNN_LOSS if kind == "image" else MLP_LOSS
+    part = AgentPartitioner(train, agents, seed=0, non_iid=non_iid)
+    topo = make_topology(topology, agents)
+    opt = make_optimizer(optimizer, schedule if schedule is not None else lr, **opt_kw)
+    tr = CollaborativeTrainer(loss, params, topo, opt)
+    eval_batch = {"x": jnp.asarray(val.x), "y": jnp.asarray(val.y)}
+
+    batches = part.batches(batch)
+    tr.step(next(batches))          # compile
+    t0 = time.time()
+    train_loop(tr, batches, steps - 1, eval_batch=eval_batch, eval_every=eval_every)
+    dt = time.time() - t0
+    ev = tr.evaluate(eval_batch)
+    last = tr.history.rows[-1]
+    return {
+        "name": name,
+        "us_per_call": 1e6 * dt / max(steps - 1, 1),
+        "train_acc": last.get("acc", float("nan")),
+        "val_acc": ev["acc_mean"],
+        "val_acc_var": ev["acc_var"],
+        "consensus": last.get("consensus_error", float("nan")),
+        "loss": last.get("loss", float("nan")),
+        "history": tr.history,
+        "lambda2": topo.lambda2,
+    }
+
+
+def emit(rows: List[Dict]) -> None:
+    for r in rows:
+        derived = (f"val_acc={r['val_acc']:.4f};train_acc={r['train_acc']:.4f};"
+                   f"consensus={r['consensus']:.3e};acc_var={r['val_acc_var']:.2e}")
+        print(f"{r['name']},{r['us_per_call']:.1f},{derived}")

@@ -1,0 +1,24 @@
+"""Fig 1(b): CDMSGD vs Federated Averaging (the paper's headline result).
+
+Paper claims: CDMSGD is slightly slower to converge than FedAvg (which
+brute-force averages on a parameter server every epoch) but performs
+better at steady state, approaching centralized-SGD accuracy.
+"""
+
+from benchmarks.common import emit, run_experiment
+
+
+def run(steps: int = 200):
+    rows = [
+        run_experiment("fig1b/fedavg_e1", "fedavg", steps=steps, mu=0.9, local_steps=1),
+        run_experiment("fig1b/fedavg_e5", "fedavg", steps=steps, mu=0.9, local_steps=5),
+        run_experiment("fig1b/cdmsgd", "cdmsgd", steps=steps, mu=0.9),
+        run_experiment("fig1b/cdmsgd_nesterov", "cdmsgd_nesterov", steps=steps, mu=0.9),
+        run_experiment("fig1b/sgd", "sgd", steps=steps),
+    ]
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

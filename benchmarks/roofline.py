@@ -1,0 +1,60 @@
+"""Roofline aggregation: results/dryrun/*.json -> the §Roofline table.
+
+Prints one CSV row per (arch, shape, mesh): the three terms in seconds,
+the dominant bottleneck, and the MODEL_FLOPS / HLO_FLOPs utilization
+ratio.  Also emits a markdown table to results/roofline.md for
+EXPERIMENTS.md inclusion.
+"""
+
+import glob
+import json
+import os
+import time
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "dryrun")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(mesh_filter: str = "16x16"):
+    recs = load_records()
+    rows = []
+    md = ["| arch | shape | mesh | compute (s) | memory (s) | collective (s) | dominant | useful-FLOP ratio | fits 16GB |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") != "ok":
+            if "skip" in str(r.get("status", "")):
+                md.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | skipped (sub-quadratic rule) | — | — |")
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        rl = r["roofline"]
+        name = f"roofline/{r['arch']}__{r['shape']}__{r['mesh']}"
+        ratio = rl["useful_flops_ratio"]
+        ratio_s = f"{ratio:.3f}" if ratio == ratio else "n/a"
+        derived = (f"compute={rl['compute_s']:.3e};memory={rl['memory_s']:.3e};"
+                   f"collective={rl['collective_s']:.3e};dominant={rl['dominant']};"
+                   f"useful_ratio={ratio_s};fits={r['fits_v5e_16gb']}")
+        rows.append((name, derived))
+        md.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rl['compute_s']:.3e} "
+                  f"| {rl['memory_s']:.3e} | {rl['collective_s']:.3e} | **{rl['dominant']}** "
+                  f"| {ratio_s} | {r['fits_v5e_16gb']} |")
+    t0 = time.time()
+    for name, derived in rows:
+        print(f"{name},{1e6*(time.time()-t0):.1f},{derived}")
+    out = os.path.join(os.path.dirname(RESULTS), "roofline.md")
+    with open(out, "w") as f:
+        f.write("\n".join(md) + "\n")
+    print(f"roofline/markdown_table,0.0,written={out};rows={len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(mesh_filter="")

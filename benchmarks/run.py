@@ -1,0 +1,55 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``        — everything
+``PYTHONPATH=src python -m benchmarks.run fig1a``  — one benchmark
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+"""
+
+import sys
+import time
+
+from benchmarks import (
+    consensus_radius,
+    fig1a_cdsgd_vs_sgd,
+    fig1b_cdmsgd_vs_fedavg,
+    fig2a_network_size,
+    fig2b_topology,
+    fig4_datasets,
+    fig5_step_size,
+    kernel_microbench,
+    noniid_ablation,
+    roofline,
+    table1_methods,
+    table1_rates,
+)
+
+BENCHES = {
+    "fig1a": fig1a_cdsgd_vs_sgd.run,
+    "fig1b": fig1b_cdmsgd_vs_fedavg.run,
+    "fig2a": fig2a_network_size.run,
+    "fig2b": fig2b_topology.run,
+    "fig4": fig4_datasets.run,
+    "fig5": fig5_step_size.run,
+    "table1": table1_rates.run,
+    "table1_methods": table1_methods.run,
+    "prop1": consensus_radius.run,
+    "noniid": noniid_ablation.run,
+    "kernels": kernel_microbench.run,
+    "roofline": lambda: roofline.run(mesh_filter=""),
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for n in names:
+        if n not in BENCHES:
+            raise SystemExit(f"unknown benchmark {n!r}; available: {sorted(BENCHES)}")
+        BENCHES[n]()
+    print(f"benchmarks/total,{1e6 * (time.time() - t0):.0f},count={len(names)}")
+
+
+if __name__ == "__main__":
+    main()

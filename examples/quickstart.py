@@ -1,0 +1,54 @@
+"""Quickstart: 5 agents collaboratively train a classifier with CDMSGD.
+
+This is the paper's base setting (5 agents, fully-connected topology,
+uniform agent-interaction matrix, mini-batches, fixed step) on the
+synthetic stand-in dataset.  Runs in ~30s on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_topology, make_optimizer
+from repro.core.trainer import CollaborativeTrainer, train_loop
+from repro.data import AgentPartitioner, make_classification
+from repro.nn.paper_models import (
+    classifier_loss,
+    mlp_classifier_apply,
+    mlp_classifier_template,
+)
+from repro.nn.param import init_params
+
+
+def main():
+    # 1. data, distributed across 5 agents (each sees only its shard)
+    train, val = make_classification(4096, n_classes=10, dim=64, seed=0)
+    part = AgentPartitioner(train, n_agents=5, seed=0)
+
+    # 2. the model (paper's MNIST-style deep MLP, narrowed for CPU)
+    params = init_params(mlp_classifier_template(64, 10, width=50, depth=6),
+                         jax.random.PRNGKey(0))
+
+    # 3. fixed topology + consensus optimizer (paper Algorithm 2)
+    topology = make_topology("fully_connected", 5)
+    optimizer = make_optimizer("cdmsgd", 0.05, mu=0.9)
+
+    loss = functools.partial(classifier_loss, mlp_classifier_apply)
+    trainer = CollaborativeTrainer(loss, params, topology, optimizer)
+
+    # 4. train: each step = local gradient + Pi-mixing with neighbors
+    train_loop(trainer, part.batches(64), n_steps=200, log_every=25, printer=print)
+
+    # 5. evaluate every agent's model + the consensus (mean) model
+    ev = trainer.evaluate({"x": jnp.asarray(val.x), "y": jnp.asarray(val.y)})
+    print(f"\nvalidation accuracy (mean over agents): {ev['acc_mean']:.4f}")
+    print(f"accuracy variance across agents:        {ev['acc_var']:.2e}")
+    print(f"final consensus error:                  "
+          f"{trainer.history.last('consensus_error'):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Batched serving demo: decode from a CDSGD-trained consensus model.
+
+Trains a tiny LM collaboratively, extracts the consensus (agent-mean)
+model, then serves batched greedy-decode requests with a KV cache — the
+serve path that the decode dry-run shapes lower on the production mesh.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-1b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_topology, make_optimizer
+from repro.core.trainer import CollaborativeTrainer
+from repro.data import make_lm_tokens, lm_agent_batches
+from repro.nn import (decode_step, init_cache, init_params, loss_fn,
+                      model_template)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--train-steps", type=int, default=30)
+    ap.add_argument("--lr", type=float, default=0.005)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(model_template(cfg), jax.random.PRNGKey(0))
+
+    # 1. collaborative training (4 agents, ring)
+    topo = make_topology("ring", 4)
+    trainer = CollaborativeTrainer(lambda p, b: loss_fn(cfg, p, b), params, topo,
+                                   make_optimizer("cdmsgd", args.lr, mu=0.9))
+    tokens = make_lm_tokens(1 << 14, vocab=cfg.vocab_size, seed=0)
+    batches = lm_agent_batches(tokens, 4, 4, 32, seed=0)
+    for i in range(args.train_steps):
+        m = trainer.step(next(batches))
+    print(f"[serve] trained {args.train_steps} steps, loss={m['loss']:.3f}")
+
+    # 2. consensus model -> batched KV-cache decoding
+    serve_params = trainer.mean_params()
+    max_len = args.prompt_len + args.new_tokens
+    cache = init_cache(cfg, args.batch, max_len)
+    step = jax.jit(lambda p, c, t, i: decode_step(cfg, p, c, t, i))
+
+    prompts = np.stack([tokens[i * 100 : i * 100 + args.prompt_len]
+                        for i in range(args.batch)])
+    tok = jnp.asarray(prompts[:, :1], jnp.int32)
+    seqs = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(max_len - 1):
+        logits, cache = step(serve_params, cache, tok, jnp.int32(i))
+        if i + 1 < args.prompt_len:
+            tok = jnp.asarray(prompts[:, i + 1 : i + 2], jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        seqs.append(np.asarray(tok))
+    dt = time.time() - t0
+    out = np.concatenate(seqs, axis=1)
+    print(f"[serve] {args.batch} requests x {max_len} tokens in {dt:.2f}s "
+          f"({args.batch * max_len / dt:.1f} tok/s, CPU interpret scale)")
+    for b in range(min(args.batch, 2)):
+        print(f"[serve] req{b}: prompt={out[b, :args.prompt_len].tolist()} "
+              f"-> {out[b, args.prompt_len:].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

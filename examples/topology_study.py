@@ -1,0 +1,68 @@
+"""Topology study (paper Fig. 2): network size + sparsity trade-offs.
+
+Sweeps agent counts and graph topologies, printing convergence speed,
+final accuracy, spectral gap, and consensus stability — the paper's
+"interesting relation between convergence and topology of the graph".
+
+    PYTHONPATH=src python examples/topology_study.py
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_topology, make_optimizer
+from repro.core.trainer import CollaborativeTrainer, train_loop
+from repro.data import AgentPartitioner, make_classification
+from repro.nn.paper_models import (
+    classifier_loss,
+    mlp_classifier_apply,
+    mlp_classifier_template,
+)
+from repro.nn.param import init_params
+
+LOSS = functools.partial(classifier_loss, mlp_classifier_apply)
+
+
+def run_one(topology_name, n_agents, steps=120):
+    train, val = make_classification(4096, n_classes=10, dim=64, seed=0)
+    part = AgentPartitioner(train, n_agents, seed=0)
+    params = init_params(mlp_classifier_template(64, 10, width=50, depth=6),
+                         jax.random.PRNGKey(0))
+    topo = make_topology(topology_name, n_agents)
+    tr = CollaborativeTrainer(LOSS, params, topo, make_optimizer("cdmsgd", 0.05, mu=0.9))
+    train_loop(tr, part.batches(64), steps)
+    ev = tr.evaluate({"x": jnp.asarray(val.x), "y": jnp.asarray(val.y)})
+    half_acc = tr.history.series("acc")[steps // 2 - 1]
+    return {
+        "lambda2": topo.lambda2,
+        "gap": topo.spectral_gap,
+        "half_acc": half_acc,
+        "val_acc": ev["acc_mean"],
+        "acc_var": ev["acc_var"],
+        "consensus": tr.history.last("consensus_error"),
+        "degree": topo.degree(),
+    }
+
+
+def main():
+    print("== network size (fully connected, paper Fig 2a) ==")
+    print(f"{'N':>4} {'mid-train acc':>14} {'final val':>10} {'consensus':>11}")
+    for n in (2, 4, 8, 16):
+        r = run_one("fully_connected", n)
+        print(f"{n:>4} {r['half_acc']:>14.4f} {r['val_acc']:>10.4f} {r['consensus']:>11.3e}")
+
+    print("\n== topology sparsity at N=8 (paper Fig 2b) ==")
+    print(f"{'topology':>16} {'deg':>4} {'lambda2':>8} {'val acc':>8} "
+          f"{'acc var':>10} {'consensus':>11}")
+    for name in ("fully_connected", "torus", "ring", "chain"):
+        r = run_one(name, 8)
+        print(f"{name:>16} {r['degree']:>4} {r['lambda2']:>8.3f} {r['val_acc']:>8.4f} "
+              f"{r['acc_var']:>10.2e} {r['consensus']:>11.3e}")
+    print("\npaper's claim: sparser graph (higher lambda2) -> faster average "
+          "convergence,\nbut less stable consensus (higher accuracy variance).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: consensus-based distributed deep learning (CDSGD, NIPS 2017) in JAX.
+
+A production-grade reproduction of "Collaborative Deep Learning in Fixed
+Topology Networks" (Jiang, Balu, Hegde, Sarkar) with a multi-architecture
+model zoo, multi-pod sharded training, and Pallas TPU kernels.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Compiled-artifact analysis: trip-count-aware HLO stats + roofline terms."""
+
+from repro.analysis.hlo import analyze_hlo, HloStats
+from repro.analysis.roofline import RooflineTerms, roofline_from_stats, HW_V5E
+
+__all__ = ["analyze_hlo", "HloStats", "RooflineTerms", "roofline_from_stats", "HW_V5E"]

@@ -1,0 +1,354 @@
+"""Trip-count-aware HLO analysis for the roofline report.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once** (a
+10-iteration scan under-reports FLOPs by exactly 10x — verified), and no
+API exposes collective traffic.  Since every model here scans over layers,
+naive numbers would be off by 24-61x.  This module parses
+``compiled.as_text()`` (post-optimization, post-SPMD HLO, shapes are the
+per-device shards) and:
+
+* reconstructs the computation call graph (entry -> while bodies / calls /
+  conditionals), reading each while loop's **trip count** from its
+  ``backend_config known_trip_count`` (fallback: the comparison constant in
+  the condition computation);
+* resolves operand shapes through a per-computation symbol table (HLO
+  instruction lines reference operands by name only);
+* sums **collective bytes** (all-reduce, all-gather, reduce-scatter,
+  all-to-all, collective-permute) as operand bytes x enclosing trip counts;
+* estimates **trip-aware FLOPs** from ``dot``/``convolution`` instructions
+  (recursing into fusion computations), cross-checked against the analytic
+  ``6 * N_active * D``;
+* estimates **HBM traffic** as operand+output bytes of top-level (post-
+  fusion) instructions x trip counts — a traffic proxy that excludes
+  fusion-internal temporaries.
+
+Documented limits (EXPERIMENTS.md §Methodology): elementwise/transcendental
+FLOPs excluded; traffic counts tuple-shuffling ops like get-tuple-element
+as zero-cost only when they produce tuples (bitcast/copy are counted — XLA
+CPU materializes copies, TPU mostly doesn't, so the memory term is an upper
+bound).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose operand/output bytes we do not count as HBM traffic
+_FREE_OPS = {"get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+             "partition-id", "replica-id", "after-all", "iota"}
+
+
+def _dtype_bytes(dt: str) -> int:
+    return _DTYPE_BYTES.get(dt, 0)
+
+
+def _shape_list_bytes(text: str) -> int:
+    """Total bytes of every array shape literal appearing in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    line: str
+    out_shape_text: str
+    out_bytes: int
+    operand_names: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    by_name: Dict[str, Instruction]
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\)\s*([a-z][a-z0-9\-]*)\(|^([a-z][a-z0-9\-]*)\(")
+
+
+def _split_rhs(rhs: str) -> Tuple[str, str, List[str]]:
+    """rhs -> (out_shape_text, opcode, operand names)."""
+    # output shape: everything before the opcode token
+    m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+    # the first `word(` after the shape part is the opcode; shapes never
+    # precede '(' directly, but tuple shapes start with '(' at pos 0.
+    opcode, args_start = "", -1
+    depth = 0
+    i = 0
+    # skip a leading tuple shape "(...)"
+    if rhs.startswith("("):
+        depth = 0
+        for j, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    i = j + 1
+                    break
+    m = re.compile(r"\s*([a-z][a-z0-9\-]*)\(").search(rhs, i)
+    if not m:
+        return rhs, "", []
+    opcode = m.group(1)
+    out_shape_text = rhs[: m.start()]
+    # operands: %name tokens inside the top-level parens after opcode
+    depth = 0
+    args = ""
+    for j in range(m.end() - 1, len(rhs)):
+        ch = rhs[j]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args = rhs[m.end() : j]
+                break
+    operands = re.findall(r"%([\w\.\-]+)", args)
+    return out_shape_text, opcode, operands
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _HEADER_RE.match(s)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # strip metadata / backend_config tails for shape parsing of output
+        out_shape_text, opcode, operands = _split_rhs(rhs)
+        ins = Instruction(
+            name=name,
+            opcode=opcode,
+            line=s,
+            out_shape_text=out_shape_text if out_shape_text else rhs,
+            out_bytes=_shape_list_bytes(out_shape_text if out_shape_text else rhs.split(" ", 1)[0]),
+            operand_names=operands,
+        )
+        cur.instructions.append(ins)
+        cur.by_name[name] = ins
+    return comps, entry
+
+
+def _known_trip_count(line: str) -> Optional[int]:
+    m = re.search(r'known_trip_count.....n.:.(\d+)', line)
+    return int(m.group(1)) if m else None
+
+
+def _cond_trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instructions:
+        for m in re.finditer(r"constant\((\d+)\)", ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _while_edges(comp: Computation) -> List[Tuple[str, str, Optional[int]]]:
+    out = []
+    for ins in comp.instructions:
+        if ins.opcode == "while":
+            c = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+            b = re.search(r"body=%?([\w\.\-]+)", ins.line)
+            if c and b:
+                out.append((c.group(1), b.group(1), _known_trip_count(ins.line)))
+    return out
+
+
+def _call_edges(comp: Computation) -> List[str]:
+    out = []
+    for ins in comp.instructions:
+        if ins.opcode == "fusion":
+            continue
+        m = re.search(r"to_apply=%?([\w\.\-]+)", ins.line)
+        if m and ins.opcode in ("call", "custom-call", "map"):
+            out.append(m.group(1))
+        m = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+        if m:
+            for name in m.group(1).split(","):
+                out.append(name.strip().lstrip("%"))
+        if ins.opcode == "conditional":
+            for m2 in re.finditer(r"(?:true_computation|false_computation)=%?([\w\.\-]+)", ins.line):
+                out.append(m2.group(1))
+    return out
+
+
+def _fusion_callees(comp: Computation) -> List[str]:
+    out = []
+    for ins in comp.instructions:
+        if ins.opcode == "fusion":
+            m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+            if m:
+                out.append(m.group(1))
+    return out
+
+
+def _operand_bytes(comp: Computation, ins: Instruction) -> int:
+    total = 0
+    for name in ins.operand_names:
+        src = comp.by_name.get(name)
+        if src is not None:
+            total += src.out_bytes
+    return total
+
+
+def _dot_flops(comp: Computation, ins: Instruction) -> int:
+    if ins.opcode not in ("dot", "convolution"):
+        return 0
+    shapes = _SHAPE_RE.findall(ins.out_shape_text)
+    if not shapes:
+        return 0
+    out_elems = _shape_elems(shapes[0][1])
+    if ins.opcode == "convolution":
+        # 2 * out_elems * (kernel spatial x input channels): parse rhs kernel
+        if len(ins.operand_names) >= 2:
+            k = comp.by_name.get(ins.operand_names[1])
+            if k:
+                ks = _SHAPE_RE.findall(k.out_shape_text)
+                if ks:
+                    kel = _shape_elems(ks[0][1])
+                    # kernel elems includes output channels; divide them out
+                    out_ch = int(ks[0][1].split(",")[-1]) if ks[0][1] else 1
+                    return 2 * out_elems * max(kel // max(out_ch, 1), 1)
+        return 0
+    lhs = comp.by_name.get(ins.operand_names[0]) if ins.operand_names else None
+    if lhs is None:
+        return 0
+    lshapes = _SHAPE_RE.findall(lhs.out_shape_text)
+    if not lshapes:
+        return 0
+    lhs_dims = lshapes[0][1].split(",") if lshapes[0][1] else []
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            if int(d) < len(lhs_dims):
+                contract *= int(lhs_dims[int(d)])
+    return 2 * out_elems * contract
+
+
+@dataclasses.dataclass
+class HloStats:
+    """Trip-aware totals over the compiled module (per-device shapes)."""
+
+    collective_bytes: Dict[str, int]
+    dot_flops: int
+    traffic_bytes: int
+    collective_count: Dict[str, int]
+    trip_counts: Dict[str, int]
+
+    @property
+    def total_collective_bytes(self) -> int:
+        return sum(self.collective_bytes.values())
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps, entry = _parse_computations(hlo)
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k].instructions)) if comps else ""
+
+    # computation -> multiplier (sum over call paths of enclosing trip counts)
+    mult: Dict[str, int] = {}
+    trip_counts: Dict[str, int] = {}
+
+    def visit(name: str, m: int, depth: int = 0):
+        if name not in comps or depth > 64:
+            return
+        mult[name] = mult.get(name, 0) + m
+        comp = comps[name]
+        for cond, body, tc in _while_edges(comp):
+            if tc is None:
+                tc = _cond_trip_count(comps[cond]) if cond in comps else 1
+            trip_counts[body] = tc
+            visit(cond, m, depth + 1)
+            visit(body, m * tc, depth + 1)
+        for callee in _call_edges(comp):
+            visit(callee, m, depth + 1)
+
+    visit(entry, 1)
+
+    coll_bytes = {c: 0 for c in _COLLECTIVES}
+    coll_count = {c: 0 for c in _COLLECTIVES}
+    flops = 0
+    traffic = 0
+
+    fusion_flops_cache: Dict[str, int] = {}
+
+    def fusion_flops(name: str, depth: int = 0) -> int:
+        if name in fusion_flops_cache:
+            return fusion_flops_cache[name]
+        if name not in comps or depth > 64:
+            return 0
+        total = 0
+        comp = comps[name]
+        for ins in comp.instructions:
+            total += _dot_flops(comp, ins)
+        for callee in _fusion_callees(comp):
+            total += fusion_flops(callee, depth + 1)
+        fusion_flops_cache[name] = total
+        return total
+
+    for name, comp in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for ins in comp.instructions:
+            for c in _COLLECTIVES:
+                if ins.opcode == c or ins.opcode.startswith(c + "-"):
+                    b = _operand_bytes(comp, ins)
+                    coll_bytes[c] += m * b
+                    coll_count[c] += m
+            flops += m * _dot_flops(comp, ins)
+            if ins.opcode == "fusion":
+                mfus = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if mfus:
+                    flops += m * fusion_flops(mfus.group(1))
+            if ins.opcode not in _FREE_OPS:
+                traffic += m * (ins.out_bytes + _operand_bytes(comp, ins))
+
+    return HloStats(collective_bytes=coll_bytes, dot_flops=flops,
+                    traffic_bytes=traffic, collective_count=coll_count,
+                    trip_counts=trip_counts)

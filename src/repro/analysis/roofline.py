@@ -1,0 +1,127 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.  The FLOPs/bytes inputs come from the trip-aware
+HLO analysis (:mod:`repro.analysis.hlo`) because XLA's cost_analysis counts
+scan bodies once; both numbers are recorded side by side in EXPERIMENTS.md.
+
+All byte/FLOP totals parsed from post-SPMD HLO are *per-device* quantities
+(SPMD partitioning rewrites shapes to the local shard), so the terms below
+divide by bandwidth/throughput of ONE chip; `chips` enters only through the
+MODEL_FLOPS utilization ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.analysis.hlo import HloStats
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+    hbm_bytes: float           # capacity per chip
+
+
+HW_V5E = Hardware(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                  ici_bw=50e9, hbm_bytes=16e9)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # raw inputs
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_total: float             # 6*N_active*D analytic
+    xla_cost_flops: Optional[float] = None   # cost_analysis (loop bodies once)
+    peak_memory_bytes: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/redundancy waste check."""
+        denom = self.hlo_flops_per_device * self.chips
+        return self.model_flops_total / denom if denom else float("nan")
+
+    @property
+    def mfu_bound(self) -> float:
+        """Best-case MFU if the dominant term were fully overlapped."""
+        t = self.step_time_lower_bound
+        if t <= 0:
+            return float("nan")
+        return self.model_flops_total / (self.chips * 197e12 * t)
+
+    def as_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "xla_cost_flops": self.xla_cost_flops,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "step_time_lower_bound_s": self.step_time_lower_bound,
+        }
+
+
+def roofline_from_stats(
+    *, arch: str, shape: str, mesh: str, chips: int, stats: HloStats,
+    model_flops_total: float, hw: Hardware = HW_V5E,
+    xla_cost_flops: Optional[float] = None,
+    peak_memory_bytes: Optional[float] = None,
+) -> RooflineTerms:
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        compute_s=stats.dot_flops / hw.peak_flops,
+        memory_s=stats.traffic_bytes / hw.hbm_bw,
+        collective_s=stats.total_collective_bytes / hw.ici_bw,
+        hlo_flops_per_device=float(stats.dot_flops),
+        hlo_bytes_per_device=float(stats.traffic_bytes),
+        collective_bytes_per_device=float(stats.total_collective_bytes),
+        model_flops_total=model_flops_total,
+        xla_cost_flops=xla_cost_flops,
+        peak_memory_bytes=peak_memory_bytes,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D_new for
+    decode (one token per request), 2*N_active*D for prefill."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    # decode: one new token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,5 @@
+"""Checkpointing: pytree <-> .npz with path-keyed entries."""
+
+from repro.checkpoint.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,86 @@
+"""Checkpointing: pytrees saved as .npz keyed by flattened tree paths.
+
+Per-agent training state (stacked params, optimizer momenta, step counter)
+round-trips exactly; restore validates structure against a reference
+template so a config change can't silently load mismatched weights.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "::"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
+def _to_numpy_native(arr: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bfloat16 etc.) — reinterpret as raw bytes."""
+    if arr.dtype.kind in "biufc":
+        return arr
+    return arr.view(np.uint8)
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
+    """Writes ``<dir>/ckpt_<step>.npz``; returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    flat = jax.tree.flatten_with_path(tree)[0]
+    arrays = {_path_str(path): _to_numpy_native(np.asarray(leaf)) for path, leaf in flat}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for f in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like: PyTree, step: Optional[int] = None) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat, treedef = jax.tree.flatten_with_path(like)
+        leaves = []
+        for p, ref in flat:
+            k = _path_str(p)
+            if k not in data:
+                raise KeyError(f"checkpoint {path} missing key {k!r}")
+            arr = data[k]
+            ref_np = np.asarray(ref)
+            if ref_np.dtype.kind not in "biufc" and arr.dtype == np.uint8:
+                arr = arr.view(ref_np.dtype)   # raw-byte round-trip (bfloat16 etc.)
+            if tuple(arr.shape) != tuple(ref_np.shape):
+                raise ValueError(f"{k}: checkpoint shape {arr.shape} != expected {ref_np.shape}")
+            leaves.append(arr.astype(ref_np.dtype))
+    return jax.tree.unflatten(treedef, [l for _, l in zip(flat, leaves)])

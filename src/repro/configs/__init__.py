@@ -1,0 +1,61 @@
+"""Config registry: ``get_config("<arch-id>")`` / ``--arch <id>`` on CLIs.
+
+Ten assigned architectures (public-literature pool) + the paper's own
+experiment models (CIFAR CNN, MNIST MLP — see repro.nn.paper_models).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES, RunConfig
+
+from repro.configs.deepseek_v2_236b import CONFIG as _deepseek_v2
+from repro.configs.kimi_k2_1t_a32b import CONFIG as _kimi_k2
+from repro.configs.rwkv6_1_6b import CONFIG as _rwkv6
+from repro.configs.granite_3_8b import CONFIG as _granite
+from repro.configs.starcoder2_7b import CONFIG as _starcoder2
+from repro.configs.gemma3_1b import CONFIG as _gemma3
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.h2o_danube_3_4b import CONFIG as _danube
+from repro.configs.seamless_m4t_medium import CONFIG as _seamless
+from repro.configs.internvl2_2b import CONFIG as _internvl2
+
+ARCH_CONFIGS: Dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        _deepseek_v2,
+        _kimi_k2,
+        _rwkv6,
+        _granite,
+        _starcoder2,
+        _gemma3,
+        _hymba,
+        _danube,
+        _seamless,
+        _internvl2,
+    ]
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return get_config(name[: -len("-reduced")]).reduced()
+    if name not in ARCH_CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCH_CONFIGS)}")
+    return ARCH_CONFIGS[name]
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCH_CONFIGS)
+
+
+__all__ = [
+    "ArchConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "RunConfig",
+    "ARCH_CONFIGS",
+    "get_config",
+    "list_archs",
+]

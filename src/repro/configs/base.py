@@ -1,0 +1,196 @@
+"""Architecture + run configuration schema.
+
+One :class:`ArchConfig` describes any of the supported families (dense /
+moe / ssm / hybrid / audio / vlm); :func:`ArchConfig.reduced` derives the
+CPU-smoke-test variant (2 layers, d_model <= 512, <= 4 experts) required
+for every assigned architecture.  :class:`RunConfig` bundles the
+CDSGD-specific knobs (agents, topology, optimizer, schedule).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+
+    # attention flavour
+    attn_kind: str = "full"          # full | swa | local_global | mla | none
+    window: int = 0                  # swa / local layers
+    local_global_period: int = 0     # every k-th layer is global (gemma3: 6)
+
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_dense_layers: int = 0          # leading dense-FFN layers (deepseek/kimi: 1)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # SSM / hybrid
+    ssm_kind: str = "none"           # rwkv6 | mamba | none
+    ssm_state: int = 0
+    hybrid: bool = False             # parallel attention + mamba heads (hymba)
+
+    # encoder-decoder (seamless)
+    is_encoder_decoder: bool = False
+    enc_layers: int = 0
+
+    # modality frontends (stubs per spec carve-out)
+    modality: str = "text"           # text | audio | vlm
+    frontend_tokens: int = 0         # patches / audio frames fed by the stub
+    frontend_dim: int = 0            # embedding dim produced by the stub
+
+    # misc
+    rope_theta: float = 1e4
+    norm_kind: str = "rmsnorm"       # rmsnorm | layernorm
+    act: str = "silu"
+    mlp_gated: bool = True
+    tie_embeddings: bool = False
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    attn_chunk: int = 512            # blockwise-attention KV chunk
+    source: str = ""                 # citation from the assignment table
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic per-token decode (long_500k eligibility)."""
+        return self.ssm_kind != "none" or self.attn_kind in ("swa", "local_global") or self.hybrid
+
+    @property
+    def has_decode(self) -> bool:
+        return True  # no encoder-only archs in this assignment
+
+    def layer_is_global(self, i: int) -> bool:
+        """local_global interleave: every `period`-th layer attends globally."""
+        if self.attn_kind != "local_global":
+            return True
+        p = self.local_global_period
+        return (i % p) == (p - 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (validated against the template)."""
+        from repro.nn.transformer import model_template
+        from repro.nn.param import count_params
+        return count_params(model_template(self))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        total = self.param_count()
+        per_expert = self.d_ff_expert * self.d_model * (3 if self.mlp_gated else 2)
+        n_moe_layers = self.n_layers - self.n_dense_layers
+        inactive = n_moe_layers * per_expert * (self.n_experts - self.top_k)
+        return total - inactive
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: 2 layers, d_model <= 512, <= 4 experts."""
+        d = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        head_dim = 64 if self.attn_kind != "mla" else None
+        n_kv = min(self.n_kv_heads, n_heads)
+        while n_heads % n_kv:
+            n_kv -= 1
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=2,
+            enc_layers=2 if self.is_encoder_decoder else 0,
+            d_model=d,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4) if self.is_moe else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            top_k=min(self.top_k, 2) if self.is_moe else 0,
+            d_ff_expert=min(self.d_ff_expert, 128) if self.is_moe else 0,
+            n_dense_layers=min(self.n_dense_layers, 1),
+            kv_lora_rank=min(self.kv_lora_rank, 32),
+            q_lora_rank=min(self.q_lora_rank, 32),
+            qk_nope_head_dim=min(self.qk_nope_head_dim, 32),
+            qk_rope_head_dim=min(self.qk_rope_head_dim, 16),
+            v_head_dim=min(self.v_head_dim, 32),
+            window=min(self.window, 8) if self.window else 0,
+            local_global_period=min(self.local_global_period, 2) if self.local_global_period else 0,
+            frontend_tokens=min(self.frontend_tokens, 8),
+            frontend_dim=min(self.frontend_dim, 64) if self.frontend_dim else 0,
+            attn_chunk=16,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned global input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """CDSGD run settings (shared across architectures)."""
+
+    n_agents: int = 5                    # paper default
+    topology: str = "fully_connected"    # paper default
+    lazy_beta: Optional[float] = None
+    optimizer: str = "cdsgd"
+    step_size: float = 0.01              # paper default
+    momentum: float = 0.9
+    schedule: str = "fixed"              # fixed | diminishing
+    diminishing_eps: float = 1.0
+    diminishing_t: float = 1.0
+    fedavg_local_steps: int = 1          # E (paper comparison uses E=1)
+    batch_size: int = 128                # per paper (mini-batch 128)
+    seed: int = 0
+    non_iid: bool = False                # label-skew partition

@@ -1,0 +1,30 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads, ssm_state=16.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001 [arXiv:2411.13676].
+Attention heads use a sliding window (Hymba mixes SWA + a few global
+layers; we use SWA uniformly — noted in DESIGN.md); the Mamba path is
+global with O(1) state, which is what keeps long-context decode cheap.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    attn_kind="swa",
+    window=1024,
+    hybrid=True,
+    ssm_kind="mamba",
+    ssm_state=16,
+    rope_theta=1e4,
+    act="silu",
+    param_dtype="bfloat16",
+    source="arXiv:2411.13676",
+)

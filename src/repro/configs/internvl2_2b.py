@@ -1,0 +1,28 @@
+"""internvl2-2b [vlm] — InternViT + InternLM2 backbone.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553 [arXiv:2404.16821].
+The InternViT vision encoder + MLP projector frontend is a STUB per the
+assignment carve-out: ``input_specs()`` provides 256 patch embeddings of
+dim 1024 which the trainable projector maps into the LM.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    attn_kind="full",
+    modality="vlm",
+    frontend_tokens=256,         # ViT patches per image
+    frontend_dim=1024,
+    rope_theta=1e6,
+    act="silu",
+    param_dtype="bfloat16",
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,55 @@
+"""Core of the reproduction: consensus-based distributed SGD (CDSGD).
+
+The paper's contribution — decentralized data-parallel SGD over a fixed
+communication topology — lives here, independent of any model family:
+
+* :mod:`repro.core.topology` — graphs, agent-interaction matrices ``Pi``
+  (Assumption 2), spectral quantities.
+* :mod:`repro.core.consensus` — the mixing operator ``w = Pi x`` in
+  stacked-simulation and sharded (ppermute / all_gather) forms.
+* :mod:`repro.core.optim` — CDSGD / CDMSGD (Polyak, Nesterov) / CDAdam and
+  the baselines (centralized SGD/MSGD, FedAvg).
+* :mod:`repro.core.schedules` — fixed and diminishing step sizes.
+* :mod:`repro.core.lyapunov` — the paper's Lyapunov analysis as code
+  (eq. 7-9, Proposition 1, Theorem 1 constants).
+"""
+
+from repro.core.topology import Topology, make_topology
+from repro.core.consensus import FactoredMix
+from repro.core.optim import (
+    CDSGD,
+    CDMSGD,
+    CDMSGDNesterov,
+    CDAdam,
+    CentralizedSGD,
+    CentralizedMSGD,
+    FedAvg,
+    CommOps,
+    make_optimizer,
+    stacked_comm_ops,
+    sharded_comm_ops,
+    factored_comm_ops,
+    identity_comm_ops,
+)
+from repro.core import schedules, lyapunov
+
+__all__ = [
+    "Topology",
+    "make_topology",
+    "FactoredMix",
+    "CDSGD",
+    "CDMSGD",
+    "CDMSGDNesterov",
+    "CDAdam",
+    "CentralizedSGD",
+    "CentralizedMSGD",
+    "FedAvg",
+    "CommOps",
+    "make_optimizer",
+    "stacked_comm_ops",
+    "sharded_comm_ops",
+    "factored_comm_ops",
+    "identity_comm_ops",
+    "schedules",
+    "lyapunov",
+]

@@ -1,0 +1,121 @@
+"""Lyapunov-function machinery from the paper's analysis (§3.2, §4).
+
+The paper rewrites CDSGD as plain SGD on the Lyapunov function
+
+    V(x, a) = (N/n) 1^T F(x) + (1/2a) ||x||^2_{I-Pi}          (eq. 9)
+
+with the *Stochastic Lyapunov Gradient*
+
+    grad J(x) = g(x) + a^{-1} (I - Pi) x                       (eq. 7)
+
+so that ``x_{k+1} = x_k - a grad J(x_k)`` (eq. 8).  This module implements
+V, grad J, the derived constants (gamma_hat, H_hat), and the closed-form
+bounds of Proposition 1 / Theorem 1 so tests and benchmarks can check the
+*numbers*, not just the trends.
+
+All functions here operate on agent-stacked arrays ``x`` of shape (N, d)
+(simulation mode) — the theory is stated in exactly that space.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+def quadratic_norm(x: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """||x||^2_M = <x, M x> with x (N, d), M (N, N)."""
+    xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
+    return jnp.sum(xf * (m.astype(jnp.float32) @ xf))
+
+
+def lyapunov_value(sum_f: jnp.ndarray, x: jnp.ndarray, pi: jnp.ndarray, alpha) -> jnp.ndarray:
+    """V(x, a) given the already-evaluated objective term (N/n) 1^T F(x)."""
+    n_agents = x.shape[0]
+    i_minus_pi = jnp.eye(n_agents, dtype=jnp.float32) - pi.astype(jnp.float32)
+    return sum_f + quadratic_norm(x, i_minus_pi) / (2.0 * alpha)
+
+
+def stochastic_lyapunov_gradient(g: jnp.ndarray, x: jnp.ndarray, pi: jnp.ndarray, alpha) -> jnp.ndarray:
+    """grad J(x) = g(x) + a^{-1} (I - Pi) x  (eq. 7)."""
+    n_agents = x.shape[0]
+    xf = x.astype(jnp.float32).reshape(n_agents, -1)
+    i_minus_pi = jnp.eye(n_agents, dtype=jnp.float32) - pi.astype(jnp.float32)
+    corr = (i_minus_pi @ xf).reshape(x.shape) / alpha
+    return g + corr.astype(g.dtype)
+
+
+def cdsgd_step_via_lyapunov(x: jnp.ndarray, g: jnp.ndarray, pi: jnp.ndarray, alpha) -> jnp.ndarray:
+    """x - a grad J(x): must equal ``Pi x - a g`` exactly (eq. 7 == eq. 5).
+
+    Used by tests to verify the paper's central algebraic identity.
+    """
+    return x - alpha * stochastic_lyapunov_gradient(g, x, pi, alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class TheoryConstants:
+    """Constants of Theorems 1-2 for a given problem + topology + step."""
+
+    gamma_m: float   # max_j smoothness of f_j
+    h_m: float       # min_j strong-convexity of f_j
+    alpha: float
+    lambda2: float
+    lambdan: float
+    zeta1: float = 1.0   # Assumption 3(a) lower bound (exact gradients: 1)
+    q: float = 0.0       # gradient-noise second moment (Assumption 3b)
+    qm: float = 1.0      # Q_V + zeta2^2
+
+    @property
+    def gamma_hat(self) -> float:
+        """gamma_m + a^{-1} (1 - lambda_N(Pi)) — smoothness of V."""
+        return self.gamma_m + (1.0 - self.lambdan) / self.alpha
+
+    @property
+    def h_hat(self) -> float:
+        """H_m + (2a)^{-1} (1 - lambda_2(Pi)) — strong convexity of V."""
+        return self.h_m + (1.0 - self.lambda2) / (2.0 * self.alpha)
+
+    @property
+    def contraction(self) -> float:
+        """Theorem 1 per-step factor ``1 - a H_hat zeta1``."""
+        return 1.0 - self.alpha * self.h_hat * self.zeta1
+
+    @property
+    def noise_radius(self) -> float:
+        """Theorem 1 asymptotic radius ``a gamma_hat Q / (2 H_hat zeta1)``."""
+        if self.q == 0.0:
+            return 0.0
+        return self.alpha * self.gamma_hat * self.q / (2.0 * self.h_hat * self.zeta1)
+
+    @property
+    def max_step_size(self) -> float:
+        """Sufficient condition (eq. 15 expanded)."""
+        return (self.zeta1 - (1.0 - self.lambdan) * self.qm) / (self.gamma_m * self.qm)
+
+
+def consensus_bound(alpha: float, grad_norm_bound: float, topology: Topology) -> float:
+    """Proposition 1 RHS: ``a L / (1 - lambda_2(Pi))``."""
+    gap = 1.0 - topology.lambda2
+    if gap <= 0:
+        return float("inf")
+    return alpha * grad_norm_bound / gap
+
+
+def theorem1_envelope(v1_minus_vstar: float, const: TheoryConstants, steps: int) -> np.ndarray:
+    """The full Theorem-1 upper envelope E[V(x_k) - V*] for k = 1..steps."""
+    rho = const.contraction
+    noise = const.alpha**2 * const.gamma_hat * const.q / 2.0
+    out = np.empty(steps)
+    acc = v1_minus_vstar
+    out[0] = acc
+    for k in range(1, steps):
+        acc = rho * acc + noise
+        out[k] = acc
+    return out

@@ -1,0 +1,347 @@
+"""Distributed optimizers: CDSGD, CDMSGD (Polyak & Nesterov) + baselines.
+
+Every optimizer operates on an opaque parameter pytree and a ``CommOps``
+bundle describing the collective operations available on the agent axis:
+
+* ``comm.mix``  — ``w = Pi x`` over the fixed topology (paper eq. 5),
+* ``comm.mean`` — exact global average (parameter-server emulation, used
+  by FedAvg / centralized baselines),
+* ``comm.lambda2 / lambdan`` — spectral constants for theory utilities.
+
+The same optimizer code runs in both execution modes:
+
+* **stacked simulation** — leaves carry a leading agent axis; ``comm`` is
+  built by :func:`stacked_comm_ops` (dense ``Pi`` matmul);
+* **sharded production** — inside ``shard_map``; ``comm`` is built from
+  :func:`repro.core.consensus.make_sharded_mix_fn` (ppermute collectives).
+
+Update rules (paper Algorithm 1-3):
+
+    CDSGD:            x_{k+1} = Pi x_k - a_k g(x_k)
+    CDMSGD (Polyak):  w = Pi x_k ; v_{k+1} = mu v_k - a_k g(x_k)
+                      x_{k+1} = w + v_{k+1}
+    CDMSGD (Nesterov): same, but g evaluated at x_k + mu v_k
+    FedAvg:           E local SGD(+momentum) steps, then x <- mean(x)
+    Centralized SGD:  g <- mean(g) every step; x_{k+1} = x_k - a_k g
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consensus
+from repro.core.schedules import Schedule, fixed
+from repro.utils.tree import tree_axpy, tree_zeros_like
+
+PyTree = Any
+MixFn = Callable[[PyTree], PyTree]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommOps:
+    """Collective operations over the agent population."""
+
+    mix: MixFn            # w = Pi x  (fixed topology)
+    mean: MixFn           # exact global average
+    n_agents: int
+    lambda2: float = 0.0
+    lambdan: float = 1.0
+
+
+def identity_comm_ops() -> CommOps:
+    """Single-agent degenerate comm (centralized training)."""
+    ident = lambda t: t
+    return CommOps(mix=ident, mean=ident, n_agents=1, lambda2=0.0, lambdan=1.0)
+
+
+def stacked_comm_ops(topology) -> CommOps:
+    """CommOps for agent-stacked pytrees (leading axis = agent)."""
+    pi = jnp.asarray(topology.pi, dtype=jnp.float32)
+
+    def mix(tree):
+        return consensus.mix_pytree_stacked(pi, tree)
+
+    def mean(tree):
+        return jax.tree.map(lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape), tree)
+
+    return CommOps(mix=mix, mean=mean, n_agents=topology.n_agents,
+                   lambda2=topology.lambda2, lambdan=topology.lambdan)
+
+
+def sharded_comm_ops(topology, axis_name: str) -> CommOps:
+    """CommOps for use inside shard_map over ``axis_name``."""
+    mix = consensus.make_sharded_mix_fn(topology, axis_name)
+    mean = consensus.make_sharded_mean_fn(axis_name)
+    return CommOps(mix=mix, mean=mean, n_agents=topology.n_agents,
+                   lambda2=topology.lambda2, lambdan=topology.lambdan)
+
+
+def factored_comm_ops(factored: consensus.FactoredMix, axis_names) -> CommOps:
+    mix = factored.make_mix_fn()
+    mean = consensus.make_sharded_mean_fn(tuple(axis_names))
+    return CommOps(mix=mix, mean=mean, n_agents=factored.n_agents,
+                   lambda2=factored.lambda2, lambdan=factored.lambdan)
+
+
+# --------------------------------------------------------------------------
+# Optimizer protocol
+# --------------------------------------------------------------------------
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray      # scalar int32
+    inner: Any             # optimizer-specific (momentum, adam moments, ...)
+
+
+class DistributedOptimizer:
+    """Base: subclasses implement `init_inner` and `apply`."""
+
+    def __init__(self, schedule: Schedule | float):
+        self.schedule: Schedule = fixed(schedule) if isinstance(schedule, (int, float)) else schedule
+
+    # -- public API --------------------------------------------------------
+    def init(self, params: PyTree) -> OptState:
+        return OptState(step=jnp.zeros((), jnp.int32), inner=self.init_inner(params))
+
+    def grad_params(self, params: PyTree, state: OptState) -> PyTree:
+        """Point at which the caller should evaluate the gradient."""
+        return params
+
+    def update(self, params: PyTree, grads: PyTree, state: OptState, comm: CommOps):
+        alpha = self.schedule(state.step)
+        new_params, new_inner = self.apply(params, grads, state.inner, alpha, comm, state.step)
+        return new_params, OptState(step=state.step + 1, inner=new_inner)
+
+    def state_specs(self, param_specs: PyTree) -> "OptState":
+        """PartitionSpec tree mirroring init() (for pjit in_shardings)."""
+        from jax.sharding import PartitionSpec
+        return OptState(step=PartitionSpec(), inner=self.inner_specs(param_specs))
+
+    def inner_specs(self, param_specs: PyTree) -> Any:
+        return ()
+
+    # -- to implement -------------------------------------------------------
+    def init_inner(self, params: PyTree) -> Any:
+        return ()
+
+    def apply(self, params, grads, inner, alpha, comm: CommOps, step):
+        raise NotImplementedError
+
+    @property
+    def uses_consensus(self) -> bool:
+        return True
+
+
+# --------------------------------------------------------------------------
+# The paper's algorithms
+# --------------------------------------------------------------------------
+
+
+class CDSGD(DistributedOptimizer):
+    """Algorithm 1: ``x_{k+1} = Pi x_k - alpha g(x_k)``."""
+
+    def apply(self, params, grads, inner, alpha, comm, step):
+        mixed = comm.mix(params)
+        new_params = jax.tree.map(lambda w, g: w - alpha * g.astype(w.dtype), mixed, grads)
+        return new_params, inner
+
+
+class CDMSGD(DistributedOptimizer):
+    """Algorithm 2 (Polyak momentum):
+    ``v' = mu v - alpha g(x); x' = Pi x + v'``."""
+
+    def __init__(self, schedule, mu: float = 0.9):
+        super().__init__(schedule)
+        self.mu = mu
+
+    def init_inner(self, params):
+        return tree_zeros_like(params)
+
+    def inner_specs(self, param_specs):
+        return param_specs
+
+    def apply(self, params, grads, v, alpha, comm, step):
+        mixed = comm.mix(params)
+        new_v = jax.tree.map(lambda vi, g: self.mu * vi - alpha * g.astype(vi.dtype), v, grads)
+        new_params = jax.tree.map(jnp.add, mixed, new_v)
+        return new_params, new_v
+
+
+class CDMSGDNesterov(CDMSGD):
+    """Algorithm 3: gradient evaluated at the lookahead point x + mu v."""
+
+    def grad_params(self, params, state):
+        return tree_axpy(self.mu, state.inner, params)
+
+
+class CDAdam(DistributedOptimizer):
+    """Beyond-paper extension: consensus mixing of parameters with local
+    Adam moments (``x' = Pi x - alpha * adam_dir(g)``).  Moments stay local
+    (they are statistics of the *local* data distribution); parameters mix.
+    """
+
+    def __init__(self, schedule, b1=0.9, b2=0.999, eps=1e-8):
+        super().__init__(schedule)
+        self.b1, self.b2, self.eps = b1, b2, eps
+
+    def init_inner(self, params):
+        return (tree_zeros_like(params), tree_zeros_like(params))
+
+    def inner_specs(self, param_specs):
+        return (param_specs, param_specs)
+
+    def apply(self, params, grads, inner, alpha, comm, step):
+        m, v = inner
+        t = (step + 1).astype(jnp.float32)
+        new_m = jax.tree.map(lambda mi, g: self.b1 * mi + (1 - self.b1) * g.astype(mi.dtype), m, grads)
+        new_v = jax.tree.map(lambda vi, g: self.b2 * vi + (1 - self.b2) * jnp.square(g.astype(vi.dtype)), v, grads)
+        bc1 = 1.0 - self.b1**t
+        bc2 = 1.0 - self.b2**t
+        mixed = comm.mix(params)
+        new_params = jax.tree.map(
+            lambda w, mi, vi: w - (alpha * (mi / bc1) / (jnp.sqrt(vi / bc2) + self.eps)).astype(w.dtype),
+            mixed, new_m, new_v)
+        return new_params, (new_m, new_v)
+
+
+# --------------------------------------------------------------------------
+# Baselines
+# --------------------------------------------------------------------------
+
+
+class CentralizedSGD(DistributedOptimizer):
+    """Data-parallel SGD: grads averaged across agents every step."""
+
+    def apply(self, params, grads, inner, alpha, comm, step):
+        g = comm.mean(grads)
+        return jax.tree.map(lambda x, gi: x - alpha * gi.astype(x.dtype), params, g), inner
+
+    @property
+    def uses_consensus(self):
+        return False
+
+
+class CentralizedMSGD(DistributedOptimizer):
+    """Data-parallel Polyak-momentum SGD (paper's 'MSGD')."""
+
+    def __init__(self, schedule, mu: float = 0.9):
+        super().__init__(schedule)
+        self.mu = mu
+
+    def init_inner(self, params):
+        return tree_zeros_like(params)
+
+    def inner_specs(self, param_specs):
+        return param_specs
+
+    def apply(self, params, grads, v, alpha, comm, step):
+        g = comm.mean(grads)
+        new_v = jax.tree.map(lambda vi, gi: self.mu * vi - alpha * gi.astype(vi.dtype), v, g)
+        return jax.tree.map(jnp.add, params, new_v), new_v
+
+    @property
+    def uses_consensus(self):
+        return False
+
+
+class FedAvg(DistributedOptimizer):
+    """Federated Averaging [McMahan et al. 2016] with C=1 (all clients).
+
+    Each agent takes local SGD(+momentum) steps; every ``local_steps`` steps
+    the parameters are replaced by their global average — a brute-force
+    consensus through a central parameter server (paper §5.1 discussion).
+    """
+
+    def __init__(self, schedule, local_steps: int = 1, mu: float = 0.0):
+        super().__init__(schedule)
+        self.local_steps = int(local_steps)
+        self.mu = mu
+
+    def init_inner(self, params):
+        return tree_zeros_like(params)
+
+    def inner_specs(self, param_specs):
+        return param_specs
+
+    def apply(self, params, grads, v, alpha, comm, step):
+        new_v = jax.tree.map(lambda vi, g: self.mu * vi - alpha * g.astype(vi.dtype), v, grads)
+        local = jax.tree.map(jnp.add, params, new_v)
+        do_avg = (step + 1) % self.local_steps == 0
+        avg = comm.mean(local)
+        new_params = jax.tree.map(lambda a, b: jnp.where(do_avg, a, b), avg, local)
+        return new_params, new_v
+
+    @property
+    def uses_consensus(self):
+        return False
+
+
+class GossipSGD(DistributedOptimizer):
+    """Gossip SGD baseline [Jin et al. 2016, paper Table 1 row 4].
+
+    Decentralized but *unconstrained* communication: each step every agent
+    averages with one uniformly random partner (mixing matrix
+    ``W_k = (I + P_k)/2`` for a random permutation ``P_k`` — doubly
+    stochastic, changes every step), then takes a local SGD step.  Contrast
+    with CDSGD where the communication graph is FIXED — the paper's whole
+    point is that random pairwise exchange is infeasible in mesh-constrained
+    deployments.  Stacked-simulation execution mode only.
+    """
+
+    def __init__(self, schedule, n_agents: int, seed: int = 0):
+        super().__init__(schedule)
+        self.n_agents = n_agents
+        self.seed = seed
+
+    def apply(self, params, grads, inner, alpha, comm, step):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        perm = jax.random.permutation(key, self.n_agents)
+
+        def mix_leaf(x):
+            return 0.5 * (x + x[perm])
+
+        mixed = jax.tree.map(mix_leaf, params)
+        return jax.tree.map(lambda w, g: w - alpha * g.astype(w.dtype), mixed, grads), inner
+
+
+class TimeVaryingCDSGD(DistributedOptimizer):
+    """CDSGD over a time-varying topology (paper future work §6.ii).
+
+    Cycles through a list of agent-interaction matrices ``Pi_k`` (one per
+    step, modulo the list length).  Consensus requires only that the
+    *union* graph is connected — e.g. alternating horizontal/vertical line
+    graphs on a grid — which the tests verify.  Stacked execution mode.
+    """
+
+    def __init__(self, schedule, topologies):
+        super().__init__(schedule)
+        import numpy as _np
+        self.pis = jnp.asarray(_np.stack([t.pi for t in topologies]), jnp.float32)
+
+    def apply(self, params, grads, inner, alpha, comm, step):
+        pi = self.pis[step % self.pis.shape[0]]
+        mixed = consensus.mix_pytree_stacked(pi, params)
+        return jax.tree.map(lambda w, g: w - alpha * g.astype(w.dtype), mixed, grads), inner
+
+
+def make_optimizer(name: str, schedule, **kw) -> DistributedOptimizer:
+    """Registry used by configs / CLI (`--optimizer cdsgd` etc.)."""
+    name = name.lower()
+    table = {
+        "cdsgd": CDSGD,
+        "cdmsgd": CDMSGD,
+        "cdmsgd_nesterov": CDMSGDNesterov,
+        "cdadam": CDAdam,
+        "sgd": CentralizedSGD,
+        "msgd": CentralizedMSGD,
+        "fedavg": FedAvg,
+        "gossip": GossipSGD,
+        "cdsgd_tv": TimeVaryingCDSGD,
+    }
+    if name not in table:
+        raise ValueError(f"unknown optimizer {name!r}; available: {sorted(table)}")
+    return table[name](schedule, **kw)

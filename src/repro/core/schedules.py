@@ -1,0 +1,65 @@
+"""Step-size schedules.
+
+The paper analyses two regimes: *fixed* step size (Theorems 1-2: linear
+convergence to a neighborhood) and *diminishing* step size satisfying
+``sum a_k = inf, sum a_k^2 < inf`` (Theorems 3-4: exact convergence).  The
+paper's concrete diminishing choice (Remark 4) is ``a_k = Theta/(k^eps + t)``
+with ``eps in (0.5, 1]``.  Warmup-cosine is provided for the modern LM
+configs (framework completeness; not part of the paper's analysis).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step (int array) -> alpha
+
+
+def fixed(alpha: float) -> Schedule:
+    def sched(step):
+        return jnp.full((), alpha, dtype=jnp.float32)
+
+    return sched
+
+
+def diminishing(theta: float = 1.0, eps: float = 1.0, t: float = 1.0) -> Schedule:
+    """``a_k = Theta / (k^eps + t)`` — paper Remark 4; requires eps in (0.5, 1]."""
+    if not (0.5 < eps <= 1.0):
+        raise ValueError("eps must lie in (0.5, 1] for Theorem 3/4 to apply")
+
+    def sched(step):
+        k = jnp.asarray(step, dtype=jnp.float32) + 1.0
+        return jnp.asarray(theta, jnp.float32) / (k**eps + t)
+
+    return sched
+
+
+def exponential_decay(alpha0: float, decay: float, every: int = 1) -> Schedule:
+    def sched(step):
+        k = jnp.asarray(step, dtype=jnp.float32)
+        return jnp.asarray(alpha0, jnp.float32) * decay ** (k / every)
+
+    return sched
+
+
+def warmup_cosine(alpha_peak: float, warmup: int, total: int, alpha_min: float = 0.0) -> Schedule:
+    def sched(step):
+        k = jnp.asarray(step, dtype=jnp.float32)
+        warm = alpha_peak * (k + 1.0) / max(warmup, 1)
+        prog = jnp.clip((k - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = alpha_min + 0.5 * (alpha_peak - alpha_min) * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(k < warmup, warm, cos).astype(jnp.float32)
+
+    return sched
+
+
+def paper_step_size_bound(zeta1: float, qm: float, gamma_m: float, lambda_n: float) -> float:
+    """Sufficient fixed-step bound (eq. 15 expanded):
+    ``0 < alpha <= (zeta1 - (1 - lambda_N(Pi)) Qm) / (gamma_m Qm)``.
+
+    Returns the upper bound; non-positive means the topology is too
+    ill-conditioned for the theory to admit a fixed step.
+    """
+    return (zeta1 - (1.0 - lambda_n) * qm) / (gamma_m * qm)

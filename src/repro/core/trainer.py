@@ -1,0 +1,155 @@
+"""Multi-agent collaborative trainer (stacked simulation execution mode).
+
+Simulates the paper's N-agent fixed-topology network on any backend:
+every parameter leaf carries a leading agent axis, per-agent gradients come
+from one ``vmap``'d value_and_grad, and the optimizer applies the CDSGD /
+CDMSGD / FedAvg / centralized update with stacked ``CommOps``.  This is the
+execution mode behind every paper-figure benchmark and the theory tests;
+the sharded production mode in :mod:`repro.launch.train` runs the *same*
+optimizer code under pjit + shard_map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.consensus import consensus_error_pytree
+from repro.core.optim import CommOps, DistributedOptimizer, stacked_comm_ops
+from repro.core.topology import Topology
+from repro.utils.metrics import MetricHistory
+
+PyTree = Any
+LossFn = Callable[[PyTree, Dict[str, jnp.ndarray]], Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
+
+
+def broadcast_to_agents(params: PyTree, n_agents: int) -> PyTree:
+    """Replicate a single parameter set to all agents (common init)."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_agents,) + x.shape).copy(), params)
+
+
+def perturb_per_agent(params: PyTree, key, scale: float = 0.01) -> PyTree:
+    """Optionally de-synchronize agent initializations."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    out = [x + scale * jax.random.normal(k, x.shape, x.dtype) for x, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree            # stacked (A, ...)
+    opt_state: Any
+    step: int = 0
+
+
+class CollaborativeTrainer:
+    """Drives N collaborating agents through a DistributedOptimizer."""
+
+    def __init__(
+        self,
+        loss_fn: LossFn,
+        params: PyTree,                   # single-agent params (will be stacked)
+        topology: Topology,
+        optimizer: DistributedOptimizer,
+        *,
+        stack: bool = True,
+        donate: bool = True,
+    ):
+        self.loss_fn = loss_fn
+        self.topology = topology
+        self.optimizer = optimizer
+        self.comm: CommOps = stacked_comm_ops(topology)
+        stacked = broadcast_to_agents(params, topology.n_agents) if stack else params
+        self.state = TrainState(params=stacked, opt_state=optimizer.init(stacked))
+        self.history = MetricHistory()
+        self._step_fn = jax.jit(self._make_step(), donate_argnums=(0, 1) if donate else ())
+        self._eval_fn = jax.jit(self._make_eval())
+
+    # ------------------------------------------------------------------
+    def _make_step(self):
+        opt, comm, loss_fn = self.optimizer, self.comm, self.loss_fn
+
+        def step(params, opt_state, batch):
+            gp = opt.grad_params(params, opt_state)   # Nesterov lookahead point
+
+            def agent_loss(p, b):
+                return loss_fn(p, b)
+
+            (losses, metrics), grads = jax.vmap(
+                jax.value_and_grad(agent_loss, has_aux=True))(gp, batch)
+            new_params, new_opt_state = opt.update(params, grads, opt_state, comm)
+            out = {
+                "loss": jnp.mean(losses),
+                "consensus_error": consensus_error_pytree(new_params),
+            }
+            for k, v in metrics.items():
+                out[k] = jnp.mean(v)
+            return new_params, new_opt_state, out
+
+        return step
+
+    def _make_eval(self):
+        loss_fn = self.loss_fn
+
+        def evaluate(params, batch):
+            """Every agent evaluated on the same (global) eval batch."""
+
+            def agent_eval(p):
+                loss, metrics = loss_fn(p, batch)
+                return loss, metrics
+
+            losses, metrics = jax.vmap(agent_eval)(params)
+            out = {"loss_mean": jnp.mean(losses), "loss_var": jnp.var(losses)}
+            for k, v in metrics.items():
+                out[f"{k}_mean"] = jnp.mean(v)
+                out[f"{k}_var"] = jnp.var(v)
+            return out
+
+        return evaluate
+
+    # ------------------------------------------------------------------
+    def step(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
+        p, o, metrics = self._step_fn(self.state.params, self.state.opt_state, batch)
+        self.state = TrainState(params=p, opt_state=o, step=self.state.step + 1)
+        out = {k: float(v) for k, v in metrics.items()}
+        self.history.log(self.state.step, **out)
+        return out
+
+    def evaluate(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
+        return {k: float(v) for k, v in self._eval_fn(self.state.params, batch).items()}
+
+    def mean_params(self) -> PyTree:
+        """The consensus (agent-averaged) model."""
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), self.state.params)
+
+    def agent_params(self, j: int) -> PyTree:
+        return jax.tree.map(lambda x: x[j], self.state.params)
+
+
+def train_loop(
+    trainer: CollaborativeTrainer,
+    batches,
+    n_steps: int,
+    *,
+    eval_batch: Optional[Dict[str, np.ndarray]] = None,
+    eval_every: int = 0,
+    log_every: int = 0,
+    printer: Optional[Callable[[str], None]] = None,
+) -> MetricHistory:
+    printer = printer or (lambda s: None)
+    t0 = time.time()
+    for i in range(n_steps):
+        m = trainer.step(next(batches))
+        if log_every and (i + 1) % log_every == 0:
+            printer(f"step {i+1}/{n_steps} loss={m['loss']:.4f} "
+                    f"cons={m['consensus_error']:.3e} ({time.time()-t0:.1f}s)")
+        if eval_batch is not None and eval_every and (i + 1) % eval_every == 0:
+            em = trainer.evaluate(eval_batch)
+            trainer.history.log(trainer.state.step, **{f"eval_{k}": v for k, v in em.items()})
+    return trainer.history

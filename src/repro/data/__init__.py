@@ -1,0 +1,19 @@
+"""Data pipeline: synthetic datasets + per-agent partitioning."""
+
+from repro.data.synthetic import (
+    Dataset,
+    AgentPartitioner,
+    make_classification,
+    make_lm_tokens,
+    lm_batches,
+    lm_agent_batches,
+)
+
+__all__ = [
+    "Dataset",
+    "AgentPartitioner",
+    "make_classification",
+    "make_lm_tokens",
+    "lm_batches",
+    "lm_agent_batches",
+]

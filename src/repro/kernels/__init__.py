@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+* ``consensus_update`` — fused Pi-mixing + (momentum) SGD update, the
+  paper's per-step parameter sweep (eq. 5) in one HBM pass.
+* ``flash_attention`` — blockwise online-softmax attention for prefill
+  (causal / sliding-window / GQA).
+* ``rwkv_scan`` — chunked WKV6 recurrence with VMEM-resident state.
+
+Each subpackage ships ``<name>.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd wrapper in model layout) and ``ref.py`` (pure-jnp
+oracle); tests sweep shapes/dtypes in ``interpret=True`` on CPU.
+"""

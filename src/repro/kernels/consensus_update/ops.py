@@ -1,0 +1,90 @@
+"""jit'd wrappers: pytree-level fused consensus updates.
+
+`cdsgd_update_tree` applies the fused kernel leaf-by-leaf: each leaf is
+flattened, padded to a (rows, 128) tile, updated in one HBM sweep, and
+reshaped back.  ``neighbor_trees`` are the already-communicated neighbor
+parameter pytrees (the ppermute outputs in the sharded trainer, or plain
+stacked slices in simulation) in the same order as ``weights``.
+
+On CPU (this container) the kernels run with ``interpret=True``; on TPU
+pass ``interpret=False`` for the compiled path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.consensus_update.consensus_update import (
+    LANE,
+    cdsgd_update_2d,
+    cdmsgd_update_2d,
+)
+
+PyTree = Any
+
+
+def _to_tiles(x: jnp.ndarray):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // LANE)
+    pad = rows * LANE - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, LANE), n
+
+
+def _from_tiles(t: jnp.ndarray, n: int, shape, dtype):
+    return t.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cdsgd_update_tree(
+    self_tree: PyTree,
+    neighbor_trees: Sequence[PyTree],
+    weights: jnp.ndarray,          # (S,) — weight 0 applies to self_tree
+    grad_tree: PyTree,
+    alpha,
+    *,
+    interpret: bool = True,
+) -> PyTree:
+    def leaf(x, g, *nbrs):
+        tiles = [_to_tiles(t)[0] for t in (x,) + nbrs]
+        gt, n = _to_tiles(g)
+        stacked = jnp.stack(tiles)
+        out = cdsgd_update_2d(stacked, weights, gt, alpha, interpret=interpret)
+        return _from_tiles(out, n, x.shape, x.dtype)
+
+    return jax.tree.map(leaf, self_tree, grad_tree, *neighbor_trees)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cdmsgd_update_tree(
+    self_tree: PyTree,
+    neighbor_trees: Sequence[PyTree],
+    weights: jnp.ndarray,
+    grad_tree: PyTree,
+    momentum_tree: PyTree,
+    alpha,
+    mu,
+    *,
+    interpret: bool = True,
+):
+    def leaf(x, g, v, *nbrs):
+        tiles = [_to_tiles(t)[0] for t in (x,) + nbrs]
+        gt, n = _to_tiles(g)
+        vt, _ = _to_tiles(v)
+        stacked = jnp.stack(tiles)
+        out, new_v = cdmsgd_update_2d(stacked, weights, gt, vt, alpha, mu,
+                                      interpret=interpret)
+        return (_from_tiles(out, n, x.shape, x.dtype),
+                _from_tiles(new_v, n, v.shape, v.dtype))
+
+    pairs = jax.tree.map(leaf, self_tree, grad_tree, momentum_tree, *neighbor_trees)
+    flat, treedef = jax.tree.flatten(pairs, is_leaf=lambda t: isinstance(t, tuple))
+    params = jax.tree.unflatten(treedef, [p for p, _ in flat])
+    mom = jax.tree.unflatten(treedef, [v for _, v in flat])
+    return params, mom

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused consensus update kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cdsgd_update_ref(neighbors, weights, grad, alpha):
+    """neighbors (S, rows, 128); weights (S,); grad (rows, 128)."""
+    mixed = jnp.einsum("s,sre->re", weights.astype(jnp.float32),
+                       neighbors.astype(jnp.float32))
+    out = mixed - alpha * grad.astype(jnp.float32)
+    return out.astype(neighbors.dtype)
+
+
+def cdmsgd_update_ref(neighbors, weights, grad, momentum, alpha, mu):
+    v = mu * momentum.astype(jnp.float32) - alpha * grad.astype(jnp.float32)
+    mixed = jnp.einsum("s,sre->re", weights.astype(jnp.float32),
+                       neighbors.astype(jnp.float32))
+    return (mixed + v).astype(neighbors.dtype), v.astype(momentum.dtype)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash attention kernel (naive, materializes S)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,          # (B, H, Sq, D)
+    k: jnp.ndarray,          # (B, KV, Sk, D)
+    v: jnp.ndarray,          # (B, KV, Sk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kv, g, sq, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bngqd,bnkd->bngqk", qg, k.astype(jnp.float32))
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    allowed = jnp.ones((sq, sk), bool)
+    if causal:
+        allowed &= cols <= rows
+    if window is not None:
+        allowed &= cols > rows - window
+    s = jnp.where(allowed, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqk,bnkd->bngqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)

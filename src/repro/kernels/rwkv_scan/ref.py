@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the WKV6 kernel (same recurrence as repro.nn.ssm)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (BH, S, hs); u: (BH, hs). Returns (y, final_state (BH,hs,hs))."""
+    f32 = jnp.float32
+    bh, s, hs = r.shape
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    u = u.astype(f32)
+
+    def one(rb, kb, vb, wb, ub):
+        def step(state, xs):
+            rt, kt, vt, wt = xs
+            kv = kt[:, None] * vt[None, :]
+            y = jnp.einsum("i,ij->j", rt, state + ub[:, None] * kv)
+            return wt[:, None] * state + kv, y
+
+        state, ys = jax.lax.scan(step, jnp.zeros((hs, hs), f32), (rb, kb, vb, wb))
+        return ys, state
+
+    y, state = jax.vmap(one)(r, k, v, w, u)
+    return y, state

@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, sharded steps, dry-run, train/serve CLIs."""

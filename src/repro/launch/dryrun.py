@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.  Do not
+import this module from tests/benchmarks — they must see 1 device.
+
+Per pair this script:
+  1. builds the sharded step (train_step / prefill_step / serve_step),
+  2. ``jax.jit(step).lower(**ShapeDtypeStruct inputs).compile()`` —
+     allocation-free; success proves the distribution config is coherent,
+  3. prints ``memory_analysis()`` (fits-or-not per device) and
+     ``cost_analysis()`` (XLA's FLOPs/bytes, loop bodies counted once),
+  4. runs the trip-count-aware HLO analysis (collective bytes, dot FLOPs),
+  5. derives the three roofline terms and writes
+     ``results/dryrun/<arch>__<shape>__<mesh>__<mode>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  python -m repro.launch.dryrun --all                  # 16x16 baseline grid
+  python -m repro.launch.dryrun --all --multi-pod      # 2x16x16 proof
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
+           mixing: str, optimizer_name: str, topology: str, microbatches: int = 1,
+           context_parallel: bool = False):
+    import jax
+    from repro.configs import get_config, INPUT_SHAPES
+    from repro.core.optim import make_optimizer
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import steps as steps_lib
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return None, "skip: full-attention arch at 500k decode (DESIGN.md)"
+
+    if shape.kind == "train":
+        opt = make_optimizer(optimizer_name, 0.01, **({"mu": 0.9} if optimizer_name in ("cdmsgd", "cdmsgd_nesterov", "msgd") else {}))
+        bundle = steps_lib.build_train_step(
+            cfg, shape, mesh, opt, mode=mode, topology_name=topology, mixing=mixing,
+            microbatches=microbatches)
+        params = bundle.param_structs(mesh)
+        opt_state = bundle.opt_state_structs(mesh, opt)
+        args = (params, opt_state, bundle.batch_specs)
+        fn = bundle.step_fn
+    elif shape.kind == "prefill":
+        bundle = steps_lib.build_prefill_step(cfg, shape, mesh,
+                                              context_parallel=context_parallel)
+        args = (bundle.param_structs(mesh),) + bundle.input_structs
+        fn = bundle.step_fn
+    else:
+        bundle = steps_lib.build_serve_step(cfg, shape, mesh)
+        cache, tokens, cur = bundle.input_structs
+        args = (bundle.param_structs(mesh), cache, tokens, cur)
+        fn = bundle.step_fn
+    return (fn, args, mesh, cfg, shape), None
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mode: str = "train", mixing: str = "dense",
+             optimizer_name: str = "cdmsgd", topology: str = "ring",
+             out_dir: str = "results/dryrun", tag: str = "",
+             analyze: bool = True, verbose: bool = True, microbatches: int = 1,
+             context_parallel: bool = False):
+    import jax
+    from repro.analysis.hlo import analyze_hlo
+    from repro.analysis.roofline import model_flops, roofline_from_stats
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    label = f"{arch}__{shape_name}__{mesh_name}__{mode}_{mixing}{tag}"
+    t0 = time.time()
+    built, skip = _build(arch, shape_name, multi_pod=multi_pod, mode=mode,
+                         mixing=mixing, optimizer_name=optimizer_name, topology=topology,
+                         microbatches=microbatches, context_parallel=context_parallel)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
+              "mixing": mixing, "topology": topology, "optimizer": optimizer_name,
+              "microbatches": microbatches}
+    if skip:
+        record["status"] = skip
+        _dump(out_dir, label, record)
+        if verbose:
+            print(f"[dryrun] {label}: {skip}")
+        return record
+
+    fn, args, mesh, cfg, shape = built
+    try:
+        with mesh:
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            print(f"[dryrun] {label} memory_analysis: {ma}")
+            print(f"[dryrun] {label} cost_analysis flops={ca.get('flops')} "
+                  f"bytes={ca.get('bytes accessed')}")
+            chips = 512 if multi_pod else 256
+            per_device_bytes = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                                + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+            record.update({
+                "status": "ok",
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "chips": chips,
+                "argument_bytes_per_device": ma.argument_size_in_bytes,
+                "temp_bytes_per_device": ma.temp_size_in_bytes,
+                "output_bytes_per_device": ma.output_size_in_bytes,
+                "peak_bytes_per_device": per_device_bytes,
+                "fits_v5e_16gb": bool(per_device_bytes < 16e9),
+                "xla_cost_flops": ca.get("flops"),
+                "xla_cost_bytes": ca.get("bytes accessed"),
+            })
+            if analyze:
+                stats = analyze_hlo(compiled.as_text())
+                terms = roofline_from_stats(
+                    arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+                    stats=stats, model_flops_total=model_flops(cfg, shape),
+                    xla_cost_flops=ca.get("flops"),
+                    peak_memory_bytes=per_device_bytes)
+                record["roofline"] = terms.as_dict()
+                record["collective_bytes"] = stats.collective_bytes
+                record["collective_count"] = stats.collective_count
+                record["while_trip_counts"] = stats.trip_counts
+    except Exception as e:
+        record["status"] = f"FAIL: {type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    _dump(out_dir, label, record)
+    if verbose:
+        print(f"[dryrun] {label}: {record['status']} ({time.time()-t0:.0f}s)")
+    return record
+
+
+def _dump(out_dir: str, label: str, record: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, label + ".json"), "w") as f:
+        json.dump(record, f, indent=2, default=str)
+
+
+def main() -> int:
+    from repro.configs import INPUT_SHAPES, list_archs
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="train", choices=["train", "train_hier"])
+    ap.add_argument("--mixing", default="dense", choices=["dense", "ppermute"])
+    ap.add_argument("--optimizer", default="cdmsgd")
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-analyze", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--context-parallel", action="store_true")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for arch in list_archs():
+            for shape in INPUT_SHAPES:
+                pairs.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in pairs:
+        rec = run_pair(arch, shape, multi_pod=args.multi_pod, mode=args.mode,
+                       mixing=args.mixing, optimizer_name=args.optimizer,
+                       topology=args.topology, out_dir=args.out, tag=args.tag,
+                       analyze=not args.no_analyze, microbatches=args.microbatch,
+                       context_parallel=args.context_parallel)
+        if str(rec.get("status", "")).startswith("FAIL"):
+            failures += 1
+    print(f"[dryrun] done: {len(pairs)} pairs, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,241 @@
+"""Sharding resolution: logical axes -> mesh axes, with divisibility guards.
+
+Rules by execution mode (axis names refer to `make_production_mesh`):
+
+* ``train`` (paper-faithful CDSGD): every agent is one slice of the agent
+  axes (``data``, or ``pod x data`` multi-pod); params carry a leading
+  ``agent`` axis sharded there; tensor-parallel (``tp``) and ``expert``
+  dims shard over ``model``; ``fsdp`` dims replicate.
+* ``train_hier`` (hierarchical CDSGD — beyond-paper): agents live on the
+  ``pod`` axis only; ``fsdp`` dims shard over ``data`` (ZeRO-style weight
+  sharding *within* an agent — consistent because Pi-mixing is linear and
+  applied shard-wise).
+* ``serve``: no agent axis; ``fsdp`` dims shard over ``data`` so very
+  large checkpoints spread over the whole pod.
+
+A logical dim is sharded only if its size divides the mapped mesh-axis
+product; otherwise it silently replicates (e.g. starcoder2's 36 heads or
+granite's 49155-token vocab on a 16-wide model axis).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.nn.param import ParamDef
+
+P = PartitionSpec
+
+
+def rules_for_mode(mode: str, mesh: Mesh) -> Dict[str, Any]:
+    multi_pod = "pod" in mesh.axis_names
+    if mode == "train":
+        agent = ("pod", "data") if multi_pod else ("data",)
+        return {"agent": agent, "tp": "model", "expert": "model", "fsdp": None}
+    if mode == "train_hier":
+        if not multi_pod:
+            # single-pod hierarchical: agents on data axis are impossible to
+            # split further, so fsdp rides the model axis's orthogonal dim.
+            return {"agent": ("data",), "tp": "model", "expert": "model", "fsdp": None}
+        return {"agent": ("pod",), "tp": "model", "expert": "model", "fsdp": "data"}
+    if mode == "serve":
+        return {"tp": "model", "expert": "model", "fsdp": "data"}
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _axes_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    return math.prod(mesh.shape[a] for a in entry)
+
+
+def safe_partition_specs(template, rules: Dict[str, Any], mesh: Mesh):
+    """partition_specs with divisibility fallback per dimension."""
+
+    def leaf(pd: ParamDef) -> PartitionSpec:
+        resolved = []
+        for dim, ax in zip(pd.shape, pd.axes):
+            m = rules.get(ax) if ax is not None else None
+            if m is not None and dim % _axes_size(mesh, m) != 0:
+                m = None
+            resolved.append(m)
+        while resolved and resolved[-1] is None:
+            resolved.pop()
+        return PartitionSpec(*resolved)
+
+    return jax.tree.map(leaf, template, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def named(mesh: Mesh, spec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def named_tree(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+# --------------------------------------------------------------------------
+# agent geometry
+# --------------------------------------------------------------------------
+
+
+def agent_count(mesh: Mesh, mode: str) -> int:
+    rules = rules_for_mode(mode, mesh)
+    if "agent" not in rules:
+        return 1
+    return _axes_size(mesh, rules["agent"])
+
+
+def batch_axes(mesh: Mesh, mode: str):
+    """Mesh axes over which the *within-agent* batch dim shards."""
+    if mode == "train_hier" and "pod" in mesh.axis_names:
+        return "data"
+    return None
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh, mode: str):
+    """Per-agent stacked batch {"inputs","targets"[,"frontend"]}."""
+    rules = rules_for_mode(mode, mesh)
+    a = agent_count(mesh, mode)
+    agent_ax = rules["agent"]
+    b_ax = batch_axes(mesh, mode)
+    if shape.global_batch % a:
+        raise ValueError(f"global_batch {shape.global_batch} not divisible by {a} agents")
+    b_local = shape.global_batch // a
+    seq = shape.seq_len
+    front = 0
+    if cfg.modality in ("audio", "vlm"):
+        front = min(cfg.frontend_tokens, seq // 2)
+        if not cfg.is_encoder_decoder:
+            seq = seq - front   # frontend tokens + text tokens = seq_len budget
+    spec3 = P(agent_ax, b_ax, None)
+    out = {
+        "inputs": _sds((a, b_local, seq), jnp.int32, mesh, spec3),
+        "targets": _sds((a, b_local, seq), jnp.int32, mesh, spec3),
+    }
+    if front:
+        out["frontend"] = _sds((a, b_local, front, cfg.frontend_dim), jnp.bfloat16,
+                               mesh, P(agent_ax, b_ax, None, None))
+    return out
+
+
+def serve_batch_count(shape: InputShape, mesh: Mesh) -> Tuple[int, Any]:
+    """(batch, batch mesh axes) for serve mode."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = math.prod(mesh.shape[a] for a in axes)
+    b = shape.global_batch
+    if b % size == 0:
+        return b, tuple(axes)
+    if b % mesh.shape["data"] == 0:
+        return b, ("data",)
+    return b, None
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    b, b_ax = serve_batch_count(shape, mesh)
+    seq = shape.seq_len
+    front = 0
+    if cfg.modality in ("audio", "vlm"):
+        front = min(cfg.frontend_tokens, seq // 2)
+        if not cfg.is_encoder_decoder:
+            seq = seq - front
+    out = {
+        "inputs": _sds((b, seq), jnp.int32, mesh, P(b_ax, None)),
+        "targets": _sds((b, seq), jnp.int32, mesh, P(b_ax, None)),
+    }
+    if front:
+        out["frontend"] = _sds((b, front, cfg.frontend_dim), jnp.bfloat16,
+                               mesh, P(b_ax, None, None))
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode cache specs
+# --------------------------------------------------------------------------
+
+
+def cache_partition_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    """PartitionSpec tree mirroring init_cache(cfg, b, max_len).
+
+    Heuristics: shard batch over data axes when divisible; otherwise (the
+    long_500k single-request case) shard the *sequence* dim of KV caches
+    over all axes.  KV-head dims shard over ``model`` when divisible, else
+    the sequence dim takes ``model`` too.
+    """
+    from repro.nn.transformer import init_cache  # local import to avoid cycle
+
+    b, b_ax = serve_batch_count(shape, mesh)
+    model_sz = mesh.shape["model"]
+    all_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    enc_len = cfg.frontend_tokens if cfg.is_encoder_decoder else 0
+    structure = jax.eval_shape(lambda: init_cache(cfg, b, shape.seq_len, enc_len=enc_len))
+
+    def leaf_spec(path, leaf) -> PartitionSpec:
+        keys = [getattr(p, "key", None) for p in path]
+        shp = leaf.shape
+        if "enc_out" in keys:           # (b, F, d)
+            return P(b_ax, None, None)
+        if "S" in keys:                 # rwkv state (L, b, n_h, hs, hs)
+            nh_ax = "model" if shp[2] % model_sz == 0 else None
+            return P(None, b_ax, nh_ax, None, None)
+        if "mamba" in keys and len(shp) == 4:
+            pass                         # falls through to the mamba rule below
+        if "shift" in keys or keys[-1] == "cm":   # (L, b, d)
+            d_ax = "model" if shp[2] % model_sz == 0 else None
+            return P(None, b_ax, d_ax)
+        if "mamba" in keys:             # (L, b, di, n)
+            d_ax = "model" if shp[2] % model_sz == 0 else None
+            return P(None, b_ax, d_ax, None)
+        if keys[-1] in ("k", "v"):      # (L[, period], b, S, KV, hd)
+            lead = len(shp) - 4          # leading stack dims (1 or 2)
+            if b_ax is None:            # long-context single request
+                return P(*([None] * (lead + 1)), all_axes + ("model",), None, None)
+            kv_ax = "model" if shp[lead + 2] % model_sz == 0 else None
+            seq_ax = None if kv_ax else ("model" if shp[lead + 1] % model_sz == 0 else None)
+            return P(*([None] * lead), b_ax, seq_ax, kv_ax, None)
+        if keys[-1] in ("c", "kr"):     # MLA (L, b, S, r)
+            if b_ax is None:
+                return P(None, None, all_axes + ("model",), None)
+            seq_ax = "model" if shp[2] % model_sz == 0 else None
+            return P(None, b_ax, seq_ax, None)
+        # fallback: batch-shard dim 1 if it matches
+        return P(*([None] * len(shp)))
+
+    flat, treedef = jax.tree.flatten_with_path(structure)
+    specs = [leaf_spec(path, leaf) for path, leaf in flat]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def decode_input_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    """(cache, tokens, cur_index) ShapeDtypeStructs for serve_step lowering."""
+    from repro.nn.transformer import init_cache
+
+    b, b_ax = serve_batch_count(shape, mesh)
+    enc_len = cfg.frontend_tokens if cfg.is_encoder_decoder else 0
+    structure = jax.eval_shape(lambda: init_cache(cfg, b, shape.seq_len, enc_len=enc_len))
+    specs = cache_partition_specs(cfg, shape, mesh)
+    cache = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        structure, specs)
+    tokens = _sds((b, 1), jnp.int32, mesh, P(b_ax, None))
+    cur = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, cur

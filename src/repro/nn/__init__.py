@@ -1,0 +1,35 @@
+"""NN substrate: parameter templates, layers, attention, MoE, SSM, models."""
+
+from repro.nn.param import (
+    ParamDef,
+    init_params,
+    shape_structs,
+    partition_specs,
+    count_params,
+    template_bytes,
+    stack_agent_axis,
+)
+from repro.nn.transformer import (
+    model_template,
+    forward,
+    loss_fn,
+    init_cache,
+    decode_step,
+    encode_for_decode,
+)
+
+__all__ = [
+    "ParamDef",
+    "init_params",
+    "shape_structs",
+    "partition_specs",
+    "count_params",
+    "template_bytes",
+    "stack_agent_axis",
+    "model_template",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "decode_step",
+    "encode_for_decode",
+]

@@ -1,0 +1,410 @@
+"""Attention: GQA / MLA / sliding-window / local-global, prefill + decode.
+
+Two compute paths, both pure ``jax.numpy`` (they lower on any backend — the
+Pallas flash kernel in :mod:`repro.kernels.flash_attention` is the TPU
+drop-in for the prefill path and is validated against these):
+
+* :func:`blockwise_attention` — ``lax.scan`` over KV chunks with an online
+  (running max / running sum) softmax.  Activation memory is
+  O(q_len * chunk) instead of O(q_len * kv_len), which is what makes the
+  32k-prefill shapes lowerable; masks are predicates over index iotas, so a
+  traced ``window`` covers full-causal, sliding-window and gemma-style
+  local/global layers with one code path.
+
+* :func:`decode_attention` — single-token query against a KV cache with a
+  length + window mask.  One einsum pair; for 500k-token caches this is
+  memory-bound and is the shape the roofline analysis flags.
+
+GQA is computed by grouping query heads over KV heads (no KV repetition is
+materialized).  MLA (DeepSeek-V2) keeps the compressed ``c_kv`` as the
+decode cache and uses the *absorbed* formulation for decode.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn.layers import apply_rope
+from repro.nn.param import ParamDef
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Context parallelism (sequence-sharded attention) — §Perf optimization.
+#
+# Archs whose head counts don't divide the model axis (gemma3: 4 q / 1 kv
+# head on a 16-wide axis) otherwise run attention fully replicated across
+# that axis.  When enabled (build_prefill_step / build_train_step opt-in),
+# the query tensor is sharding-constrained along its *sequence* dim so each
+# model-axis slice computes 1/16th of the score rows (KV stays whole — an
+# all-gather of K/V per layer, tiny next to the S^2 savings).
+# --------------------------------------------------------------------------
+
+_CONTEXT_PARALLEL: dict = {"spec": None}
+
+
+@contextlib.contextmanager
+def context_parallel(batch_axes, seq_axis="model"):
+    """Enable sequence-sharded attention inside this context (ambient mesh)."""
+    from jax.sharding import PartitionSpec
+    prev = _CONTEXT_PARALLEL["spec"]
+    _CONTEXT_PARALLEL["spec"] = PartitionSpec(batch_axes, seq_axis, None, None)
+    try:
+        yield
+    finally:
+        _CONTEXT_PARALLEL["spec"] = prev
+
+
+def _maybe_seq_shard(q):
+    spec = _CONTEXT_PARALLEL["spec"]
+    if spec is None:
+        return q
+    return jax.lax.with_sharding_constraint(q, spec)
+
+
+# --------------------------------------------------------------------------
+# Core: blockwise online-softmax attention (prefill / training)
+# --------------------------------------------------------------------------
+
+
+def _allowed_mask(q_pos, k_pos, *, causal: bool, window):
+    """(q, k) bool mask from position iotas; `window` may be traced."""
+    allowed = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        allowed &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        allowed &= k_pos[None, :] > (q_pos[:, None] - window)
+    return allowed
+
+
+def blockwise_attention(
+    q: jnp.ndarray,              # (b, sq, H, hd)
+    k: jnp.ndarray,              # (b, sk, KV, hd)
+    v: jnp.ndarray,              # (b, sk, KV, hdv)
+    *,
+    causal: bool = True,
+    window: Optional[Any] = None,    # int, traced scalar, or None
+    q_positions: Optional[jnp.ndarray] = None,
+    k_positions: Optional[jnp.ndarray] = None,
+    chunk: int = 512,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    sk, kv, hdv = k.shape[1], k.shape[2], v.shape[3]
+    group = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    q_pos = q_positions if q_positions is not None else jnp.arange(sq)
+    k_pos = k_positions if k_positions is not None else jnp.arange(sk)
+
+    chunk = min(chunk, sk)
+    n_chunks, rem = divmod(sk, chunk)
+    if rem:  # pad KV to a chunk multiple; padded keys are masked out
+        pad = chunk - rem
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max - 1)
+        n_chunks += 1
+
+    qg = q.reshape(b, sq, kv, group, hd).astype(jnp.float32) * scale
+    kc = k.reshape(b, n_chunks, chunk, kv, hd).astype(jnp.float32)
+    vc = v.reshape(b, n_chunks, chunk, kv, hdv).astype(jnp.float32)
+    kpos_c = k_pos.reshape(n_chunks, chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry                     # (b,sq,kv,g), (b,sq,kv,g), (b,sq,kv,g,hdv)
+        kb, vb, kp = xs                       # (b,chunk,kv,hd), (b,chunk,kv,hdv), (chunk,)
+        logits = jnp.einsum("bqngd,bcnd->bqngc", qg, kb)  # (b,sq,kv,g,chunk)
+        allowed = _allowed_mask(q_pos, kp, causal=causal, window=window)
+        lg = jnp.where(allowed[None, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(lg, axis=-1))
+        p = jnp.exp(lg - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqngc,bcne->bqnge", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kv, group), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, group), dtype=jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, group, hdv), dtype=jnp.float32)
+    xs = (
+        jnp.moveaxis(kc, 1, 0),   # (n_chunks, b, chunk, kv, hd)
+        jnp.moveaxis(vc, 1, 0),
+        kpos_c,
+    )
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hdv).astype(q.dtype)
+
+
+def banded_attention(
+    q: jnp.ndarray,              # (b, s, H, hd)
+    k: jnp.ndarray,              # (b, s, KV, hd)
+    v: jnp.ndarray,              # (b, s, KV, hdv)
+    *,
+    window: int,                 # STATIC sliding window (causal)
+    q_chunk: int = 512,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Sliding-window attention that only *computes* the band (§Perf).
+
+    ``blockwise_attention`` with a window still scores every (q, kv) chunk
+    pair and masks; this version gathers, per q chunk, only the KV span
+    ``[chunk_end - window - q_chunk, chunk_end)`` — compute and traffic drop
+    from O(S^2) to O(S * (window + q_chunk)).  All chunks are batched (no
+    scan), so a context-parallel sharding on the chunk dim still parallelizes
+    across the model axis.  Requires static ``window`` and s % q_chunk == 0.
+    """
+    b, s, h, hd = q.shape
+    kv, hdv = k.shape[2], v.shape[3]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, s)
+    if s % q_chunk:
+        raise ValueError(f"seq {s} must divide q_chunk {q_chunk}")
+    n_ch = s // q_chunk
+    span = min(q_chunk + -(-window // q_chunk) * q_chunk, s)
+    starts = jnp.maximum(0, (jnp.arange(n_ch) + 1) * q_chunk - span)   # (n_ch,)
+
+    def take_span(x, st):
+        return lax.dynamic_slice_in_dim(x, st, span, axis=1)
+
+    k_sp = jax.vmap(lambda st: take_span(k, st), out_axes=1)(starts)   # (b, n_ch, span, kv, hd)
+    v_sp = jax.vmap(lambda st: take_span(v, st), out_axes=1)(starts)
+    qc = q.reshape(b, n_ch, q_chunk, kv, g, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bmqngd,bmcnd->bmngqc", qc, k_sp.astype(jnp.float32))
+
+    q_pos = (jnp.arange(n_ch) * q_chunk)[:, None] + jnp.arange(q_chunk)[None]  # (n_ch, qc)
+    k_pos = starts[:, None] + jnp.arange(span)[None]                           # (n_ch, span)
+    allowed = (k_pos[:, None, :] <= q_pos[:, :, None]) \
+        & (k_pos[:, None, :] > q_pos[:, :, None] - window)                     # (n_ch, qc, span)
+    logits = jnp.where(allowed[None, :, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bmngqc,bmcne->bmqnge", p, v_sp.astype(jnp.float32))
+    return out.reshape(b, s, h, hdv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Core: single-token decode against a KV cache
+# --------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jnp.ndarray,              # (b, 1, H, hd)
+    k_cache: jnp.ndarray,        # (b, S, KV, hd)
+    v_cache: jnp.ndarray,        # (b, S, KV, hdv)
+    cur_index,                   # scalar: position of the new token
+    *,
+    window: Optional[Any] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, _, h, hd = q.shape
+    s, kv, hdv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[3]
+    group = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, kv, group, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bngd,bsnd->bngs", qg, k_cache.astype(jnp.float32))
+    k_pos = jnp.arange(s)
+    allowed = k_pos <= cur_index
+    if window is not None:
+        allowed &= k_pos > (cur_index - window)
+    logits = jnp.where(allowed[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngs,bsne->bnge", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hdv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer (full / SWA / local-global are mask choices)
+# --------------------------------------------------------------------------
+
+
+def gqa_template(d: int, n_heads: int, n_kv: int, head_dim: int, dtype=jnp.float32,
+                 v_head_dim: Optional[int] = None) -> Dict[str, ParamDef]:
+    hdv = v_head_dim or head_dim
+    return {
+        "wq": ParamDef((d, n_heads, head_dim), ("fsdp", "tp", None), init="scaled", dtype=dtype),
+        "wk": ParamDef((d, n_kv, head_dim), ("fsdp", "tp", None), init="scaled", dtype=dtype),
+        "wv": ParamDef((d, n_kv, hdv), ("fsdp", "tp", None), init="scaled", dtype=dtype),
+        "wo": ParamDef((n_heads, hdv, d), ("tp", None, "fsdp"), init="scaled", dtype=dtype),
+    }
+
+
+def gqa_attention(
+    params,
+    x: jnp.ndarray,              # (b, s, d)
+    positions: jnp.ndarray,      # (s,) or (b, s) -> we use (s,)
+    *,
+    causal: bool = True,
+    window=None,
+    rope_theta: float = 1e4,
+    kv_x: Optional[jnp.ndarray] = None,     # cross-attention source
+    kv_positions: Optional[jnp.ndarray] = None,
+    use_rope: bool = True,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    src = x if kv_x is None else kv_x
+    q = _maybe_seq_shard(jnp.einsum("bsd,dhk->bshk", x, params["wq"]))
+    k = jnp.einsum("bsd,dnk->bsnk", src, params["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", src, params["wv"])
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        kp = kv_positions if kv_positions is not None else (positions if kv_x is None else jnp.arange(src.shape[1]))
+        k = apply_rope(k, kp, rope_theta)
+    # static sliding window on self-attention: compute only the band
+    if (kv_x is None and causal and isinstance(window, int) and window
+            and x.shape[1] % min(chunk, x.shape[1]) == 0 and window < x.shape[1]):
+        out = banded_attention(q, k, v, window=window, q_chunk=chunk)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    out = blockwise_attention(
+        q, k, v,
+        causal=causal and kv_x is None,
+        window=window,
+        q_positions=positions,
+        k_positions=kv_positions if kv_positions is not None else (positions if kv_x is None else jnp.arange(src.shape[1])),
+        chunk=chunk,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def gqa_init_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                   v_head_dim: Optional[int] = None, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    hdv = v_head_dim or head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, hdv), dtype),
+    }
+
+
+def gqa_decode(
+    params,
+    cache: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,              # (b, 1, d) — the new token's activations
+    cur_index,                   # scalar int: its position
+    *,
+    window=None,
+    rope_theta: float = 1e4,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    pos = jnp.full((1,), cur_index, dtype=jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dnk->bsnk", x, params["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", x, params["wv"])
+    if use_rope:
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cur_index, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cur_index, axis=1)
+    out = decode_attention(q, k_cache, v_cache, cur_index, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def gqa_cross_decode(params, enc_kv: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention during decode: static precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    out = decode_attention(q, enc_kv["k"], enc_kv["v"], enc_kv["k"].shape[1] - 1)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# --------------------------------------------------------------------------
+
+
+def mla_template(
+    d: int, n_heads: int, *, kv_lora: int, q_lora: int,
+    qk_nope: int, qk_rope: int, v_head: int, dtype=jnp.float32,
+) -> Dict[str, ParamDef]:
+    t: Dict[str, ParamDef] = {
+        "wdkv": ParamDef((d, kv_lora), ("fsdp", None), init="scaled", dtype=dtype),
+        "wkr": ParamDef((d, qk_rope), ("fsdp", None), init="scaled", dtype=dtype),
+        "wuk": ParamDef((kv_lora, n_heads, qk_nope), (None, "tp", None), init="scaled", dtype=dtype),
+        "wuv": ParamDef((kv_lora, n_heads, v_head), (None, "tp", None), init="scaled", dtype=dtype),
+        "wo": ParamDef((n_heads, v_head, d), ("tp", None, "fsdp"), init="scaled", dtype=dtype),
+    }
+    if q_lora:
+        t["wdq"] = ParamDef((d, q_lora), ("fsdp", None), init="scaled", dtype=dtype)
+        t["wuq"] = ParamDef((q_lora, n_heads, qk_nope + qk_rope), (None, "tp", None), init="scaled", dtype=dtype)
+    else:
+        t["wq"] = ParamDef((d, n_heads, qk_nope + qk_rope), ("fsdp", "tp", None), init="scaled", dtype=dtype)
+    return t
+
+
+def _mla_q(params, x, positions, qk_nope, qk_rope, rope_theta):
+    if "wdq" in params:
+        q = jnp.einsum("bsd,dr->bsr", x, params["wdq"])
+        q = jnp.einsum("bsr,rhk->bshk", q, params["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(
+    params, x, positions, *, qk_nope: int, qk_rope: int,
+    rope_theta: float = 1e4, chunk: int = 512,
+) -> jnp.ndarray:
+    """Prefill/training path: expand c_kv to per-head K/V, blockwise core."""
+    q_nope, q_rope = _mla_q(params, x, positions, qk_nope, qk_rope, rope_theta)
+    q_nope = _maybe_seq_shard(q_nope)
+    c = jnp.einsum("bsd,dr->bsr", x, params["wdkv"])                 # compressed kv
+    k_rope = apply_rope(jnp.einsum("bsd,dk->bsk", x, params["wkr"])[:, :, None, :], positions, rope_theta)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, params["wuk"])
+    v = jnp.einsum("bsr,rhe->bshe", c, params["wuv"])
+    h = q_nope.shape[2]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], qk_rope))], axis=-1)
+    scale = 1.0 / math.sqrt(qk_nope + qk_rope)
+    out = blockwise_attention(q, k, v, causal=True, q_positions=positions,
+                              k_positions=positions, chunk=chunk, scale=scale)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+
+
+def mla_init_cache(batch: int, max_len: int, kv_lora: int, qk_rope: int, dtype=jnp.float32):
+    return {
+        "c": jnp.zeros((batch, max_len, kv_lora), dtype),
+        "kr": jnp.zeros((batch, max_len, qk_rope), dtype),
+    }
+
+
+def mla_decode(
+    params, cache, x, cur_index, *, qk_nope: int, qk_rope: int, rope_theta: float = 1e4,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed decode: cache holds (c_kv, k_rope) only — the MLA win.
+
+    logits_h(s) = <q_nope_h W_uk_h, c_s> + <q_rope_h, k_rope_s>
+    out_h       = (sum_s p_h(s) c_s) W_uv_h
+    """
+    pos = jnp.full((1,), cur_index, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(params, x, pos, qk_nope, qk_rope, rope_theta)
+    c_new = jnp.einsum("bsd,dr->bsr", x, params["wdkv"])
+    kr_new = apply_rope(jnp.einsum("bsd,dk->bsk", x, params["wkr"])[:, :, None, :], pos, rope_theta)[:, :, 0, :]
+    c_cache = lax.dynamic_update_slice_in_dim(cache["c"], c_new.astype(cache["c"].dtype), cur_index, axis=1)
+    kr_cache = lax.dynamic_update_slice_in_dim(cache["kr"], kr_new.astype(cache["kr"].dtype), cur_index, axis=1)
+
+    # absorbed path in f32: (q W_uk) c reassociates the prefill product
+    # q (W_uk c); bf16 rounding would visibly diverge from the parallel path
+    f32 = jnp.float32
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope.astype(f32), params["wuk"].astype(f32))
+    scale = 1.0 / math.sqrt(qk_nope + qk_rope)
+    logits = (
+        jnp.einsum("bthr,bsr->bths", q_c, c_cache.astype(f32))
+        + jnp.einsum("bthk,bsk->bths", q_rope.astype(f32), kr_cache.astype(f32))
+    ) * scale
+    s = c_cache.shape[1]
+    allowed = jnp.arange(s) <= cur_index
+    logits = jnp.where(allowed[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bths,bsr->bthr", p, c_cache.astype(jnp.float32))   # weighted c
+    out = jnp.einsum("bthr,rhe->bthe", ctx, params["wuv"].astype(jnp.float32))
+    y = jnp.einsum("bthe,hed->btd", out.astype(x.dtype), params["wo"])
+    return y, {"c": c_cache, "kr": kr_cache}

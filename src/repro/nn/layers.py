@@ -1,0 +1,139 @@
+"""Basic NN layers as pure functions + their parameter templates.
+
+Convention: every ``*_template`` returns a dict of :class:`ParamDef`, and
+the matching ``apply`` function consumes the materialized dict.  Logical
+sharding axes (resolved per execution mode in repro.launch.sharding):
+
+* ``tp``   — tensor-parallel dims (heads, FFN hidden, vocab) -> ``model``,
+* ``fsdp`` — d_model dims, sharded over ``data`` in serve / hierarchical
+  modes (ZeRO-style), replicated in paper-faithful training,
+* ``agent``/``expert``/``layers`` — see repro.nn.param.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamDef
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_template(d: int, dtype=jnp.float32) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), (None,), init="ones", dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_template(d: int, dtype=jnp.float32) -> Dict[str, ParamDef]:
+    return {
+        "scale": ParamDef((d,), (None,), init="ones", dtype=dtype),
+        "bias": ParamDef((d,), (None,), init="zeros", dtype=dtype),
+    }
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_template, rmsnorm
+    if kind == "layernorm":
+        return layernorm_template, layernorm
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def embedding_template(vocab: int, d: int, dtype=jnp.float32) -> Dict[str, ParamDef]:
+    return {"table": ParamDef((vocab, d), ("tp", "fsdp"), init="embed", dtype=dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_template(d: int, vocab: int, dtype=jnp.float32) -> Dict[str, ParamDef]:
+    return {"w": ParamDef((d, vocab), ("fsdp", "tp"), init="scaled", dtype=dtype)}
+
+
+def unembed(params, x):
+    return jnp.einsum("...d,dv->...v", x, params["w"])
+
+
+# --------------------------------------------------------------------------
+# MLP (gated SwiGLU/GeGLU or plain)
+# --------------------------------------------------------------------------
+
+
+def mlp_template(d: int, ff: int, *, gated: bool = True, dtype=jnp.float32) -> Dict[str, ParamDef]:
+    t = {
+        "wi": ParamDef((d, ff), ("fsdp", "tp"), init="scaled", dtype=dtype),
+        "wo": ParamDef((ff, d), ("tp", "fsdp"), init="scaled", dtype=dtype),
+    }
+    if gated:
+        t["wg"] = ParamDef((d, ff), ("fsdp", "tp"), init="scaled", dtype=dtype)
+    return t
+
+
+def _act(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def mlp(params, x, *, act: str = "silu"):
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    if "wg" in params:
+        h = _act(act)(jnp.einsum("...d,df->...f", x, params["wg"])) * h
+    else:
+        h = _act(act)(h)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 1e4) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (half,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., s, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts: top-k routing with capacity buffers + shared experts.
+
+Design (MaxText/GShard-style, adapted to avoid giant one-hot dispatch
+tensors): tokens are *scatter*ed into a per-expert capacity buffer
+``(E, C, d)`` using integer indices (position-in-expert via cumsum), the
+expert FFNs run as one batched einsum over the expert axis, and results are
+*gather*ed back and combined with the router gates.  Tokens routed past an
+expert's capacity are dropped for that expert (standard GShard semantics);
+the load-balance auxiliary loss keeps the router near-uniform.
+
+Sharding: expert-indexed weights and the capacity buffer carry a leading
+``expert`` logical axis mapped to the ``model`` mesh axis (expert
+parallelism).  Under pjit the scatter/gather across the token (data) and
+expert (model) shardings lowers to all-to-all style collectives — exactly
+the communication the roofline analysis attributes to MoE layers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import _act, mlp, mlp_template
+from repro.nn.param import ParamDef
+
+
+def moe_template(
+    d: int,
+    d_ff_expert: int,
+    n_experts: int,
+    *,
+    n_shared: int = 0,
+    gated: bool = True,
+    dtype=jnp.float32,
+) -> Dict[str, Any]:
+    t: Dict[str, Any] = {
+        "router": ParamDef((d, n_experts), ("fsdp", None), init="scaled", dtype=jnp.float32),
+        "wi": ParamDef((n_experts, d, d_ff_expert), ("expert", "fsdp", None), init="scaled", dtype=dtype),
+        "wo": ParamDef((n_experts, d_ff_expert, d), ("expert", None, "fsdp"), init="scaled", dtype=dtype),
+    }
+    if gated:
+        t["wg"] = ParamDef((n_experts, d, d_ff_expert), ("expert", "fsdp", None), init="scaled", dtype=dtype)
+    if n_shared:
+        t["shared"] = mlp_template(d, n_shared * d_ff_expert, gated=gated, dtype=dtype)
+    return t
+
+
+def capacity(tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(math.ceil(tokens * top_k * factor / n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(
+    params,
+    x: jnp.ndarray,               # (b, s, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (b, s, d), aux load-balance loss (scalar))."""
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+    cap = capacity(t, top_k, e, capacity_factor)
+
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (t, e)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)         # (t, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert, in token order
+    flat_expert = expert_idx.reshape(-1)                        # (t*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)    # (t*k, e)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)       # exclusive cumsum
+    slot = jnp.take_along_axis(pos_in_expert, flat_expert[:, None], axis=1)[:, 0]
+    keep = slot < cap
+
+    # scatter tokens into (e, cap, d) buffers
+    buf = jnp.zeros((e, cap, d), dtype=x.dtype)
+    src = jnp.repeat(xf, top_k, axis=0)                         # (t*k, d) token per slot
+    safe_e = jnp.where(keep, flat_expert, 0)
+    safe_s = jnp.where(keep, slot, 0)
+    src = jnp.where(keep[:, None], src, 0)
+    buf = buf.at[safe_e, safe_s].add(src, mode="drop")
+
+    # expert FFN over the expert axis (one batched einsum chain)
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    if "wg" in params:
+        g = jnp.einsum("ecd,edf->ecf", buf, params["wg"])
+        h = _act(act)(g) * h
+    else:
+        h = _act(act)(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])       # (e, cap, d)
+
+    # gather back + gate combine
+    gathered = out_buf[safe_e, safe_s]                          # (t*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    gates = gate_vals.reshape(-1)[:, None].astype(gathered.dtype)
+    y = (gathered * gates).reshape(t, top_k, d).sum(axis=1)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], xf, act=act)
+
+    # GShard load-balance loss: e * sum_e (frac tokens to e) * (mean prob e)
+    frac = jnp.mean(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum(1), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac / top_k * mean_prob)
+
+    return y.reshape(b, s, d), aux

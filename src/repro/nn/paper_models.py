@@ -1,0 +1,113 @@
+"""The paper's own experiment models.
+
+* MNIST model (§7.4.3): a deep fully-connected network — 20 hidden layers
+  of 50 ReLU units + 10-way softmax head.
+* CIFAR model (§5): CNN with conv32-conv32-pool, conv64-conv64-pool,
+  dense-512, softmax (ReLU activations).
+
+These run the paper-figure benchmarks on the synthetic datasets in
+:mod:`repro.data.synthetic` (no MNIST/CIFAR files in this offline
+container; DESIGN.md §6 records the substitution).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn.param import ParamDef
+
+PyTree = Any
+
+
+def mlp_classifier_template(
+    in_dim: int, n_classes: int, *, width: int = 50, depth: int = 20, dtype=jnp.float32
+) -> Dict[str, Any]:
+    layers = {}
+    d = in_dim
+    for i in range(depth):
+        layers[f"h{i}"] = {
+            "w": ParamDef((d, width), (None, None), init="scaled", scale=1.4, dtype=dtype),
+            "b": ParamDef((width,), (None,), init="zeros", dtype=dtype),
+        }
+        d = width
+    layers["out"] = {
+        "w": ParamDef((d, n_classes), (None, None), init="scaled", dtype=dtype),
+        "b": ParamDef((n_classes,), (None,), init="zeros", dtype=dtype),
+    }
+    return layers
+
+
+def mlp_classifier_apply(params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (b, in_dim) -> logits (b, n_classes)."""
+    h = x
+    i = 0
+    while f"h{i}" in params:
+        p = params[f"h{i}"]
+        h = jax.nn.relu(h @ p["w"] + p["b"])
+        i += 1
+    p = params["out"]
+    return h @ p["w"] + p["b"]
+
+
+def cnn_classifier_template(
+    hw: int = 32, channels: int = 3, n_classes: int = 10, dtype=jnp.float32
+) -> Dict[str, Any]:
+    """The paper's CIFAR CNN (2xconv32, pool, 2xconv64, pool, dense512)."""
+
+    def conv(cin, cout):
+        return {
+            "w": ParamDef((3, 3, cin, cout), (None, None, None, None), init="conv_scaled", dtype=dtype),
+            "b": ParamDef((cout,), (None,), init="zeros", dtype=dtype),
+        }
+
+    flat = (hw // 4) * (hw // 4) * 64
+    return {
+        "c1": conv(channels, 32),
+        "c2": conv(32, 32),
+        "c3": conv(32, 64),
+        "c4": conv(64, 64),
+        "fc": {
+            "w": ParamDef((flat, 512), (None, None), init="scaled", dtype=dtype),
+            "b": ParamDef((512,), (None,), init="zeros", dtype=dtype),
+        },
+        "out": {
+            "w": ParamDef((512, n_classes), (None, None), init="scaled", dtype=dtype),
+            "b": ParamDef((n_classes,), (None,), init="zeros", dtype=dtype),
+        },
+    }
+
+
+def _conv(p, x):
+    y = lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + p["b"])
+
+
+def _maxpool(x):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_classifier_apply(params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (b, h, w, c) -> logits."""
+    x = _conv(params["c1"], x)
+    x = _maxpool(_conv(params["c2"], x))
+    x = _conv(params["c3"], x)
+    x = _maxpool(_conv(params["c4"], x))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc"]["w"] + params["fc"]["b"])
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def classifier_loss(apply_fn, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits = apply_fn(params, batch["x"])
+    labels = batch["y"]
+    logz = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"acc": acc}

@@ -1,0 +1,139 @@
+"""Parameter templates: shapes + logical sharding + init in one tree.
+
+Instead of a stateful module system (no flax in this environment — and the
+dry-run needs allocation-free parameter *descriptions* anyway), every model
+is described by a **template pytree** whose leaves are :class:`ParamDef`:
+
+* ``init_params(template, key)``      -> materialized parameter pytree
+* ``shape_structs(template, ...)``    -> ``jax.ShapeDtypeStruct`` tree (dry-run)
+* ``partition_specs(template, rules)``-> ``PartitionSpec`` tree for pjit
+
+Logical axis names used in templates (resolved via a rules dict):
+
+* ``"agent"``  — leading per-agent axis (CDSGD replica axis)
+* ``"layers"`` — stacked layer axis consumed by ``lax.scan`` (never sharded)
+* ``"model"``  — tensor-parallel axis (attention heads / FFN / vocab)
+* ``"expert"`` — expert-parallel axis (MoE), usually mapped to ``model``
+* ``"fsdp"``   — ZeRO-style weight shard axis (hierarchical CDSGD variant)
+* ``None``     — replicated dimension
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.utils.prng import fold_in_name
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """A single parameter: shape, logical axes, initializer."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis name per dim
+    init: str = "normal"                 # normal|zeros|ones|scaled|embed
+    scale: float = 1.0                   # fan-in override for "scaled"
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(pd: ParamDef, key) -> jnp.ndarray:
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, pd.dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, pd.dtype)
+    if pd.init == "normal":
+        return (0.02 * jax.random.normal(key, pd.shape)).astype(pd.dtype)
+    if pd.init == "embed":
+        return (0.05 * jax.random.normal(key, pd.shape)).astype(pd.dtype)
+    if pd.init == "scaled":  # variance-scaling on fan-in (2nd-to-last dim)
+        fan_in = pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1]
+        std = pd.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, pd.shape)).astype(pd.dtype)
+    if pd.init == "conv_scaled":  # HWIO conv kernels: fan-in = H*W*I
+        fan_in = math.prod(pd.shape[:-1])
+        std = pd.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, pd.shape)).astype(pd.dtype)
+    raise ValueError(f"unknown init {pd.init!r}")
+
+
+def init_params(template: PyTree, key) -> PyTree:
+    """Materialize parameters; keys derived per tree path (deterministic)."""
+
+    flat, treedef = jax.tree.flatten_with_path(template, is_leaf=_is_def)
+    leaves = []
+    for path, pd in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        leaves.append(_init_leaf(pd, fold_in_name(key, name)))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def shape_structs(template: PyTree, sharding_fn: Optional[Callable[[ParamDef], Any]] = None) -> PyTree:
+    """ShapeDtypeStruct tree for allocation-free lowering (dry-run)."""
+
+    def leaf(pd: ParamDef):
+        sh = sharding_fn(pd) if sharding_fn is not None else None
+        return jax.ShapeDtypeStruct(pd.shape, pd.dtype, sharding=sh)
+
+    return jax.tree.map(leaf, template, is_leaf=_is_def)
+
+
+def partition_specs(template: PyTree, rules: Dict[str, Any]) -> PyTree:
+    """Resolve logical axes -> mesh axes via ``rules``.
+
+    ``rules`` maps logical name -> mesh axis name (str), tuple of names, or
+    None (replicate).  Missing names replicate.
+    """
+
+    def leaf(pd: ParamDef) -> PartitionSpec:
+        resolved = []
+        for ax in pd.axes:
+            m = rules.get(ax) if ax is not None else None
+            resolved.append(m)
+        # drop trailing Nones for tidiness
+        while resolved and resolved[-1] is None:
+            resolved.pop()
+        return PartitionSpec(*resolved)
+
+    return jax.tree.map(leaf, template, is_leaf=_is_def)
+
+
+def count_params(template: PyTree) -> int:
+    return sum(math.prod(pd.shape) for pd in jax.tree.leaves(template, is_leaf=_is_def))
+
+
+def template_bytes(template: PyTree) -> int:
+    return sum(
+        math.prod(pd.shape) * jnp.dtype(pd.dtype).itemsize
+        for pd in jax.tree.leaves(template, is_leaf=_is_def)
+    )
+
+
+def stack_agent_axis(template: PyTree, n_agents: int) -> PyTree:
+    """Prefix every ParamDef with a leading ``agent`` axis (CDSGD replicas)."""
+
+    def leaf(pd: ParamDef) -> ParamDef:
+        return ParamDef(
+            shape=(n_agents,) + pd.shape,
+            axes=("agent",) + pd.axes,
+            init=pd.init,
+            scale=pd.scale,
+            dtype=pd.dtype,
+        )
+
+    return jax.tree.map(leaf, template, is_leaf=_is_def)

@@ -1,0 +1,341 @@
+"""State-space / linear-recurrence layers: RWKV6 ("Finch") and a selective
+SSM (Mamba-style) used by the Hymba hybrid heads.
+
+Both are written as ``lax.scan`` over time with O(1) recurrent state —
+training shapes scan the full sequence; decode carries the state across
+steps, which is what makes these architectures eligible for the
+``long_500k`` input shape (cost per new token independent of context).
+
+TPU adaptation notes (see DESIGN.md): the RWKV6 WKV recurrence keeps a
+per-head (head_size x head_size) state matrix; the chunked Pallas kernel in
+:mod:`repro.kernels.rwkv_scan` processes the sequence in VMEM-resident
+chunks with the same semantics (validated against :func:`wkv6_scan`).
+Simplifications vs the reference implementation, recorded in DESIGN.md:
+static token-shift interpolation weights (no inner LoRA on the mix
+coefficients) and RMS output norm instead of per-head GroupNorm; the
+data-dependent decay LoRA — the defining feature of RWKV-*6* — is kept.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn.layers import rmsnorm, rmsnorm_template
+from repro.nn.param import ParamDef
+
+
+# --------------------------------------------------------------------------
+# RWKV6
+# --------------------------------------------------------------------------
+
+
+def rwkv6_template(d: int, d_ff: int, *, head_size: int = 64, decay_lora: int = 64,
+                   dtype=jnp.float32) -> Dict[str, Any]:
+    n_h = d // head_size
+    tm = {
+        # token-shift interpolation coefficients (static simplification)
+        "mu_r": ParamDef((d,), (None,), init="zeros", dtype=dtype),
+        "mu_k": ParamDef((d,), (None,), init="zeros", dtype=dtype),
+        "mu_v": ParamDef((d,), (None,), init="zeros", dtype=dtype),
+        "mu_w": ParamDef((d,), (None,), init="zeros", dtype=dtype),
+        "mu_g": ParamDef((d,), (None,), init="zeros", dtype=dtype),
+        "wr": ParamDef((d, d), ("fsdp", "tp"), init="scaled", dtype=dtype),
+        "wk": ParamDef((d, d), ("fsdp", "tp"), init="scaled", dtype=dtype),
+        "wv": ParamDef((d, d), ("fsdp", "tp"), init="scaled", dtype=dtype),
+        "wg": ParamDef((d, d), ("fsdp", "tp"), init="scaled", dtype=dtype),
+        "wo": ParamDef((d, d), ("tp", "fsdp"), init="scaled", dtype=dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x_w A) B))
+        "w0": ParamDef((d,), (None,), init="zeros", dtype=dtype),
+        "wA": ParamDef((d, decay_lora), ("fsdp", None), init="scaled", dtype=dtype),
+        "wB": ParamDef((decay_lora, d), (None, "fsdp"), init="scaled", scale=0.1, dtype=dtype),
+        "u": ParamDef((n_h, head_size), (None, None), init="zeros", dtype=dtype),  # bonus
+        "ln_out": rmsnorm_template(d, dtype),
+    }
+    cm = {
+        "mu_ck": ParamDef((d,), (None,), init="zeros", dtype=dtype),
+        "mu_cr": ParamDef((d,), (None,), init="zeros", dtype=dtype),
+        "wck": ParamDef((d, d_ff), ("fsdp", "tp"), init="scaled", dtype=dtype),
+        "wcv": ParamDef((d_ff, d), ("tp", "fsdp"), init="scaled", dtype=dtype),
+        "wcr": ParamDef((d, d), ("fsdp", None), init="scaled", dtype=dtype),
+    }
+    return {"time_mix": tm, "channel_mix": cm}
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x[t] -> x[t-1]; first position uses `prev` (or zeros)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def wkv6_scan(r, k, v, w, u, state0=None):
+    """The WKV6 recurrence.
+
+    r,k,v,w: (b, s, n_h, hs); u: (n_h, hs); state: (b, n_h, hs, hs)
+      y_t   = r_t . (S_t + (u * k_t) v_t^T)
+      S_t+1 = diag(w_t) S_t + k_t v_t^T
+    Returns (y (b,s,n_h,hs), final state).
+    """
+    b, s, n_h, hs = r.shape
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    s0 = jnp.zeros((b, n_h, hs, hs), f32) if state0 is None else state0.astype(f32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # (b, n_h, hs)
+        kv = kt[..., :, None] * vt[..., None, :]  # (b, n_h, hs, hs)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S_new = wt[..., :, None] * S + kv
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    S, ys = lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+def wkv6_chunked(r, k, v, w, u, state0=None, *, chunk: int = 32):
+    """Chunked (matmul-form) WKV6 — numerically identical recurrence,
+    O(S/C) scan steps instead of O(S), intra-chunk work on the MXU.
+
+    Within a chunk with cumulative decays ``A_t = prod_{tau<=t} w_tau``:
+
+        y_t   = (r_t * A_{t-1}) . S_0
+              + sum_{tau<t} [ (r_t * A_{t-1}/A_tau) . k_tau ] v_tau
+              + (r_t . (u * k_t)) v_t
+        S_C   = diag(A_C) S_0 + sum_tau diag(A_C/A_tau) k_tau v_tau^T
+
+    Decay *ratios* are always <= 1 so the products cannot overflow; the
+    1/A_tau factors bound the usable chunk size (f32: chunk <= ~32 for
+    worst-case decays) — the default is chosen accordingly.  This is the
+    §Perf optimization for the rwkv6 prefill/train memory term: the scan
+    trip count drops 32x and the state stops round-tripping per token.
+    """
+    b, s, n_h, hs = r.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} must be a multiple of chunk {chunk}")
+    n_chunks = s // chunk
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    u = u.astype(f32)
+    s0 = jnp.zeros((b, n_h, hs, hs), f32) if state0 is None else state0.astype(f32)
+
+    # (n_chunks, b, C, n_h, hs)
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(b, n_chunks, chunk, n_h, hs), 1, 0)
+
+    rc, kc, vc, wc = (to_chunks(a) for a in (r, k, v, w))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)   # strict lower: tau < t
+
+    def step(S, xs):
+        rb, kb, vb, wb = xs                         # (b, C, n_h, hs)
+        # log-space with a mid-chunk shift: halves the exponent range of the
+        # 1/A_tau factors (decays below ~exp(-80/C) per step still underflow
+        # f32 — chunk size is the knob; C=32 covers all practical RWKV decays)
+        lw = jnp.log(jnp.maximum(wb, 1e-38))
+        l_inc = jnp.cumsum(lw, axis=1)               # log A_t (inclusive)
+        mid = l_inc[:, chunk // 2 : chunk // 2 + 1]  # per-(b,h,hs) shift
+        a_inc = jnp.exp(l_inc - mid)
+        a_exc = jnp.exp(l_inc - lw - mid)            # A_{t-1} (exclusive)
+        r_dec = rb * a_exc                           # r_t * A_{t-1} * e^-mid
+        k_dec = kb / a_inc                           # k_tau * e^mid / A_tau
+        # inter-chunk: y_inter[t] = (r_t A_{t-1}) . S; undo the shift on S's
+        # contracted dim (S_shift[i,j] = e^{mid_i} S[i,j])
+        s_shift = jnp.exp(mid[:, 0])[..., None] * S  # (b, n_h, hs, hs)
+        y_inter = jnp.einsum("bchi,bhij->bchj", r_dec, s_shift)
+        # intra-chunk pair scores: shifts cancel in r_dec . k_dec
+        p = jnp.einsum("bthi,bchi->bhtc", r_dec, k_dec)
+        p = jnp.where(mask[None, None], p, 0.0)
+        y_intra = jnp.einsum("bhtc,bchj->bthj", p, vb)
+        # current-token bonus: (r_t . (u * k_t)) v_t
+        y_diag = vb * jnp.sum(rb * u[None, None] * kb, -1, keepdims=True)
+        y = y_inter + y_intra + y_diag
+        # state update: S' = diag(A_C) S + sum_tau diag(A_C/A_tau) k_tau v_tau^T
+        a_last_true = jnp.exp(l_inc[:, -1])          # (b, n_h, hs)
+        k_scaled = kb * (a_inc[:, -1:] / a_inc)      # A_C/A_tau (shift cancels)
+        s_new = a_last_true[..., None] * S + jnp.einsum("bchi,bchj->bhij", k_scaled, vb)
+        return s_new, y
+
+    S, ys = lax.scan(step, s0, (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, n_h, hs)
+    return y, S
+
+
+def rwkv6_time_mix(params, x, *, head_size: int = 64,
+                   state: Optional[Dict[str, jnp.ndarray]] = None,
+                   chunk: int = 32):
+    # chunk=32 is decay-safe for per-step decays >= ~0.004 (f32 exp range
+    # after the mid-chunk shift); chunk=64 halves the memory term again
+    # (EXPERIMENTS.md §Perf C3) but requires decays >= ~0.06 — opt-in.
+    """Returns (y, new_state). state = {"shift": (b,d), "S": (b,n_h,hs,hs)}."""
+    b, s, d = x.shape
+    n_h = d // head_size
+    prev = None if state is None else state["shift"]
+    xp = _token_shift(x, prev)
+    xr = _lerp(x, xp, params["mu_r"])
+    xk = _lerp(x, xp, params["mu_k"])
+    xv = _lerp(x, xp, params["mu_v"])
+    xw = _lerp(x, xp, params["mu_w"])
+    xg = _lerp(x, xp, params["mu_g"])
+
+    r = jnp.einsum("bsd,de->bse", xr, params["wr"]).reshape(b, s, n_h, head_size)
+    k = jnp.einsum("bsd,de->bse", xk, params["wk"]).reshape(b, s, n_h, head_size)
+    v = jnp.einsum("bsd,de->bse", xv, params["wv"]).reshape(b, s, n_h, head_size)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["wg"]))
+
+    dd = jnp.einsum("bsd,dr->bsr", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, params["wA"])), params["wB"])
+    w = jnp.exp(-jnp.exp(params["w0"].astype(jnp.float32) + dd.astype(jnp.float32)))
+    w = w.reshape(b, s, n_h, head_size)
+
+    s0 = None if state is None else state["S"]
+    # chunked matmul form for long sequences (see wkv6_chunked); per-step
+    # scan for short/decode shapes where state carry across calls matters
+    if s >= 64 and s % chunk == 0:
+        y, S = wkv6_chunked(r, k, v, w, params["u"].astype(jnp.float32), s0, chunk=chunk)
+    else:
+        y, S = wkv6_scan(r, k, v, w, params["u"].astype(jnp.float32), s0)
+    y = rmsnorm(params["ln_out"], y.reshape(b, s, d).astype(x.dtype)) * g
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"])
+    new_state = {"shift": x[:, -1, :], "S": S}
+    return out, new_state
+
+
+def rwkv6_channel_mix(params, x, state: Optional[jnp.ndarray] = None):
+    """state = (b, d) previous token. Returns (y, new_state)."""
+    xp = _token_shift(x, state)
+    xk = _lerp(x, xp, params["mu_ck"])
+    xr = _lerp(x, xp, params["mu_cr"])
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, params["wck"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, params["wcv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["wcr"]))
+    return r * kv, x[:, -1, :]
+
+
+def rwkv6_init_state(batch: int, d: int, *, head_size: int = 64, dtype=jnp.float32):
+    n_h = d // head_size
+    return {
+        "tm": {"shift": jnp.zeros((batch, d), dtype),
+               "S": jnp.zeros((batch, n_h, head_size, head_size), jnp.float32)},
+        "cm": jnp.zeros((batch, d), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Selective SSM (Mamba-style) for Hymba hybrid heads
+# --------------------------------------------------------------------------
+
+
+def mamba_template(d: int, *, d_inner: Optional[int] = None, n_state: int = 16,
+                   dtype=jnp.float32) -> Dict[str, ParamDef]:
+    di = d_inner or d
+    return {
+        "w_in": ParamDef((d, 2 * di), ("fsdp", "tp"), init="scaled", dtype=dtype),
+        "w_dt": ParamDef((d, di), ("fsdp", "tp"), init="scaled", scale=0.1, dtype=dtype),
+        "dt_bias": ParamDef((di,), ("tp",), init="zeros", dtype=dtype),
+        "w_b": ParamDef((d, n_state), ("fsdp", None), init="scaled", dtype=dtype),
+        "w_c": ParamDef((d, n_state), ("fsdp", None), init="scaled", dtype=dtype),
+        "a_log": ParamDef((di, n_state), ("tp", None), init="zeros", dtype=dtype),
+        "d_skip": ParamDef((di,), ("tp",), init="ones", dtype=dtype),
+        "w_out": ParamDef((di, d), ("tp", "fsdp"), init="scaled", dtype=dtype),
+    }
+
+
+def mamba_scan(u, dt, b_in, c_in, a, state0=None):
+    """h_t = exp(dt*A) h_{t-1} + dt * (B_t outer u_t); y_t = h_t . C_t.
+
+    u,dt: (b, s, di); b_in,c_in: (b, s, n); a: (di, n).
+    state: (b, di, n).  Returns (y (b,s,di), final state).
+    """
+    bsz, s, di = u.shape
+    n = b_in.shape[-1]
+    f32 = jnp.float32
+    u, dt, b_in, c_in = (x.astype(f32) for x in (u, dt, b_in, c_in))
+    h0 = jnp.zeros((bsz, di, n), f32) if state0 is None else state0.astype(f32)
+    a = a.astype(f32)
+
+    def step(h, xs):
+        ut, dtt, bt, ct = xs                              # (b,di), (b,di), (b,n), (b,n)
+        decay = jnp.exp(dtt[..., None] * a[None])          # (b, di, n); a <= 0
+        h_new = decay * h + (dtt * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h_new, ct)
+        return h_new, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (u, dt, b_in, c_in))
+    h, ys = lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mamba_chunked(u, dt, b_in, c_in, a, state0=None, *, chunk: int = 32):
+    """Chunked selective-SSM scan (prefix-sum form) — §Perf optimization.
+
+    Within a chunk, with per-step decays ``a_t = exp(dt_t * A)`` and drives
+    ``g_t = dt_t u_t (x) B_t``:  ``h_t = P_t * (h_0 + sum_{tau<=t} g_tau/P_tau)``
+    where ``P_t = prod_{tau<=t} a_tau`` — a cumulative product + cumulative
+    sum instead of an O(S) sequential scan.  Same overflow bound as
+    :func:`wkv6_chunked` (ratios only; 1/P_tau bounds chunk size).
+    """
+    bsz, s, di = u.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} must divide chunk {chunk}")
+    n_chunks = s // chunk
+    f32 = jnp.float32
+    u, dt, b_in, c_in = (x.astype(f32) for x in (u, dt, b_in, c_in))
+    a = a.astype(f32)
+    h0 = jnp.zeros((bsz, di, n), f32) if state0 is None else state0.astype(f32)
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(bsz, n_chunks, chunk, *x.shape[2:]), 1, 0)
+
+    uc, dtc, bc, cc = (to_chunks(x) for x in (u, dt, b_in, c_in))
+
+    def step(h, xs):
+        ub, dtb, bb, cb = xs                                   # (b, C, ...)
+        decay = jnp.exp(dtb[..., None] * a[None, None])        # (b, C, di, n)
+        g = (dtb * ub)[..., None] * bb[:, :, None, :]          # (b, C, di, n)
+
+        # stable intra-chunk composition (no divisions): the recurrence
+        # h' = a h + g composes as (a2,g2)o(a1,g1) = (a1 a2, a2 g1 + g2)
+        def combine(x, y):
+            a1, g1 = x
+            a2, g2 = y
+            return a1 * a2, a2 * g1 + g2
+
+        p_inc, z = lax.associative_scan(combine, (decay, g), axis=1)
+        h_t = p_inc * h[:, None] + z                           # (b, C, di, n)
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, cb)
+        return h_t[:, -1], y
+
+    h, ys = lax.scan(step, h0, (uc, dtc, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, di)
+    return y, h
+
+
+def mamba_apply(params, x, state: Optional[jnp.ndarray] = None):
+    """Returns (y (b,s,d), new_state (b,di,n))."""
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = jax.nn.silu(u)
+    dt = jax.nn.softplus(jnp.einsum("bsd,de->bse", x, params["w_dt"]) + params["dt_bias"])
+    b_in = jnp.einsum("bsd,dn->bsn", x, params["w_b"])
+    c_in = jnp.einsum("bsd,dn->bsn", x, params["w_c"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))       # negative definite
+    s = x.shape[1]
+    if s >= 64 and s % 32 == 0:
+        y, h = mamba_chunked(u, dt, b_in, c_in, a, state, chunk=32)
+    else:
+        y, h = mamba_scan(u, dt, b_in, c_in, a, state)
+    y = (y.astype(x.dtype) + params["d_skip"] * u) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"]), h
+
+
+def mamba_init_state(batch: int, d_inner: int, n_state: int, dtype=jnp.float32):
+    return jnp.zeros((batch, d_inner, n_state), jnp.float32)

@@ -1,0 +1,588 @@
+"""Model assembly: templates, forward, loss, KV-cache decode for all ten
+assigned architectures (dense / MoE / RWKV6 / hybrid / enc-dec / VLM).
+
+Layers are *stacked* along a leading ``layers`` axis and executed with
+``lax.scan`` (optionally ``jax.checkpoint``-rematerialized), so the lowered
+HLO is O(one layer) regardless of depth — required for the 512-device
+dry-run compiles and the production-sane choice anyway.  Architectures with
+heterogeneous layers are split into homogeneous *groups* (e.g. DeepSeek-V2:
+1 dense block + 59 MoE blocks; Seamless: encoder stack + decoder stack);
+gemma-style local/global interleave stays a single group with a per-layer
+``is_global`` scan input selecting the attention window.
+
+Public API:
+  model_template(cfg)                       -> ParamDef tree
+  forward(cfg, params, batch)               -> (logits, aux)  [train/prefill]
+  loss_fn(cfg, params, batch)               -> (scalar, metrics)
+  init_cache(cfg, batch, max_len)           -> cache pytree
+  decode_step(cfg, params, cache, tok, idx) -> (logits, new cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention as attn
+from repro.nn import moe as moe_lib
+from repro.nn import ssm as ssm_lib
+from repro.nn.layers import (
+    embed,
+    embedding_template,
+    make_norm,
+    mlp,
+    mlp_template,
+    unembed,
+    unembed_template,
+)
+from repro.nn.param import ParamDef
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+
+def stack_layers(template: PyTree, n: int) -> PyTree:
+    def leaf(pd: ParamDef) -> ParamDef:
+        return ParamDef((n,) + pd.shape, ("layers",) + pd.axes, init=pd.init,
+                        scale=pd.scale, dtype=pd.dtype)
+
+    return jax.tree.map(leaf, template, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _norm(cfg: ArchConfig):
+    return make_norm(cfg.norm_kind)
+
+
+def _attn_template(cfg: ArchConfig):
+    if cfg.attn_kind == "mla":
+        return attn.mla_template(
+            cfg.d_model, cfg.n_heads,
+            kv_lora=cfg.kv_lora_rank, q_lora=cfg.q_lora_rank,
+            qk_nope=cfg.qk_nope_head_dim, qk_rope=cfg.qk_rope_head_dim,
+            v_head=cfg.v_head_dim, dtype=cfg.dtype)
+    return attn.gqa_template(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim_, dtype=cfg.dtype)
+
+
+def _self_attention(cfg: ArchConfig, params, x, positions, *, window):
+    if cfg.attn_kind == "mla":
+        return attn.mla_attention(params, x, positions,
+                                  qk_nope=cfg.qk_nope_head_dim,
+                                  qk_rope=cfg.qk_rope_head_dim,
+                                  rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk)
+    return attn.gqa_attention(params, x, positions, causal=True, window=window,
+                              rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk)
+
+
+def _resolve_window(cfg: ArchConfig, is_global=None):
+    """None = unmasked-causal; is_global is a traced bool for local_global."""
+    if cfg.attn_kind == "full" or cfg.attn_kind == "mla":
+        return None
+    if cfg.attn_kind == "swa":
+        return cfg.window
+    if cfg.attn_kind == "local_global":
+        big = jnp.int32(2**30)
+        return jnp.where(is_global, big, jnp.int32(cfg.window))
+    return None
+
+
+# --------------------------------------------------------------------------
+# block templates
+# --------------------------------------------------------------------------
+
+
+def dense_block_template(cfg: ArchConfig) -> Dict[str, Any]:
+    nt, _ = _norm(cfg)
+    return {
+        "ln1": nt(cfg.d_model, cfg.dtype),
+        "attn": _attn_template(cfg),
+        "ln2": nt(cfg.d_model, cfg.dtype),
+        "mlp": mlp_template(cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated, dtype=cfg.dtype),
+    }
+
+
+def moe_block_template(cfg: ArchConfig) -> Dict[str, Any]:
+    nt, _ = _norm(cfg)
+    return {
+        "ln1": nt(cfg.d_model, cfg.dtype),
+        "attn": _attn_template(cfg),
+        "ln2": nt(cfg.d_model, cfg.dtype),
+        "moe": moe_lib.moe_template(cfg.d_model, cfg.d_ff_expert, cfg.n_experts,
+                                    n_shared=cfg.n_shared_experts,
+                                    gated=cfg.mlp_gated, dtype=cfg.dtype),
+    }
+
+
+def rwkv_block_template(cfg: ArchConfig) -> Dict[str, Any]:
+    nt, _ = _norm(cfg)
+    hs = min(64, cfg.d_model)
+    t = ssm_lib.rwkv6_template(cfg.d_model, cfg.d_ff, head_size=hs, dtype=cfg.dtype)
+    return {"ln1": nt(cfg.d_model, cfg.dtype), "ln2": nt(cfg.d_model, cfg.dtype), **t}
+
+
+def hymba_block_template(cfg: ArchConfig) -> Dict[str, Any]:
+    nt, _ = _norm(cfg)
+    return {
+        "ln1": nt(cfg.d_model, cfg.dtype),
+        "attn": _attn_template(cfg),
+        "mamba": ssm_lib.mamba_template(cfg.d_model, n_state=cfg.ssm_state, dtype=cfg.dtype),
+        "ln_a": nt(cfg.d_model, cfg.dtype),     # per-path output norms (Hymba fusion)
+        "ln_s": nt(cfg.d_model, cfg.dtype),
+        "ln2": nt(cfg.d_model, cfg.dtype),
+        "mlp": mlp_template(cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated, dtype=cfg.dtype),
+    }
+
+
+def encoder_block_template(cfg: ArchConfig) -> Dict[str, Any]:
+    nt, _ = _norm(cfg)
+    return {
+        "ln1": nt(cfg.d_model, cfg.dtype),
+        "attn": _attn_template(cfg),
+        "ln2": nt(cfg.d_model, cfg.dtype),
+        "mlp": mlp_template(cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated, dtype=cfg.dtype),
+    }
+
+
+def decoder_xattn_block_template(cfg: ArchConfig) -> Dict[str, Any]:
+    nt, _ = _norm(cfg)
+    return {
+        "ln1": nt(cfg.d_model, cfg.dtype),
+        "attn": _attn_template(cfg),
+        "ln_x": nt(cfg.d_model, cfg.dtype),
+        "xattn": attn.gqa_template(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim_, dtype=cfg.dtype),
+        "ln2": nt(cfg.d_model, cfg.dtype),
+        "mlp": mlp_template(cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated, dtype=cfg.dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# model template
+# --------------------------------------------------------------------------
+
+
+def layer_groups(cfg: ArchConfig):
+    """Ordered (name, count, template_fn) describing homogeneous stacks.
+
+    local_global archs (gemma3) are regrouped into period-sized
+    *super-blocks* — scan over n_super blocks, each unrolling `period`
+    layers with a STATIC window per sub-layer (local..local, global) — so
+    the banded-attention path applies to local layers (§Perf).  Layer order
+    is exactly preserved; a non-multiple tail stays as its own stack.
+    """
+    if cfg.attn_kind == "local_global" and cfg.local_global_period > 1:
+        p = cfg.local_global_period
+        n_super, tail = divmod(cfg.n_layers, p)
+        groups = []
+        if n_super:
+            groups.append(("lg_super", n_super,
+                           lambda c: stack_layers(dense_block_template(c), p)))
+        if tail:
+            groups.append(("lg_tail", tail, dense_block_template))
+        return groups
+    if cfg.is_encoder_decoder:
+        return [("enc", cfg.enc_layers, encoder_block_template),
+                ("dec", cfg.n_layers, decoder_xattn_block_template)]
+    if cfg.is_moe:
+        groups = []
+        if cfg.n_dense_layers:
+            groups.append(("dense", cfg.n_dense_layers, dense_block_template))
+        groups.append(("moe", cfg.n_layers - cfg.n_dense_layers, moe_block_template))
+        return groups
+    if cfg.ssm_kind == "rwkv6":
+        return [("rwkv", cfg.n_layers, rwkv_block_template)]
+    if cfg.hybrid:
+        return [("hymba", cfg.n_layers, hymba_block_template)]
+    return [("dense", cfg.n_layers, dense_block_template)]
+
+
+def model_template(cfg: ArchConfig) -> Dict[str, Any]:
+    nt, _ = _norm(cfg)
+    t: Dict[str, Any] = {
+        "embed": embedding_template(cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "final_norm": nt(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        t["unembed"] = unembed_template(cfg.d_model, cfg.vocab_size, cfg.dtype)
+    if cfg.modality in ("audio", "vlm"):
+        # projector from stub frontend embeddings into d_model
+        t["frontend_proj"] = {
+            "w": ParamDef((cfg.frontend_dim, cfg.d_model), (None, "fsdp"),
+                          init="scaled", dtype=cfg.dtype)
+        }
+    t["groups"] = {
+        name: stack_layers(tmpl_fn(cfg), count)
+        for name, count, tmpl_fn in layer_groups(cfg)
+        if count > 0
+    }
+    return t
+
+
+# --------------------------------------------------------------------------
+# block apply (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _block_apply(cfg: ArchConfig, group: str, params, x, positions, is_global,
+                 window_override=None):
+    """Returns (x, aux_scalar)."""
+    _, norm = _norm(cfg)
+    aux = jnp.float32(0.0)
+    if group == "rwkv":
+        y, _ = ssm_lib.rwkv6_time_mix(params["time_mix"], norm(params["ln1"], x),
+                                      head_size=min(64, cfg.d_model))
+        x = x + y
+        y, _ = ssm_lib.rwkv6_channel_mix(params["channel_mix"], norm(params["ln2"], x))
+        return x + y, aux
+
+    window = window_override if window_override is not None else _resolve_window(cfg, is_global)
+    if window_override == "full":
+        window = None
+    if group == "hymba":
+        h = norm(params["ln1"], x)
+        a = attn.gqa_attention(params["attn"], h, positions, causal=True,
+                               window=window, rope_theta=cfg.rope_theta,
+                               chunk=cfg.attn_chunk)
+        s, _ = ssm_lib.mamba_apply(params["mamba"], h)
+        x = x + 0.5 * (norm(params["ln_a"], a) + norm(params["ln_s"], s))
+        x = x + mlp(params["mlp"], norm(params["ln2"], x), act=cfg.act)
+        return x, aux
+
+    if group == "enc":
+        h = norm(params["ln1"], x)
+        a = attn.gqa_attention(params["attn"], h, positions, causal=False,
+                               rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk)
+        x = x + a
+        x = x + mlp(params["mlp"], norm(params["ln2"], x), act=cfg.act)
+        return x, aux
+
+    # dense / moe / dec share the self-attention sublayer
+    h = norm(params["ln1"], x)
+    a = _self_attention(cfg, params["attn"], h, positions, window=window)
+    x = x + a
+    if group == "dec":
+        raise ValueError("decoder blocks need encoder context; use _dec_block_apply")
+    if group == "moe":
+        y, aux = moe_lib.moe_apply(params["moe"], norm(params["ln2"], x),
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor, act=cfg.act)
+        return x + y, aux
+    return x + mlp(params["mlp"], norm(params["ln2"], x), act=cfg.act), aux
+
+
+def _dec_block_apply(cfg: ArchConfig, params, x, positions, enc_out, enc_positions):
+    _, norm = _norm(cfg)
+    h = norm(params["ln1"], x)
+    x = x + _self_attention(cfg, params["attn"], h, positions, window=None)
+    h = norm(params["ln_x"], x)
+    x = x + attn.gqa_attention(params["xattn"], h, positions, kv_x=enc_out,
+                               kv_positions=enc_positions, use_rope=False,
+                               chunk=cfg.attn_chunk)
+    return x + mlp(params["mlp"], norm(params["ln2"], x), act=cfg.act), jnp.float32(0.0)
+
+
+def _scan_group(block_fn, stacked_params, x, xs_extra=None, *, remat: bool):
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    def body(h, scan_in):
+        p, extra = scan_in
+        h2, aux = fn(p, h, extra)
+        return h2, aux
+
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    if xs_extra is None:
+        xs_extra = jnp.zeros((n,), jnp.int32)
+    x, auxs = lax.scan(body, x, (stacked_params, xs_extra))
+    return x, jnp.sum(auxs)
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token (+ frontend) embeddings. Returns (x, positions)."""
+    x = embed(params["embed"], batch["inputs"])
+    if cfg.modality in ("audio", "vlm") and not cfg.is_encoder_decoder:
+        fe = jnp.einsum("bfd,de->bfe", batch["frontend"].astype(x.dtype),
+                        params["frontend_proj"]["w"])
+        x = jnp.concatenate([fe, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    return x, positions
+
+
+def _is_global_xs(cfg: ArchConfig, count: int):
+    return None   # local_global is handled structurally (lg_super groups)
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat: bool = False):
+    """Training / prefill forward. Returns (logits, aux dict)."""
+    aux_total = jnp.float32(0.0)
+
+    if cfg.is_encoder_decoder:
+        # encoder over stub frontend embeddings
+        fe = jnp.einsum("bfd,de->bfe", batch["frontend"],
+                        params["frontend_proj"]["w"])
+        enc_pos = jnp.arange(fe.shape[1])
+        enc_x, aux = _scan_group(
+            lambda p, h, e: _block_apply(cfg, "enc", p, h, enc_pos, e),
+            params["groups"]["enc"], fe, remat=remat)
+        aux_total += aux
+        _, norm = _norm(cfg)
+        enc_out = enc_x
+
+        x = embed(params["embed"], batch["inputs"])
+        pos = jnp.arange(x.shape[1])
+        x, aux = _scan_group(
+            lambda p, h, e: _dec_block_apply(cfg, p, h, pos, enc_out, enc_pos),
+            params["groups"]["dec"], x, remat=remat)
+        aux_total += aux
+    else:
+        x, pos = _embed_inputs(cfg, params, batch)
+        for name, count, _ in layer_groups(cfg):
+            if count == 0:
+                continue
+            if name == "lg_super":
+                period = cfg.local_global_period
+
+                def super_apply(p, h, e):
+                    a = jnp.float32(0.0)
+                    for i in range(period):
+                        sub = jax.tree.map(lambda t: t[i], p)
+                        win = "full" if cfg.layer_is_global(i) else cfg.window
+                        h, ai = _block_apply(cfg, "dense", sub, h, pos, None,
+                                             window_override=win)
+                        a += ai
+                    return h, a
+
+                x, aux = _scan_group(super_apply, params["groups"][name], x,
+                                     remat=remat)
+            elif name == "lg_tail":
+                x, aux = _scan_group(
+                    lambda p, h, e: _block_apply(cfg, "dense", p, h, pos, None,
+                                                 window_override=cfg.window),
+                    params["groups"][name], x, remat=remat)
+            else:
+                xs = _is_global_xs(cfg, count)
+                x, aux = _scan_group(
+                    lambda p, h, e, _n=name: _block_apply(cfg, _n, p, h, pos, e),
+                    params["groups"][name], x, xs_extra=xs, remat=remat)
+            aux_total += aux
+
+    _, norm = _norm(cfg)
+    x = norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+    else:
+        logits = unembed(params["unembed"], x)
+    return logits, {"moe_aux": aux_total}
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray, mask=None):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat: bool = False):
+    logits, aux = forward(cfg, params, batch, remat=remat)
+    tgt = batch["targets"]
+    if cfg.modality in ("audio", "vlm") and not cfg.is_encoder_decoder:
+        # frontend positions carry no LM targets: score only the text tail
+        logits = logits[:, -tgt.shape[1]:, :]
+    loss = cross_entropy(logits, tgt, batch.get("mask"))
+    total = loss + cfg.router_aux_weight * aux["moe_aux"]
+    metrics = {"ce": loss, "moe_aux": aux["moe_aux"]}
+    return total, metrics
+
+
+# --------------------------------------------------------------------------
+# decode (serve): KV caches / recurrent state per layer group
+# --------------------------------------------------------------------------
+
+
+def _block_cache_init(cfg: ArchConfig, group: str, batch: int, max_len: int):
+    dt = cfg.dtype
+    if group == "lg_super":
+        single = attn.gqa_init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim_, dtype=dt)
+        p = cfg.local_global_period
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (p,) + x.shape), single)
+    if group == "lg_tail":
+        return attn.gqa_init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim_, dtype=dt)
+    if group == "rwkv":
+        hs = min(64, cfg.d_model)
+        return ssm_lib.rwkv6_init_state(batch, cfg.d_model, head_size=hs, dtype=dt)
+    if group == "hymba":
+        return {
+            "attn": attn.gqa_init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim_, dtype=dt),
+            "mamba": ssm_lib.mamba_init_state(batch, cfg.d_model, cfg.ssm_state, dt),
+        }
+    if cfg.attn_kind == "mla":
+        return attn.mla_init_cache(batch, max_len, cfg.kv_lora_rank, cfg.qk_rope_head_dim, dt)
+    return attn.gqa_init_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim_, dtype=dt)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int = 0):
+    """Stacked (leading layer axis) cache pytree per group."""
+    cache: Dict[str, Any] = {}
+    for name, count, _ in layer_groups(cfg):
+        if count == 0:
+            continue
+        if name == "enc":
+            continue  # encoder runs once at prefill; no cache
+        single = _block_cache_init(cfg, name, batch, max_len)
+        cache[name] = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), single)
+        if name == "dec":
+            # precomputed encoder output consumed by every cross-attn layer
+            cache["enc_out"] = jnp.zeros((batch, enc_len, cfg.d_model), cfg.dtype)
+    return cache
+
+
+def _block_decode(cfg: ArchConfig, group: str, params, cache, x, cur_index, is_global,
+                  window_override=None):
+    """One token through one block. Returns (x, new_cache)."""
+    _, norm = _norm(cfg)
+    if group == "rwkv":
+        h = norm(params["ln1"], x)
+        y, tm = ssm_lib.rwkv6_time_mix(params["time_mix"], h,
+                                       head_size=min(64, cfg.d_model), state=cache["tm"])
+        x = x + y
+        h = norm(params["ln2"], x)
+        y, cm = ssm_lib.rwkv6_channel_mix(params["channel_mix"], h, state=cache["cm"])
+        return x + y, {"tm": tm, "cm": cm}
+
+    window = window_override if window_override is not None else _resolve_window(cfg, is_global)
+    if window_override == "full":
+        window = None
+    if group == "hymba":
+        h = norm(params["ln1"], x)
+        a, attn_cache = attn.gqa_decode(params["attn"], cache["attn"], h, cur_index,
+                                        window=window, rope_theta=cfg.rope_theta)
+        s, mamba_state = ssm_lib.mamba_apply(params["mamba"], h, state=cache["mamba"])
+        x = x + 0.5 * (norm(params["ln_a"], a) + norm(params["ln_s"], s))
+        x = x + mlp(params["mlp"], norm(params["ln2"], x), act=cfg.act)
+        return x, {"attn": attn_cache, "mamba": mamba_state}
+
+    h = norm(params["ln1"], x)
+    if cfg.attn_kind == "mla":
+        a, new_cache = attn.mla_decode(params["attn"], cache, h, cur_index,
+                                       qk_nope=cfg.qk_nope_head_dim,
+                                       qk_rope=cfg.qk_rope_head_dim,
+                                       rope_theta=cfg.rope_theta)
+    else:
+        a, new_cache = attn.gqa_decode(params["attn"], cache, h, cur_index,
+                                       window=window, rope_theta=cfg.rope_theta)
+    x = x + a
+    if group == "moe":
+        y, _ = moe_lib.moe_apply(params["moe"], norm(params["ln2"], x),
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor, act=cfg.act)
+        return x + y, new_cache
+    return x + mlp(params["mlp"], norm(params["ln2"], x), act=cfg.act), new_cache
+
+
+def _dec_block_decode(cfg: ArchConfig, params, cache, x, cur_index, enc_out):
+    _, norm = _norm(cfg)
+    h = norm(params["ln1"], x)
+    a, new_cache = attn.gqa_decode(params["attn"], cache, h, cur_index,
+                                   rope_theta=cfg.rope_theta)
+    x = x + a
+    h = norm(params["ln_x"], x)
+    x = x + attn.gqa_attention(params["xattn"], h,
+                               jnp.full((1,), cur_index, jnp.int32),
+                               causal=False, kv_x=enc_out,
+                               kv_positions=jnp.arange(enc_out.shape[1]),
+                               use_rope=False, chunk=cfg.attn_chunk)
+    return x + mlp(params["mlp"], norm(params["ln2"], x), act=cfg.act), new_cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, cur_index):
+    """One decode step. tokens: (b, 1) int32; returns (logits (b, vocab), cache)."""
+    x = embed(params["embed"], tokens)
+    new_cache: Dict[str, Any] = dict(cache)
+
+    if cfg.is_encoder_decoder:
+        enc_out = cache["enc_out"]
+
+        def body(h, scan_in):
+            p, c = scan_in
+            h2, c2 = _dec_block_decode(cfg, p, c, h, cur_index, enc_out)
+            return h2, c2
+
+        x, new_dec = lax.scan(body, x, (params["groups"]["dec"], cache["dec"]))
+        new_cache["dec"] = new_dec
+    else:
+        for name, count, _ in layer_groups(cfg):
+            if count == 0:
+                continue
+            if name == "lg_super":
+                period = cfg.local_global_period
+
+                def body_super(h, scan_in):
+                    p, c = scan_in
+                    new_c = []
+                    for i in range(period):
+                        sub_p = jax.tree.map(lambda t: t[i], p)
+                        sub_c = jax.tree.map(lambda t: t[i], c)
+                        win = "full" if cfg.layer_is_global(i) else cfg.window
+                        h, c2 = _block_decode(cfg, "dense", sub_p, sub_c, h,
+                                              cur_index, None, window_override=win)
+                        new_c.append(c2)
+                    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_c)
+                    return h, stacked
+
+                x, new_c = lax.scan(body_super, x, (params["groups"][name], cache[name]))
+                new_cache[name] = new_c
+                continue
+            if name == "lg_tail":
+                def body_tail(h, scan_in):
+                    p, c = scan_in
+                    h2, c2 = _block_decode(cfg, "dense", p, c, h, cur_index, None,
+                                           window_override=cfg.window)
+                    return h2, c2
+
+                x, new_c = lax.scan(body_tail, x, (params["groups"][name], cache[name]))
+                new_cache[name] = new_c
+                continue
+
+            def body(h, scan_in, _n=name):
+                p, c, g = scan_in
+                h2, c2 = _block_decode(cfg, _n, p, c, h, cur_index, g)
+                return h2, c2
+
+            xs_global = jnp.zeros((count,), bool)
+            x, new_c = lax.scan(body, x, (params["groups"][name], cache[name], xs_global))
+            new_cache[name] = new_c
+
+    _, norm = _norm(cfg)
+    x = norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+    else:
+        logits = unembed(params["unembed"], x)
+    return logits[:, 0, :], new_cache
+
+
+def encode_for_decode(cfg: ArchConfig, params, frontend: jnp.ndarray):
+    """Run the encoder once; result is stored in the decode cache (enc-dec)."""
+    fe = jnp.einsum("bfd,de->bfe", frontend, params["frontend_proj"]["w"])
+    pos = jnp.arange(fe.shape[1])
+    enc_x, _ = _scan_group(
+        lambda p, h, e: _block_apply(cfg, "enc", p, h, pos, e),
+        params["groups"]["enc"], fe, remat=False)
+    return enc_x

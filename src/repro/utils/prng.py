@@ -1,0 +1,17 @@
+"""PRNG helpers: named, deterministic key derivation."""
+
+from __future__ import annotations
+
+import hashlib
+
+import jax
+
+
+def split_key(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def fold_in_name(key, name: str):
+    """Derive a subkey deterministically from a string name."""
+    h = int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)

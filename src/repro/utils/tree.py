@@ -1,0 +1,79 @@
+"""Pytree arithmetic helpers.
+
+The CDSGD family of optimizers treats the model as an opaque parameter
+pytree; every update rule in :mod:`repro.core.optim` is expressed with the
+small algebra below so that a single implementation covers dense, MoE, SSM
+and encoder-decoder models alike.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: s * x, tree)
+
+
+def tree_axpy(a, x: PyTree, y: PyTree) -> PyTree:
+    """a * x + y, leaf-wise."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_weighted_sum(weights: Sequence, trees: Sequence[PyTree]) -> PyTree:
+    """sum_i weights[i] * trees[i], leaf-wise.
+
+    This is the pytree form of one row of the agent-interaction matrix
+    multiply ``(Pi x)_j = sum_l pi_{jl} x_l`` (paper eq. 5).
+    """
+    if len(weights) != len(trees):
+        raise ValueError(f"{len(weights)} weights vs {len(trees)} trees")
+
+    def leaf(*leaves):
+        acc = weights[0] * leaves[0]
+        for w, l in zip(weights[1:], leaves[1:]):
+            acc = acc + w * l
+        return acc
+
+    return jax.tree.map(leaf, *trees)
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    """Inner product over all leaves (computed in f32)."""
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b))
+    return jnp.sum(jnp.stack(leaves)) if leaves else jnp.float32(0.0)
+
+
+def tree_l2_norm(tree: PyTree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar parameters."""
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

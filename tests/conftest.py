@@ -1,0 +1,16 @@
+"""Shared test fixtures. NOTE: no XLA device-count flags here — smoke tests
+and benches must see 1 CPU device; only dryrun subprocesses get 512."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _np_seed():
+    np.random.seed(0)

@@ -1,0 +1,164 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.consensus_update.consensus_update import (
+    cdsgd_update_2d,
+    cdmsgd_update_2d,
+)
+from repro.kernels.consensus_update.ref import cdsgd_update_ref, cdmsgd_update_ref
+from repro.kernels.consensus_update import ops as cons_ops
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ops import flash_attention_bshd
+from repro.kernels.rwkv_scan.rwkv_scan import wkv6_pallas
+from repro.kernels.rwkv_scan.ref import wkv6_ref
+from repro.kernels.rwkv_scan.ops import wkv6_bsnh
+from repro.nn.ssm import wkv6_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol_for(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------------------
+# consensus update
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows", [8, 64, 300, 513])
+@pytest.mark.parametrize("stencil", [2, 3, 5])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_cdsgd_kernel_sweep(rows, stencil, dt):
+    nb = jax.random.normal(KEY, (stencil, rows, 128)).astype(dt)
+    g = jax.random.normal(jax.random.PRNGKey(1), (rows, 128)).astype(dt)
+    w = jnp.full((stencil,), 1.0 / stencil, jnp.float32)
+    out = cdsgd_update_2d(nb, w, g, 0.05, interpret=True)
+    ref = cdsgd_update_ref(nb, w, g, 0.05)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol_for(dt))
+
+
+@pytest.mark.parametrize("rows", [64, 257])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_cdmsgd_kernel_sweep(rows, dt):
+    nb = jax.random.normal(KEY, (3, rows, 128)).astype(dt)
+    g = jax.random.normal(jax.random.PRNGKey(1), (rows, 128)).astype(dt)
+    v = jax.random.normal(jax.random.PRNGKey(2), (rows, 128)).astype(dt)
+    w = jnp.array([0.5, 0.25, 0.25], jnp.float32)
+    out, new_v = cdmsgd_update_2d(nb, w, g, v, 0.05, 0.9, interpret=True)
+    r_out, r_v = cdmsgd_update_ref(nb, w, g, v, 0.05, 0.9)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r_out, np.float32), **tol_for(dt))
+    np.testing.assert_allclose(np.asarray(new_v, np.float32),
+                               np.asarray(r_v, np.float32), **tol_for(dt))
+
+
+def test_consensus_tree_op_matches_optimizer_semantics():
+    """Pytree wrapper == CDSGD update with a ring Pi row."""
+    tree = {"a": jax.random.normal(KEY, (5, 9)), "b": jax.random.normal(KEY, (17,))}
+    left = jax.tree.map(lambda x: x + 1.0, tree)
+    right = jax.tree.map(lambda x: x - 2.0, tree)
+    grads = jax.tree.map(jnp.ones_like, tree)
+    w = jnp.array([1 / 3, 1 / 3, 1 / 3], jnp.float32)
+    out = cons_ops.cdsgd_update_tree(tree, [left, right], w, grads, 0.1, interpret=True)
+    want = jax.tree.map(
+        lambda x, l, r, g: (x + l + r) / 3.0 - 0.1 * g, tree, left, right, grads)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(want[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------------------
+# flash attention
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", [
+    dict(b=2, h=4, kv=2, s=256, d=64, causal=True, window=None, dt=jnp.float32),
+    dict(b=1, h=4, kv=1, s=256, d=128, causal=True, window=64, dt=jnp.float32),
+    dict(b=1, h=2, kv=2, s=128, d=64, causal=False, window=None, dt=jnp.float32),
+    dict(b=1, h=8, kv=2, s=128, d=64, causal=True, window=32, dt=jnp.float32),
+    dict(b=1, h=4, kv=4, s=256, d=64, causal=True, window=None, dt=jnp.bfloat16),
+])
+def test_flash_attention_sweep(case):
+    dt = case["dt"]
+    q = jax.random.normal(KEY, (case["b"], case["h"], case["s"], case["d"])).astype(dt)
+    k = jax.random.normal(jax.random.PRNGKey(1), (case["b"], case["kv"], case["s"], case["d"])).astype(dt)
+    v = jax.random.normal(jax.random.PRNGKey(2), (case["b"], case["kv"], case["s"], case["d"])).astype(dt)
+    out = flash_attention(q, k, v, causal=case["causal"], window=case["window"],
+                          block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=case["causal"], window=case["window"])
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol_for(dt))
+
+
+def test_flash_bshd_wrapper_matches_model_blockwise():
+    """Kernel (b,s,h,d) wrapper vs the model's lax.scan blockwise attention."""
+    from repro.nn.attention import blockwise_attention
+    b, s, h, kv, d = 2, 128, 4, 2, 64
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, d))
+    out_kernel = flash_attention_bshd(q, k, v, causal=True, window=None,
+                                      block_q=64, block_k=64, interpret=True)
+    out_model = blockwise_attention(q, k, v, causal=True, chunk=64)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_model),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_rejects_ragged_blocks():
+    q = jnp.zeros((1, 2, 100, 64))
+    k = v = jnp.zeros((1, 2, 100, 64))
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+
+
+# -------------------------------------------------------------------------
+# rwkv scan
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,s,hs,chunk", [
+    (4, 128, 64, 32), (2, 96, 32, 32), (1, 256, 64, 128), (8, 64, 16, 16),
+])
+def test_wkv6_kernel_sweep(bh, s, hs, chunk):
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (bh, s, hs)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (bh, s, hs))) * 0.5 + 0.45
+    u = 0.1 * jax.random.normal(ks[4], (bh, hs))
+    y, st = wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
+    yr, sr = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_ops_wrapper_matches_model_scan():
+    b, s, n_h, hs = 2, 64, 2, 32
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (b, s, n_h, hs)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, n_h, hs))) * 0.5 + 0.45
+    u = 0.1 * jax.random.normal(ks[4], (n_h, hs))
+    y1, s1 = wkv6_bsnh(r, k, v, w, u, chunk=32, interpret=True)
+    y2, s2 = wkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_state_carry_equals_two_halves():
+    """Chunked state carry: running two 64-chunks == one 128 scan."""
+    bh, s, hs = 2, 128, 32
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (bh, s, hs)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (bh, s, hs))) * 0.5 + 0.45
+    u = 0.1 * jax.random.normal(ks[4], (bh, hs))
+    y_one, st_one = wkv6_pallas(r, k, v, w, u, chunk=128, interpret=True)
+    y_two, st_two = wkv6_pallas(r, k, v, w, u, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_one), np.asarray(y_two), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_one), np.asarray(st_two), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,134 @@
+"""Optimizer update rules vs the paper's Algorithms 1-3 + baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optim import (
+    CDSGD,
+    CDMSGD,
+    CDMSGDNesterov,
+    CDAdam,
+    CentralizedSGD,
+    FedAvg,
+    make_optimizer,
+    stacked_comm_ops,
+)
+from repro.core.topology import make_topology
+
+N, D = 5, 7
+ALPHA = 0.05
+
+
+@pytest.fixture
+def setup():
+    t = make_topology("ring", N)
+    comm = stacked_comm_ops(t)
+    x = jnp.asarray(np.random.randn(N, D).astype(np.float32))
+    g = jnp.asarray(np.random.randn(N, D).astype(np.float32))
+    return t, comm, {"w": x}, {"w": g}
+
+
+def test_cdsgd_matches_eq5(setup):
+    """x_{k+1} = Pi x_k - alpha g  exactly (paper eq. 5)."""
+    t, comm, params, grads = setup
+    opt = CDSGD(ALPHA)
+    st = opt.init(params)
+    new, st = opt.update(params, grads, st, comm)
+    want = jnp.asarray(t.pi, jnp.float32) @ params["w"] - ALPHA * grads["w"]
+    np.testing.assert_allclose(np.asarray(new["w"]), np.asarray(want), rtol=2e-5, atol=2e-5)
+    assert int(st.step) == 1
+
+
+def test_cdmsgd_matches_algorithm2(setup):
+    t, comm, params, grads = setup
+    mu = 0.9
+    opt = CDMSGD(ALPHA, mu=mu)
+    st = opt.init(params)
+    new, st = opt.update(params, grads, st, comm)
+    v1 = -ALPHA * grads["w"]                      # v0 = 0
+    want = jnp.asarray(t.pi, jnp.float32) @ params["w"] + v1
+    np.testing.assert_allclose(np.asarray(new["w"]), np.asarray(want), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st.inner["w"]), np.asarray(v1), rtol=1e-6)
+
+
+def test_nesterov_lookahead_point(setup):
+    t, comm, params, grads = setup
+    opt = CDMSGDNesterov(ALPHA, mu=0.9)
+    st = opt.init(params)
+    # initial momentum zero -> lookahead == params
+    np.testing.assert_allclose(np.asarray(opt.grad_params(params, st)["w"]),
+                               np.asarray(params["w"]))
+    _, st = opt.update(params, grads, st, comm)
+    look = opt.grad_params(params, st)["w"]
+    want = params["w"] + 0.9 * st.inner["w"]
+    np.testing.assert_allclose(np.asarray(look), np.asarray(want), rtol=1e-6)
+
+
+def test_cdsgd_uniform_pi_gives_mean_minus_local_grad(setup):
+    _, _, params, grads = setup
+    comm = stacked_comm_ops(make_topology("fully_connected", N))
+    opt = CDSGD(ALPHA)
+    new, _ = opt.update(params, grads, opt.init(params), comm)
+    want = jnp.mean(params["w"], 0, keepdims=True) - ALPHA * grads["w"]
+    np.testing.assert_allclose(np.asarray(new["w"]), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_centralized_sgd_identical_across_agents(setup):
+    _, comm, params, grads = setup
+    # force identical initial params across agents
+    params = {"w": jnp.broadcast_to(params["w"][:1], params["w"].shape)}
+    opt = CentralizedSGD(ALPHA)
+    new, _ = opt.update(params, grads, opt.init(params), comm)
+    spread = float(jnp.max(jnp.abs(new["w"] - new["w"][0:1])))
+    assert spread < 1e-6, "centralized SGD must keep agents in lockstep"
+
+
+def test_fedavg_averages_every_e_steps(setup):
+    _, comm, params, grads = setup
+    opt = FedAvg(ALPHA, local_steps=2)
+    st = opt.init(params)
+    p1, st = opt.update(params, grads, st, comm)     # step 1: local only
+    assert float(jnp.max(jnp.abs(p1["w"] - p1["w"][0:1]))) > 1e-4
+    p2, st = opt.update(p1, grads, st, comm)         # step 2: average
+    assert float(jnp.max(jnp.abs(p2["w"] - p2["w"][0:1]))) < 1e-6
+
+
+def test_fedavg_e1_equals_mean_of_local_sgd(setup):
+    _, comm, params, grads = setup
+    opt = FedAvg(ALPHA, local_steps=1)
+    new, _ = opt.update(params, grads, opt.init(params), comm)
+    want = jnp.mean(params["w"] - ALPHA * grads["w"], 0, keepdims=True)
+    np.testing.assert_allclose(np.asarray(new["w"]),
+                               np.broadcast_to(np.asarray(want), (N, D)), rtol=2e-5, atol=2e-5)
+
+
+def test_cdadam_moments_stay_local(setup):
+    t, comm, params, grads = setup
+    opt = CDAdam(1e-3)
+    st = opt.init(params)
+    new, st = opt.update(params, grads, st, comm)
+    m, v = st.inner
+    np.testing.assert_allclose(np.asarray(m["w"]), 0.1 * np.asarray(grads["w"]), rtol=1e-5)
+    assert new["w"].shape == (N, D)
+
+
+def test_make_optimizer_registry():
+    for name in ["cdsgd", "cdmsgd", "cdmsgd_nesterov", "cdadam", "sgd", "msgd", "fedavg"]:
+        assert make_optimizer(name, 0.01) is not None
+    with pytest.raises(ValueError):
+        make_optimizer("adamw", 0.01)
+
+
+def test_diminishing_schedule_drives_step_down(setup):
+    from repro.core import schedules
+    _, comm, params, grads = setup
+    opt = CDSGD(schedules.diminishing(theta=1.0, eps=1.0, t=1.0))
+    st = opt.init(params)
+    alphas = []
+    p = params
+    for _ in range(5):
+        alphas.append(float(opt.schedule(st.step)))
+        p, st = opt.update(p, grads, st, comm)
+    assert all(a > b for a, b in zip(alphas, alphas[1:]))

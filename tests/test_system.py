@@ -1,0 +1,94 @@
+"""End-to-end system behaviour: the paper's experimental claims at CPU scale.
+
+These are the fast versions of the benchmarks in benchmarks/ — each asserts
+a *relative ordering* the paper reports (§5), on the synthetic stand-in
+dataset (offline container; see DESIGN.md §6).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_topology, make_optimizer
+from repro.core.trainer import CollaborativeTrainer, train_loop
+from repro.data import AgentPartitioner, make_classification
+from repro.nn.paper_models import (
+    classifier_loss,
+    mlp_classifier_apply,
+    mlp_classifier_template,
+)
+from repro.nn.param import init_params
+
+LOSS = functools.partial(classifier_loss, mlp_classifier_apply)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_classification(2048, n_classes=10, dim=32, seed=0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(mlp_classifier_template(32, 10, width=50, depth=4),
+                       jax.random.PRNGKey(0))
+
+
+def run(optname, data, params, *, steps=120, agents=5, topology="fully_connected",
+        lr=0.05, **kw):
+    train, val = data
+    part = AgentPartitioner(train, agents, seed=0)
+    topo = make_topology(topology, agents)
+    tr = CollaborativeTrainer(LOSS, params, topo, make_optimizer(optname, lr, **kw))
+    train_loop(tr, part.batches(64), steps)
+    ev = tr.evaluate({"x": jnp.asarray(val.x), "y": jnp.asarray(val.y)})
+    last = tr.history.rows[-1]
+    return {"train_acc": last["acc"], "val_acc": ev["acc_mean"],
+            "acc_var": ev["acc_var"], "consensus": last["consensus_error"],
+            "trainer": tr}
+
+
+def test_cdsgd_reaches_centralized_accuracy(data, params):
+    """Fig 1(a): CDSGD eventually comparable to centralized SGD."""
+    sgd = run("sgd", data, params)
+    cdsgd = run("cdsgd", data, params)
+    assert cdsgd["val_acc"] > 0.85
+    assert cdsgd["val_acc"] > sgd["val_acc"] - 0.08
+
+
+def test_cdmsgd_converges_and_agents_agree(data, params):
+    res = run("cdmsgd", data, params, mu=0.9)
+    assert res["val_acc"] > 0.9
+    assert res["acc_var"] < 1e-3, "fully-connected agents must near-agree"
+
+
+def test_cdmsgd_competitive_with_fedavg(data, params):
+    """Fig 1(b): CDMSGD reaches FedAvg-level steady-state accuracy."""
+    fed = run("fedavg", data, params, mu=0.9)
+    cdm = run("cdmsgd", data, params, mu=0.9)
+    assert cdm["val_acc"] >= fed["val_acc"] - 0.05
+
+
+def test_sparser_topology_less_stable_consensus(data, params):
+    """Fig 2(b): sparser graph (larger lambda_2) -> larger consensus error."""
+    ring = run("cdmsgd", data, params, topology="ring", agents=8, mu=0.9)
+    full = run("cdmsgd", data, params, topology="fully_connected", agents=8, mu=0.9)
+    assert ring["consensus"] > full["consensus"]
+
+
+def test_network_size_slows_convergence(data, params):
+    """Fig 2(a): more agents -> slower early convergence (same final level)."""
+    small = run("cdsgd", data, params, agents=2, steps=60)
+    large = run("cdsgd", data, params, agents=16, steps=60)
+    assert small["train_acc"] >= large["train_acc"] - 0.02
+
+
+def test_mean_model_extraction(data, params):
+    res = run("cdmsgd", data, params, mu=0.9)
+    tr = res["trainer"]
+    mean_params = tr.mean_params()
+    train, val = data
+    loss, metrics = LOSS(mean_params, {"x": jnp.asarray(val.x), "y": jnp.asarray(val.y)})
+    assert float(metrics["acc"]) > 0.9

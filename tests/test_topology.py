@@ -1,0 +1,100 @@
+"""Topology / agent-interaction-matrix properties (paper Assumption 2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    Topology,
+    chain_adjacency,
+    erdos_renyi_adjacency,
+    eigenvalues,
+    fully_connected_adjacency,
+    lambda_2,
+    lambda_n,
+    lazy,
+    make_topology,
+    metropolis_pi,
+    ring_adjacency,
+    spectral_gap,
+    torus2d_adjacency,
+    uniform_pi,
+    validate_pi,
+)
+
+TOPOLOGIES = ["fully_connected", "ring", "chain", "star", "torus", "erdos_renyi"]
+
+
+@pytest.mark.parametrize("name", TOPOLOGIES)
+@pytest.mark.parametrize("n", [2, 4, 5, 8, 16])
+def test_pi_satisfies_assumption2(name, n):
+    t = make_topology(name, n)
+    pi = t.pi
+    assert np.allclose(pi.sum(0), 1.0), "columns must sum to 1"
+    assert np.allclose(pi.sum(1), 1.0), "rows must sum to 1"
+    assert np.allclose(pi, pi.T), "undirected graph -> symmetric Pi"
+    ev = eigenvalues(pi)
+    assert ev[0] == pytest.approx(1.0, abs=1e-9)
+    if n > 1:
+        assert ev[1] < 1.0 - 1e-12, "connected graph -> simple eigenvalue 1"
+
+
+@pytest.mark.parametrize("name", TOPOLOGIES)
+def test_lazy_blend_is_positive_definite(name):
+    """Assumption 2(d): I >= Pi > 0 holds for the lazy blend."""
+    t = make_topology(name, 8, lazy_beta=0.5)
+    assert t.lambdan > 0.0
+    validate_pi(t.pi, require_positive=True)
+
+
+@given(n=st.integers(2, 12), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_metropolis_weights_always_doubly_stochastic(n, seed):
+    adj = erdos_renyi_adjacency(n, 0.6, seed)
+    pi = metropolis_pi(adj)
+    validate_pi(pi)
+
+
+def test_uniform_pi_is_exact_averaging():
+    pi = uniform_pi(5)
+    x = np.random.randn(5, 3)
+    mixed = pi @ x
+    assert np.allclose(mixed, x.mean(0, keepdims=True))
+
+
+def test_spectral_ordering_density():
+    """Denser graphs have larger spectral gap (paper §5.2 discussion)."""
+    n = 16
+    gaps = {name: make_topology(name, n).spectral_gap
+            for name in ["chain", "ring", "torus", "fully_connected"]}
+    assert gaps["chain"] < gaps["ring"] < gaps["torus"] < gaps["fully_connected"] + 1e-12
+
+
+def test_ring_is_circulant_with_three_point_stencil():
+    t = make_topology("ring", 8)
+    sw = t.shift_weights()
+    assert sw is not None and set(sw) == {0, 1, 7}
+    assert all(abs(w - 1 / 3) < 1e-12 for w in sw.values())
+    assert t.degree() == 2
+
+
+def test_chain_is_not_circulant():
+    assert make_topology("chain", 8).shift_weights() is None
+
+
+def test_disconnected_rejected():
+    bad = np.eye(4)
+    with pytest.raises(ValueError):
+        validate_pi(bad)
+
+
+def test_torus_shape_validation():
+    with pytest.raises(ValueError):
+        make_topology("torus", 12, torus_shape=(5, 3))
+
+
+def test_neighbor_lists_match_pi():
+    t = make_topology("ring", 6)
+    nbrs = t.neighbor_lists()
+    for j, lst in enumerate(nbrs):
+        assert set(l for l, _ in lst) == {(j - 1) % 6, j, (j + 1) % 6}
