@@ -4,14 +4,35 @@ On this CPU container kernels run in interpret mode (Python), so absolute
 us_per_call is NOT hardware-representative; the derived column therefore
 also reports the analytic HBM-traffic ratio fused-vs-unfused — the number
 that transfers to TPU (the kernels are memory-bound).
+
+Analytic HBM sweeps per element (S = stencil size, neighbor count + self):
+
+* CDSGD  unfused: mix (S reads + 1 write) + axpy (read mix + read grad +
+  write out)                      = S + 4 sweeps
+* CDSGD  fused:   S neighbor reads + grad read + out write = S + 2 sweeps
+* CDMSGD unfused: mix (S+1) + momentum update (read v + read grad +
+  write v') + param update (read mix + read v' + write out) = S + 7 sweeps
+* CDMSGD fused:   S + grad + v reads, out + v' writes       = S + 4 sweeps
+
+``bucketed_model_update`` compares the whole-model flat-buffer path (one
+``pallas_call`` per dtype bucket, one collective per circulant shift per
+bucket — see repro.core.flatbuf) against the per-leaf launch baseline, and
+emits one machine-readable ``JSON,{...}`` line for the perf trajectory.
 """
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.consensus_update.consensus_update import cdsgd_update_2d
+from repro.core import flatbuf
+from repro.kernels.consensus_update import ops as cons_ops
+from repro.kernels.consensus_update.consensus_update import (
+    LANE,
+    cdsgd_update_2d,
+    cdmsgd_update_2d,
+)
 from repro.kernels.consensus_update.ref import cdsgd_update_ref
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -27,21 +48,121 @@ def _time(fn, *args, reps=3):
     return 1e6 * (time.time() - t0) / reps
 
 
+def _per_leaf_cdsgd(tree, neighbor_trees, weights, grads, alpha, interpret=True):
+    """The pre-flatbuf baseline: one padded kernel launch per pytree leaf."""
+
+    def leaf(x, g, *nbrs):
+        def tiles(t):
+            flat = t.reshape(-1)
+            rows = -(-flat.shape[0] // LANE)
+            pad = rows * LANE - flat.shape[0]
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            return flat.reshape(rows, LANE), t.size
+
+        stacked = jnp.stack([tiles(t)[0] for t in (x,) + nbrs])
+        gt, n = tiles(g)
+        out = cdsgd_update_2d(stacked, weights, gt, alpha, interpret=interpret)
+        return out.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(leaf, tree, grads, *neighbor_trees)
+
+
+def bucketed_model_update():
+    """Whole-model fused (bucketed) vs per-leaf launches on a mixed pytree.
+
+    Returns (row, json_record): launch counts from the actual jaxprs,
+    analytic HBM bytes, and collectives-per-step for a ring (2 non-zero
+    shifts) in the sharded execution mode.
+    """
+    key = jax.random.PRNGKey(0)
+    tree = {}
+    for i, (n, dt) in enumerate([(7 * 9, jnp.float32), (300, jnp.float32),
+                                 (128 * 64, jnp.float32), (513, jnp.float32),
+                                 (4096, jnp.bfloat16), (130, jnp.bfloat16),
+                                 (256 * 16, jnp.float32), (1000, jnp.bfloat16)]):
+        tree[f"p{i}"] = jax.random.normal(
+            jax.random.fold_in(key, i), (n,)).astype(dt)
+    left = jax.tree.map(lambda x: x + 1, tree)
+    right = jax.tree.map(lambda x: x - 1, tree)
+    grads = jax.tree.map(jnp.ones_like, tree)
+    w = jnp.array([1 / 3, 1 / 3, 1 / 3], jnp.float32)
+    s = 3                                       # ring stencil: self + 2
+
+    fused_fn = jax.jit(lambda t, l, r, g: cons_ops.cdsgd_update_tree(
+        t, [l, r], w, g, 0.05, interpret=True))
+    leaf_fn = jax.jit(lambda t, l, r, g: _per_leaf_cdsgd(
+        t, [l, r], w, g, 0.05, interpret=True))
+    t_fused = _time(fused_fn, tree, left, right, grads)
+    t_leaf = _time(leaf_fn, tree, left, right, grads)
+
+    launches_fused = str(jax.make_jaxpr(fused_fn)(
+        tree, left, right, grads)).count("pallas_call")
+    launches_leaf = str(jax.make_jaxpr(leaf_fn)(
+        tree, left, right, grads)).count("pallas_call")
+
+    spec = flatbuf.make_flat_spec(tree)
+    n_leaves = spec.n_leaves
+    # fused kernel: S neighbor reads + grad read + out write over the padded
+    # buckets; per-leaf baseline pads each leaf identically, but the unfused
+    # optimizer (mix + axpy per leaf) sweeps the unpadded params S+4 times.
+    bytes_fused = sum((s + 2) * b.bytes for b in spec.buckets)
+    bytes_unpadded = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+    bytes_unfused_opt = (s + 4) * bytes_unpadded
+    # sharded ring: one ppermute per non-zero shift — per bucket vs per leaf
+    coll_fused = 2 * spec.n_buckets
+    coll_leaf = 2 * n_leaves
+
+    rec = {
+        "bench": "consensus/bucketed_model_update",
+        "n_leaves": n_leaves,
+        "n_buckets": spec.n_buckets,
+        "kernel_launches": {"per_leaf": launches_leaf, "fused": launches_fused},
+        "collectives_per_step_ring": {"per_leaf": coll_leaf, "fused": coll_fused},
+        "hbm_bytes": {"unfused_optimizer": bytes_unfused_opt,
+                      "fused_kernel": bytes_fused},
+        "us_per_call_interp": {"per_leaf": round(t_leaf, 1),
+                               "fused": round(t_fused, 1)},
+    }
+    assert launches_fused < launches_leaf
+    assert bytes_fused < bytes_unfused_opt
+    row = ("kernel/bucketed_model_update", t_fused,
+           f"per_leaf_us={t_leaf:.0f};launches={launches_fused}/{launches_leaf};"
+           f"collectives={coll_fused}/{coll_leaf};"
+           f"hbm_fused/unfused={bytes_fused / bytes_unfused_opt:.3f}")
+    return row, rec
+
+
 def run():
     key = jax.random.PRNGKey(0)
     rows = []
+    records = []
 
     # consensus update: S=3 ring stencil, 1M params
     rows_n = 8192
     nb = jax.random.normal(key, (3, rows_n, 128), jnp.float32)
     g = jax.random.normal(key, (rows_n, 128), jnp.float32)
+    mom = jax.random.normal(key, (rows_n, 128), jnp.float32)
     w = jnp.array([1 / 3, 1 / 3, 1 / 3], jnp.float32)
     t_kernel = _time(jax.jit(lambda *a: cdsgd_update_2d(*a, 0.05, interpret=True)), nb, w, g)
     t_ref = _time(jax.jit(lambda *a: cdsgd_update_ref(*a, 0.05)), nb, w, g)
-    # unfused traffic: read 3 neighbors + grad + write mix + read mix + write out
-    # fused traffic: read 3 neighbors + grad + write out
+    # CDSGD: fused (3 nbr reads + grad + write = 5) vs unfused mix+axpy (7)
     rows.append(("kernel/consensus_update",
                  t_kernel, f"ref_us={t_ref:.0f};hbm_traffic_fused/unfused={5/7:.3f}"))
+    t_mom = _time(jax.jit(lambda *a: cdmsgd_update_2d(*a, 0.05, 0.9, interpret=True)),
+                  nb, w, g, mom)
+    # CDMSGD momentum path: fused 3+2 reads+2 writes = 7 sweeps vs unfused
+    # mix(4) + momentum(3) + param(3) = 10 sweeps (see module docstring)
+    rows.append(("kernel/consensus_update_momentum",
+                 t_mom, f"hbm_traffic_fused/unfused={7/10:.3f}"))
+    records.append({"bench": "consensus/hbm_ratio",
+                    "cdsgd": {"fused_sweeps": 5, "unfused_sweeps": 7},
+                    "cdmsgd": {"fused_sweeps": 7, "unfused_sweeps": 10}})
+
+    # whole-model bucketed update vs per-leaf launches
+    row, rec = bucketed_model_update()
+    rows.append(row)
+    records.append(rec)
 
     # flash attention 1k seq
     q = jax.random.normal(key, (1, 4, 1024, 64), jnp.float32)
@@ -50,7 +171,6 @@ def run():
     t_kernel = _time(jax.jit(lambda *a: flash_attention(*a, causal=True, interpret=True)), q, k, v)
     t_ref = _time(jax.jit(lambda *a: attention_ref(*a, causal=True)), q, k, v)
     s_mat = 4 * 1024 * 1024 * 4 * 2  # S+P matrices fp32, per head
-    flash_extra = 4 * 1024 * 64 * 4
     rows.append(("kernel/flash_attention", t_kernel,
                  f"ref_us={t_ref:.0f};score_matrix_bytes_avoided={s_mat}"))
 
@@ -66,6 +186,7 @@ def run():
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    print("JSON," + json.dumps(records))
     return rows
 
 

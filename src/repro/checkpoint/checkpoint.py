@@ -41,7 +41,7 @@ def _to_numpy_native(arr: np.ndarray) -> np.ndarray:
 def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
     """Writes ``<dir>/ckpt_<step>.npz``; returns the path."""
     os.makedirs(directory, exist_ok=True)
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {_path_str(path): _to_numpy_native(np.asarray(leaf)) for path, leaf in flat}
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     tmp = path + ".tmp"
@@ -70,7 +70,7 @@ def restore_checkpoint(directory: str, like: PyTree, step: Optional[int] = None)
             raise FileNotFoundError(f"no checkpoints under {directory}")
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     with np.load(path) as data:
-        flat, treedef = jax.tree.flatten_with_path(like)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         leaves = []
         for p, ref in flat:
             k = _path_str(p)

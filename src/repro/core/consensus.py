@@ -37,11 +37,106 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import flatbuf
 from repro.core.topology import Topology
 from repro.utils.tree import tree_weighted_sum
 
 PyTree = Any
 MixFn = Callable[[PyTree], PyTree]
+
+
+# --------------------------------------------------------------------------
+# Flat-buffer fused-consensus support (see repro.core.flatbuf)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatComm:
+    """Whole-model fused-update support carried inside :class:`CommOps`.
+
+    ``gather(bufs)`` maps the packed self-buffers to kernel-ready neighbor
+    operands: in the **stacked** mode it returns the full agent stack per
+    bucket with the dense ``Pi`` as ``(A, A)`` weights (the fused kernels
+    vmap over agent rows); in the **sharded** mode it issues one
+    ``lax.ppermute`` per circulant shift offset per bucket and returns the
+    ``(S, rows, 128)`` stencil stack with ``(S,)`` weights.
+    """
+
+    lead: int                     # leading replica axes excluded from packing
+    batched: bool                 # True: stacked simulation (dense Pi vmap)
+    gather: Callable              # list[bufs] -> (list[neighbor stacks], weights)
+    interpret: bool = True        # interpret=True for CPU; False on TPU
+
+    def spec(self, tree: PyTree) -> flatbuf.FlatSpec:
+        return flatbuf.make_flat_spec(tree, lead=self.lead)
+
+    def pack(self, tree: PyTree, spec: flatbuf.FlatSpec):
+        bufs = flatbuf.pack(tree, spec)
+        if not self.batched and self.lead:
+            # sharded: the local agent axis is fully sharded away (size 1)
+            for b in bufs:
+                assert all(d == 1 for d in b.shape[:self.lead]), b.shape
+            bufs = [b.reshape(b.shape[self.lead:]) for b in bufs]
+        return bufs
+
+    def unpack(self, bufs, spec: flatbuf.FlatSpec) -> PyTree:
+        if not self.batched and self.lead:
+            bufs = [b.reshape((1,) * self.lead + b.shape) for b in bufs]
+        return flatbuf.unpack(bufs, spec)
+
+
+def stacked_flat_comm(topology: Topology, *, interpret: bool = True) -> FlatComm:
+    """FlatComm for agent-stacked pytrees (dense ``Pi``, any topology)."""
+    pi = jnp.asarray(topology.pi, dtype=jnp.float32)
+
+    def gather(bufs):
+        return list(bufs), pi
+
+    return FlatComm(lead=1, batched=True, gather=gather, interpret=interpret)
+
+
+def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
+                      lead: int = 1, interpret: bool = True) -> FlatComm:
+    """FlatComm for use inside ``shard_map``; circulant topologies only.
+
+    ``factors`` is ``[(axis_name, Topology), ...]`` — one entry for the
+    plain single-axis agent mesh, several for a Kronecker-factored one.
+    Each bucket costs one ``lax.ppermute`` per non-zero shift combination;
+    weights are the (outer-)product of the per-factor circulant weights.
+    """
+    import itertools
+
+    per_axis = []
+    for axis_name, topo in factors:
+        if topo.n_agents == 1:
+            continue
+        shifts = topo.shift_weights()
+        if shifts is None:
+            raise ValueError(
+                f"topology {topo.name!r} on axis {axis_name!r} is not "
+                "circulant; use mixing='ppermute' or 'dense' instead")
+        per_axis.append((axis_name, topo.n_agents, sorted(shifts.items())))
+
+    combos = list(itertools.product(*[s for _, _, s in per_axis])) or [()]
+    weights = jnp.asarray([float(np.prod([w for _, w in combo]) if combo else 1.0)
+                           for combo in combos], jnp.float32)
+
+    def gather(bufs):
+        stacked = []
+        for b in bufs:
+            stencil = []
+            for combo in combos:
+                nb = b
+                for (axis_name, n, _), (s, _w) in zip(per_axis, combo):
+                    if s % n:
+                        # agent j receives from agent (j + s) mod n
+                        perm = [((j + s) % n, j) for j in range(n)]
+                        nb = lax.ppermute(nb, axis_name, perm=perm)
+                stencil.append(nb)
+            stacked.append(jnp.stack(stencil))
+        return stacked, weights
+
+    return FlatComm(lead=lead, batched=False, gather=gather, interpret=interpret)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,164 @@
+"""Flat parameter buffers: pack a pytree into dtype-bucketed (rows, 128) tiles.
+
+The consensus optimizers (CDSGD family) are purely memory-bound elementwise
+updates over the *whole* parameter vector.  Applying them leaf-by-leaf costs
+one kernel launch + one padded HBM sweep + (sharded) one ``ppermute``
+collective *per leaf per neighbor* — hundreds of launches and collectives
+per step for a transformer.  This module gives every consensus path a flat
+view instead:
+
+* leaves are grouped into **dtype buckets** (bf16 params never mix bits with
+  f32 gains/biases), preserving first-appearance order;
+* within a bucket every leaf is padded up to a whole number of 128-wide rows
+  and assigned a static ``row_start`` — so the packed buffer is a
+  ``(*lead, rows, 128)`` array whose layout is described entirely by
+  compile-time metadata (:class:`FlatSpec`);
+* ``pack`` is a cast + reshape + single concatenate per bucket (reshape-only
+  when the bucket has one leaf of aligned size); ``unpack`` is a static
+  slice + reshape per leaf — no gathers, no scatter, no host work.
+
+``lead`` counts leading *replica* axes excluded from flattening: the stacked
+simulation packs ``(A, ...)`` leaves with ``lead=1`` into ``(A, rows, 128)``
+buffers; the sharded trainer packs its local shard (agent axis of size 1)
+the same way and squeezes.
+
+The fused update kernels in :mod:`repro.kernels.consensus_update` then walk
+one bucket in a single ``pallas_call``, and the sharded circulant exchange
+issues one ``lax.ppermute`` per shift offset per bucket — instead of one
+per leaf — which is the whole-step communication pattern the paper's
+fixed-topology argument (eq. 5/6) assumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+LANE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Placement of one pytree leaf inside its dtype bucket."""
+
+    index: int                      # position in the flattened-tree order
+    shape: Tuple[int, ...]          # per-replica shape (lead axes excluded)
+    size: int                       # prod(shape)
+    row_start: int                  # first 128-wide row in the bucket
+    rows: int                       # rows occupied (size padded up to LANE)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    dtype: Any                      # canonical jnp dtype of the bucket
+    rows: int                       # total rows = sum(slot.rows)
+    slots: Tuple[LeafSlot, ...]
+
+    @property
+    def n_padded(self) -> int:
+        return self.rows * LANE
+
+    @property
+    def n_real(self) -> int:
+        return sum(s.size for s in self.slots)
+
+    @property
+    def bytes(self) -> int:
+        return self.n_padded * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static packing metadata for one pytree structure."""
+
+    treedef: Any
+    n_leaves: int
+    lead: int                       # leading replica axes excluded from packing
+    buckets: Tuple[BucketSpec, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b.bytes for b in self.buckets)
+
+
+def make_flat_spec(tree: PyTree, lead: int = 0) -> FlatSpec:
+    """Build the bucketed layout for ``tree`` (shapes/dtypes only, no data)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    order: List[Any] = []           # bucket dtypes in first-appearance order
+    grouped = {}
+    for index, leaf in enumerate(leaves):
+        dt = jnp.dtype(leaf.dtype)
+        shape = tuple(leaf.shape[lead:])
+        size = 1
+        for d in shape:
+            size *= d
+        if dt not in grouped:
+            grouped[dt] = []
+            order.append(dt)
+        grouped[dt].append((index, shape, size))
+    buckets = []
+    for dt in order:
+        slots = []
+        row = 0
+        for index, shape, size in grouped[dt]:
+            rows = -(-size // LANE)
+            slots.append(LeafSlot(index=index, shape=shape, size=size,
+                                  row_start=row, rows=rows))
+            row += rows
+        buckets.append(BucketSpec(dtype=dt, rows=row, slots=tuple(slots)))
+    return FlatSpec(treedef=treedef, n_leaves=len(leaves), lead=lead,
+                    buckets=tuple(buckets))
+
+
+def pack(tree: PyTree, spec: FlatSpec) -> List[jnp.ndarray]:
+    """Pack ``tree`` into one ``(*lead, rows, 128)`` buffer per dtype bucket.
+
+    Leaves are cast to their bucket dtype (grads/momenta packed against a
+    parameter spec inherit the unfused ``g.astype(param.dtype)`` semantics).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if treedef != spec.treedef:
+        raise ValueError(f"tree structure {treedef} != spec structure {spec.treedef}")
+    out = []
+    for bucket in spec.buckets:
+        pieces = []
+        lead_shape = None
+        for slot in bucket.slots:
+            x = leaves[slot.index]
+            if tuple(x.shape[spec.lead:]) != slot.shape:
+                raise ValueError(
+                    f"leaf {slot.index}: shape {x.shape} != spec {slot.shape} "
+                    f"(lead={spec.lead})")
+            lead_shape = tuple(x.shape[:spec.lead])
+            flat = x.astype(bucket.dtype).reshape(lead_shape + (slot.size,))
+            padding = slot.rows * LANE - slot.size
+            if padding:
+                flat = jnp.pad(flat, [(0, 0)] * spec.lead + [(0, padding)])
+            pieces.append(flat)
+        buf = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=-1)
+        out.append(buf.reshape(lead_shape + (bucket.rows, LANE)))
+    return out
+
+
+def unpack(bufs: Sequence[jnp.ndarray], spec: FlatSpec) -> PyTree:
+    """Inverse of :func:`pack`: static slice + reshape per leaf."""
+    if len(bufs) != spec.n_buckets:
+        raise ValueError(f"{len(bufs)} buffers != {spec.n_buckets} buckets")
+    leaves: List[Any] = [None] * spec.n_leaves
+    for bucket, buf in zip(spec.buckets, bufs):
+        lead_shape = tuple(buf.shape[:-2])
+        flat = buf.reshape(lead_shape + (bucket.rows * LANE,))
+        for slot in bucket.slots:
+            start = slot.row_start * LANE
+            piece = flat[..., start:start + slot.size]
+            leaves[slot.index] = piece.reshape(lead_shape + slot.shape)
+    return jax.tree.unflatten(spec.treedef, leaves)

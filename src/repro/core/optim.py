@@ -50,6 +50,9 @@ class CommOps:
     n_agents: int
     lambda2: float = 0.0
     lambdan: float = 1.0
+    # whole-model fused-update support (flat buffers + Pallas kernels);
+    # None disables the optimizers' ``fused=True`` fast path.
+    flat: Optional[consensus.FlatComm] = None
 
 
 def identity_comm_ops() -> CommOps:
@@ -58,7 +61,7 @@ def identity_comm_ops() -> CommOps:
     return CommOps(mix=ident, mean=ident, n_agents=1, lambda2=0.0, lambdan=1.0)
 
 
-def stacked_comm_ops(topology) -> CommOps:
+def stacked_comm_ops(topology, *, interpret: bool = True) -> CommOps:
     """CommOps for agent-stacked pytrees (leading axis = agent)."""
     pi = jnp.asarray(topology.pi, dtype=jnp.float32)
 
@@ -69,7 +72,8 @@ def stacked_comm_ops(topology) -> CommOps:
         return jax.tree.map(lambda x: jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape), tree)
 
     return CommOps(mix=mix, mean=mean, n_agents=topology.n_agents,
-                   lambda2=topology.lambda2, lambdan=topology.lambdan)
+                   lambda2=topology.lambda2, lambdan=topology.lambdan,
+                   flat=consensus.stacked_flat_comm(topology, interpret=interpret))
 
 
 def sharded_comm_ops(topology, axis_name: str) -> CommOps:
@@ -98,10 +102,21 @@ class OptState(NamedTuple):
 
 
 class DistributedOptimizer:
-    """Base: subclasses implement `init_inner` and `apply`."""
+    """Base: subclasses implement `init_inner` and `apply`.
 
-    def __init__(self, schedule: Schedule | float):
+    ``fused=True`` (consensus optimizers only) routes the update through the
+    flat-buffer Pallas path when the ``CommOps`` carries a
+    :class:`repro.core.consensus.FlatComm`: the whole model is packed into
+    dtype-bucketed ``(rows, 128)`` buffers and updated with one kernel
+    launch per bucket (see :mod:`repro.kernels.consensus_update`).  When the
+    comm has no flat support the optimizer falls back to the per-leaf
+    reference ``apply`` with identical semantics.  Pallas interpret-vs-
+    compiled mode is owned by the ``FlatComm`` (True on CPU, False on TPU).
+    """
+
+    def __init__(self, schedule: Schedule | float, *, fused: bool = False):
         self.schedule: Schedule = fixed(schedule) if isinstance(schedule, (int, float)) else schedule
+        self.fused = fused
 
     # -- public API --------------------------------------------------------
     def init(self, params: PyTree) -> OptState:
@@ -113,7 +128,14 @@ class DistributedOptimizer:
 
     def update(self, params: PyTree, grads: PyTree, state: OptState, comm: CommOps):
         alpha = self.schedule(state.step)
-        new_params, new_inner = self.apply(params, grads, state.inner, alpha, comm, state.step)
+        # fused is a perf hint: optimizers without a fused implementation
+        # (baselines) and comms without flat support use the reference path.
+        has_fused = type(self).apply_fused is not DistributedOptimizer.apply_fused
+        if self.fused and has_fused and comm.flat is not None:
+            new_params, new_inner = self.apply_fused(
+                params, grads, state.inner, alpha, comm, state.step)
+        else:
+            new_params, new_inner = self.apply(params, grads, state.inner, alpha, comm, state.step)
         return new_params, OptState(step=state.step + 1, inner=new_inner)
 
     def state_specs(self, param_specs: PyTree) -> "OptState":
@@ -131,6 +153,10 @@ class DistributedOptimizer:
     def apply(self, params, grads, inner, alpha, comm: CommOps, step):
         raise NotImplementedError
 
+    def apply_fused(self, params, grads, inner, alpha, comm: CommOps, step):
+        """Flat-buffer fast path; same contract as ``apply``."""
+        raise NotImplementedError(f"{type(self).__name__} has no fused path")
+
     @property
     def uses_consensus(self) -> bool:
         return True
@@ -141,21 +167,41 @@ class DistributedOptimizer:
 # --------------------------------------------------------------------------
 
 
+def _flat_setup(fl, params, *trees):
+    """Pack params (+ same-structured trees) against one shared FlatSpec."""
+    spec = fl.spec(params)
+    bufs = fl.pack(params, spec)
+    others = [fl.pack(t, spec) for t in trees]
+    nbrs, weights = fl.gather(bufs)
+    return spec, nbrs, weights, others
+
+
 class CDSGD(DistributedOptimizer):
     """Algorithm 1: ``x_{k+1} = Pi x_k - alpha g(x_k)``."""
 
     def apply(self, params, grads, inner, alpha, comm, step):
         mixed = comm.mix(params)
-        new_params = jax.tree.map(lambda w, g: w - alpha * g.astype(w.dtype), mixed, grads)
+        # final .astype keeps bf16 params bf16 (traced f32 alpha promotes)
+        new_params = jax.tree.map(
+            lambda w, g: (w - alpha * g.astype(w.dtype)).astype(w.dtype),
+            mixed, grads)
         return new_params, inner
+
+    def apply_fused(self, params, grads, inner, alpha, comm, step):
+        from repro.kernels.consensus_update import ops as kops
+        fl = comm.flat
+        spec, nbrs, w, (g,) = _flat_setup(fl, params, grads)
+        outs = [kops.cdsgd_update_flat(nb, w, gb, alpha, interpret=fl.interpret)
+                for nb, gb in zip(nbrs, g)]
+        return fl.unpack(outs, spec), inner
 
 
 class CDMSGD(DistributedOptimizer):
     """Algorithm 2 (Polyak momentum):
     ``v' = mu v - alpha g(x); x' = Pi x + v'``."""
 
-    def __init__(self, schedule, mu: float = 0.9):
-        super().__init__(schedule)
+    def __init__(self, schedule, mu: float = 0.9, **kw):
+        super().__init__(schedule, **kw)
         self.mu = mu
 
     def init_inner(self, params):
@@ -166,16 +212,70 @@ class CDMSGD(DistributedOptimizer):
 
     def apply(self, params, grads, v, alpha, comm, step):
         mixed = comm.mix(params)
-        new_v = jax.tree.map(lambda vi, g: self.mu * vi - alpha * g.astype(vi.dtype), v, grads)
-        new_params = jax.tree.map(jnp.add, mixed, new_v)
+        new_v = jax.tree.map(
+            lambda vi, g: (self.mu * vi - alpha * g.astype(vi.dtype)).astype(vi.dtype),
+            v, grads)
+        new_params = jax.tree.map(lambda w, nv: (w + nv).astype(w.dtype), mixed, new_v)
+        return new_params, new_v
+
+    def apply_fused(self, params, grads, v, alpha, comm, step):
+        from repro.kernels.consensus_update import ops as kops
+        fl = comm.flat
+        spec, nbrs, w, (g, vb) = _flat_setup(fl, params, grads, v)
+        pairs = [kops.cdmsgd_update_flat(nb, w, gb, vi, alpha, self.mu,
+                                         interpret=fl.interpret)
+                 for nb, gb, vi in zip(nbrs, g, vb)]
+        new_params = fl.unpack([p for p, _ in pairs], spec)
+        new_v = fl.unpack([nv for _, nv in pairs], spec)
         return new_params, new_v
 
 
 class CDMSGDNesterov(CDMSGD):
-    """Algorithm 3: gradient evaluated at the lookahead point x + mu v."""
+    """Algorithm 3: gradient evaluated at the lookahead point x + mu v.
+
+    Unfused, the state is the momentum ``v`` and the lookahead is a
+    ``tree_axpy`` recomputed before every backward.  Fused, the state is
+    ``(v, lookahead)``: the kernel emits ``x' + mu v'`` in the same HBM
+    sweep as the update, so ``grad_params`` is a free state lookup.
+    """
+
+    def init_inner(self, params):
+        if self.fused:
+            # lookahead_0 = x_0 + mu * 0 = x_0
+            return (tree_zeros_like(params), params)
+        return tree_zeros_like(params)
+
+    def inner_specs(self, param_specs):
+        if self.fused:
+            return (param_specs, param_specs)
+        return param_specs
 
     def grad_params(self, params, state):
+        if self.fused:
+            return state.inner[1]
         return tree_axpy(self.mu, state.inner, params)
+
+    def apply(self, params, grads, inner, alpha, comm, step):
+        # reference path for fused-shaped state (comm without flat support)
+        if self.fused:
+            v, _ = inner
+            new_params, new_v = super().apply(params, grads, v, alpha, comm, step)
+            look = tree_axpy(self.mu, new_v, new_params)
+            return new_params, (new_v, look)
+        return super().apply(params, grads, inner, alpha, comm, step)
+
+    def apply_fused(self, params, grads, inner, alpha, comm, step):
+        from repro.kernels.consensus_update import ops as kops
+        fl = comm.flat
+        v, _ = inner
+        spec, nbrs, w, (g, vb) = _flat_setup(fl, params, grads, v)
+        triples = [kops.cdmsgd_nesterov_update_flat(nb, w, gb, vi, alpha,
+                                                    self.mu, interpret=fl.interpret)
+                   for nb, gb, vi in zip(nbrs, g, vb)]
+        new_params = fl.unpack([t[0] for t in triples], spec)
+        new_v = fl.unpack([t[1] for t in triples], spec)
+        look = fl.unpack([t[2] for t in triples], spec)
+        return new_params, (new_v, look)
 
 
 class CDAdam(DistributedOptimizer):
@@ -184,8 +284,8 @@ class CDAdam(DistributedOptimizer):
     (they are statistics of the *local* data distribution); parameters mix.
     """
 
-    def __init__(self, schedule, b1=0.9, b2=0.999, eps=1e-8):
-        super().__init__(schedule)
+    def __init__(self, schedule, b1=0.9, b2=0.999, eps=1e-8, **kw):
+        super().__init__(schedule, **kw)
         self.b1, self.b2, self.eps = b1, b2, eps
 
     def init_inner(self, params):
@@ -207,6 +307,23 @@ class CDAdam(DistributedOptimizer):
             mixed, new_m, new_v)
         return new_params, (new_m, new_v)
 
+    def apply_fused(self, params, grads, inner, alpha, comm, step):
+        from repro.kernels.consensus_update import ops as kops
+        fl = comm.flat
+        m, v = inner
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - self.b1**t
+        bc2 = 1.0 - self.b2**t
+        spec, nbrs, w, (g, mb, vb) = _flat_setup(fl, params, grads, m, v)
+        triples = [kops.cdadam_update_flat(nb, w, gb, mi, vi, alpha, self.b1,
+                                           self.b2, self.eps, bc1, bc2,
+                                           interpret=fl.interpret)
+                   for nb, gb, mi, vi in zip(nbrs, g, mb, vb)]
+        new_params = fl.unpack([t_[0] for t_ in triples], spec)
+        new_m = fl.unpack([t_[1] for t_ in triples], spec)
+        new_v = fl.unpack([t_[2] for t_ in triples], spec)
+        return new_params, (new_m, new_v)
+
 
 # --------------------------------------------------------------------------
 # Baselines
@@ -218,7 +335,9 @@ class CentralizedSGD(DistributedOptimizer):
 
     def apply(self, params, grads, inner, alpha, comm, step):
         g = comm.mean(grads)
-        return jax.tree.map(lambda x, gi: x - alpha * gi.astype(x.dtype), params, g), inner
+        return jax.tree.map(
+            lambda x, gi: (x - alpha * gi.astype(x.dtype)).astype(x.dtype),
+            params, g), inner
 
     @property
     def uses_consensus(self):
@@ -228,8 +347,8 @@ class CentralizedSGD(DistributedOptimizer):
 class CentralizedMSGD(DistributedOptimizer):
     """Data-parallel Polyak-momentum SGD (paper's 'MSGD')."""
 
-    def __init__(self, schedule, mu: float = 0.9):
-        super().__init__(schedule)
+    def __init__(self, schedule, mu: float = 0.9, **kw):
+        super().__init__(schedule, **kw)
         self.mu = mu
 
     def init_inner(self, params):
@@ -240,8 +359,10 @@ class CentralizedMSGD(DistributedOptimizer):
 
     def apply(self, params, grads, v, alpha, comm, step):
         g = comm.mean(grads)
-        new_v = jax.tree.map(lambda vi, gi: self.mu * vi - alpha * gi.astype(vi.dtype), v, g)
-        return jax.tree.map(jnp.add, params, new_v), new_v
+        new_v = jax.tree.map(
+            lambda vi, gi: (self.mu * vi - alpha * gi.astype(vi.dtype)).astype(vi.dtype),
+            v, g)
+        return jax.tree.map(lambda x, nv: (x + nv).astype(x.dtype), params, new_v), new_v
 
     @property
     def uses_consensus(self):
@@ -256,8 +377,8 @@ class FedAvg(DistributedOptimizer):
     consensus through a central parameter server (paper §5.1 discussion).
     """
 
-    def __init__(self, schedule, local_steps: int = 1, mu: float = 0.0):
-        super().__init__(schedule)
+    def __init__(self, schedule, local_steps: int = 1, mu: float = 0.0, **kw):
+        super().__init__(schedule, **kw)
         self.local_steps = int(local_steps)
         self.mu = mu
 
@@ -268,8 +389,10 @@ class FedAvg(DistributedOptimizer):
         return param_specs
 
     def apply(self, params, grads, v, alpha, comm, step):
-        new_v = jax.tree.map(lambda vi, g: self.mu * vi - alpha * g.astype(vi.dtype), v, grads)
-        local = jax.tree.map(jnp.add, params, new_v)
+        new_v = jax.tree.map(
+            lambda vi, g: (self.mu * vi - alpha * g.astype(vi.dtype)).astype(vi.dtype),
+            v, grads)
+        local = jax.tree.map(lambda x, nv: (x + nv).astype(x.dtype), params, new_v)
         do_avg = (step + 1) % self.local_steps == 0
         avg = comm.mean(local)
         new_params = jax.tree.map(lambda a, b: jnp.where(do_avg, a, b), avg, local)
@@ -292,8 +415,8 @@ class GossipSGD(DistributedOptimizer):
     deployments.  Stacked-simulation execution mode only.
     """
 
-    def __init__(self, schedule, n_agents: int, seed: int = 0):
-        super().__init__(schedule)
+    def __init__(self, schedule, n_agents: int, seed: int = 0, **kw):
+        super().__init__(schedule, **kw)
         self.n_agents = n_agents
         self.seed = seed
 
@@ -305,7 +428,9 @@ class GossipSGD(DistributedOptimizer):
             return 0.5 * (x + x[perm])
 
         mixed = jax.tree.map(mix_leaf, params)
-        return jax.tree.map(lambda w, g: w - alpha * g.astype(w.dtype), mixed, grads), inner
+        return jax.tree.map(
+            lambda w, g: (w - alpha * g.astype(w.dtype)).astype(w.dtype),
+            mixed, grads), inner
 
 
 class TimeVaryingCDSGD(DistributedOptimizer):
@@ -317,15 +442,17 @@ class TimeVaryingCDSGD(DistributedOptimizer):
     graphs on a grid — which the tests verify.  Stacked execution mode.
     """
 
-    def __init__(self, schedule, topologies):
-        super().__init__(schedule)
+    def __init__(self, schedule, topologies, **kw):
+        super().__init__(schedule, **kw)
         import numpy as _np
         self.pis = jnp.asarray(_np.stack([t.pi for t in topologies]), jnp.float32)
 
     def apply(self, params, grads, inner, alpha, comm, step):
         pi = self.pis[step % self.pis.shape[0]]
         mixed = consensus.mix_pytree_stacked(pi, params)
-        return jax.tree.map(lambda w, g: w - alpha * g.astype(w.dtype), mixed, grads), inner
+        return jax.tree.map(
+            lambda w, g: (w - alpha * g.astype(w.dtype)).astype(w.dtype),
+            mixed, grads), inner
 
 
 def make_optimizer(name: str, schedule, **kw) -> DistributedOptimizer:

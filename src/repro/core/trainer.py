@@ -49,7 +49,15 @@ class TrainState:
 
 
 class CollaborativeTrainer:
-    """Drives N collaborating agents through a DistributedOptimizer."""
+    """Drives N collaborating agents through a DistributedOptimizer.
+
+    An optimizer constructed with ``fused=True`` runs the whole-model
+    flat-buffer update here: the stacked ``CommOps`` carries a ``FlatComm``
+    (dense ``Pi`` on packed buffers), so each step issues exactly one
+    ``pallas_call`` per parameter dtype bucket instead of one mix + axpy
+    per pytree leaf.  ``interpret`` selects Pallas interpret mode (True on
+    CPU, False on TPU).
+    """
 
     def __init__(
         self,
@@ -60,11 +68,12 @@ class CollaborativeTrainer:
         *,
         stack: bool = True,
         donate: bool = True,
+        interpret: bool = True,
     ):
         self.loss_fn = loss_fn
         self.topology = topology
         self.optimizer = optimizer
-        self.comm: CommOps = stacked_comm_ops(topology)
+        self.comm: CommOps = stacked_comm_ops(topology, interpret=interpret)
         stacked = broadcast_to_agents(params, topology.n_agents) if stack else params
         self.state = TrainState(params=stacked, opt_state=optimizer.init(stacked))
         self.history = MetricHistory()

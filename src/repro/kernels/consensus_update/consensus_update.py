@@ -49,6 +49,47 @@ def _cdmsgd_kernel(w_ref, alpha_ref, mu_ref, nbrs_ref, grad_ref, mom_ref,
     new_mom_ref[...] = v.astype(new_mom_ref.dtype)
 
 
+def _cdmsgd_nesterov_kernel(w_ref, alpha_ref, mu_ref, nbrs_ref, grad_ref,
+                            mom_ref, out_ref, new_mom_ref, look_ref,
+                            *, n_stencil: int):
+    """CDMSGD + the *next* step's Nesterov lookahead point in the same sweep.
+
+    ``look = x' + mu v'`` is where Algorithm 3 evaluates the next gradient;
+    emitting it here saves the separate ``tree_axpy`` HBM pass the unfused
+    path pays before every backward.
+    """
+    mu = mu_ref[0]
+    v = mu * mom_ref[...].astype(jnp.float32) \
+        - alpha_ref[0] * grad_ref[...].astype(jnp.float32)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for s in range(n_stencil):
+        acc += w_ref[s] * nbrs_ref[s].astype(jnp.float32)
+    x = acc + v
+    out_ref[...] = x.astype(out_ref.dtype)
+    new_mom_ref[...] = v.astype(new_mom_ref.dtype)
+    look_ref[...] = (x + mu * v).astype(look_ref.dtype)
+
+
+def _cdadam_kernel(w_ref, scal_ref, nbrs_ref, grad_ref, m_ref, v_ref,
+                   out_ref, new_m_ref, new_v_ref, *, n_stencil: int):
+    """Consensus mixing + local Adam moments, one f32-accumulated pass.
+
+    ``scal_ref`` packs [alpha, b1, b2, eps, bc1, bc2] — the bias corrections
+    ``bc = 1 - beta^t`` depend on the (traced) step and are computed outside.
+    """
+    alpha, b1, b2, eps, bc1, bc2 = (scal_ref[i] for i in range(6))
+    g = grad_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+    v = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for s in range(n_stencil):
+        acc += w_ref[s] * nbrs_ref[s].astype(jnp.float32)
+    step_dir = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+    out_ref[...] = (acc - alpha * step_dir).astype(out_ref.dtype)
+    new_m_ref[...] = m.astype(new_m_ref.dtype)
+    new_v_ref[...] = v.astype(new_v_ref.dtype)
+
+
 def _grid_and_specs(rows: int, block_rows: int, n_stencil: int):
     grid = (pl.cdiv(rows, block_rows),)
     nbr_spec = pl.BlockSpec((n_stencil, block_rows, LANE), lambda i: (0, i, 0))
@@ -119,3 +160,85 @@ def cdmsgd_update_2d(
         interpret=interpret,
     )(weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
       jnp.asarray([mu], jnp.float32), neighbors, grad, momentum)
+
+
+def cdmsgd_nesterov_update_2d(
+    neighbors: jnp.ndarray,       # (S, rows, 128)
+    weights: jnp.ndarray,         # (S,)
+    grad: jnp.ndarray,            # (rows, 128) — evaluated at the lookahead
+    momentum: jnp.ndarray,        # (rows, 128)
+    alpha,
+    mu,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Returns ``(x', v', x' + mu v')`` — params, momentum, next lookahead."""
+    s, rows, lane = neighbors.shape
+    block_rows = min(block_rows, rows)
+    grid, nbr_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
+    kernel = functools.partial(_cdmsgd_nesterov_kernel, n_stencil=s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s,), lambda i: (0,)),        # weights
+            pl.BlockSpec((1,), lambda i: (0,)),        # alpha
+            pl.BlockSpec((1,), lambda i: (0,)),        # mu
+            nbr_spec,
+            mat_spec,
+            mat_spec,
+        ],
+        out_specs=(mat_spec, mat_spec, mat_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, lane), neighbors.dtype),
+            jax.ShapeDtypeStruct((rows, lane), momentum.dtype),
+            jax.ShapeDtypeStruct((rows, lane), neighbors.dtype),
+        ),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
+      jnp.asarray([mu], jnp.float32), neighbors, grad, momentum)
+
+
+def cdadam_update_2d(
+    neighbors: jnp.ndarray,       # (S, rows, 128)
+    weights: jnp.ndarray,         # (S,)
+    grad: jnp.ndarray,            # (rows, 128)
+    m: jnp.ndarray,               # (rows, 128) first moment (local)
+    v: jnp.ndarray,               # (rows, 128) second moment (local)
+    alpha,
+    b1,
+    b2,
+    eps,
+    bc1,                          # 1 - b1**t (traced; computed by the caller)
+    bc2,                          # 1 - b2**t
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Returns ``(x', m', v')`` — mixed params with a local-Adam step."""
+    s, rows, lane = neighbors.shape
+    block_rows = min(block_rows, rows)
+    grid, nbr_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
+    kernel = functools.partial(_cdadam_kernel, n_stencil=s)
+    scal = jnp.stack([jnp.asarray(x, jnp.float32) for x in
+                      (alpha, b1, b2, eps, bc1, bc2)])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s,), lambda i: (0,)),        # weights
+            pl.BlockSpec((6,), lambda i: (0,)),        # packed scalars
+            nbr_spec,
+            mat_spec,
+            mat_spec,
+            mat_spec,
+        ],
+        out_specs=(mat_spec, mat_spec, mat_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, lane), neighbors.dtype),
+            jax.ShapeDtypeStruct((rows, lane), m.dtype),
+            jax.ShapeDtypeStruct((rows, lane), v.dtype),
+        ),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), scal, neighbors, grad, m, v)

@@ -1,10 +1,24 @@
-"""jit'd wrappers: pytree-level fused consensus updates.
+"""jit'd wrappers: whole-model fused consensus updates on flat buffers.
 
-`cdsgd_update_tree` applies the fused kernel leaf-by-leaf: each leaf is
-flattened, padded to a (rows, 128) tile, updated in one HBM sweep, and
-reshaped back.  ``neighbor_trees`` are the already-communicated neighbor
-parameter pytrees (the ppermute outputs in the sharded trainer, or plain
-stacked slices in simulation) in the same order as ``weights``.
+The pytree entry points (``cdsgd_update_tree`` & co.) pack the entire model
+into dtype-bucketed ``(rows, 128)`` buffers (:mod:`repro.core.flatbuf`) and
+run **one** ``pallas_call`` per dtype bucket — not one per leaf.  For a
+transformer that collapses hundreds of kernel launches (each with its own
+padding waste) into one whole-model HBM sweep per bucket.
+
+``neighbor_trees`` are the already-communicated neighbor parameter pytrees
+(the ppermute outputs in the sharded trainer, or plain stacked slices in
+simulation) in the same order as ``weights``.
+
+The ``*_update_flat`` entry points operate on already-packed buffers and
+dispatch on ``weights.ndim``:
+
+* ``weights (S,)``   — one agent's stencil: ``neighbors (S, rows, 128)``,
+  per-agent operands ``(rows, 128)`` (the sharded path inside shard_map);
+* ``weights (A, A)`` — the dense stacked simulation: ``neighbors`` is the
+  full agent stack ``(A, rows, 128)`` shared by every agent, per-agent
+  operands ``(A, rows, 128)``, and the kernel is vmapped over agent rows of
+  ``Pi`` (still a single batched ``pallas_call`` in the jaxpr).
 
 On CPU (this container) the kernels run with ``interpret=True``; on TPU
 pass ``interpret=False`` for the compiled path.
@@ -18,27 +32,73 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import flatbuf
 from repro.kernels.consensus_update.consensus_update import (
     LANE,
     cdsgd_update_2d,
     cdmsgd_update_2d,
+    cdmsgd_nesterov_update_2d,
+    cdadam_update_2d,
 )
 
 PyTree = Any
 
 
-def _to_tiles(x: jnp.ndarray):
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    rows = -(-n // LANE)
-    pad = rows * LANE - n
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(rows, LANE), n
+# --------------------------------------------------------------------------
+# bucket-level entry points (packed buffers in, packed buffers out)
+# --------------------------------------------------------------------------
 
 
-def _from_tiles(t: jnp.ndarray, n: int, shape, dtype):
-    return t.reshape(-1)[:n].reshape(shape).astype(dtype)
+def cdsgd_update_flat(neighbors, weights, grad, alpha, *, interpret: bool = True):
+    if weights.ndim == 2:
+        return jax.vmap(lambda w, g: cdsgd_update_2d(
+            neighbors, w, g, alpha, interpret=interpret))(weights, grad)
+    return cdsgd_update_2d(neighbors, weights, grad, alpha, interpret=interpret)
+
+
+def cdmsgd_update_flat(neighbors, weights, grad, momentum, alpha, mu, *,
+                       interpret: bool = True):
+    if weights.ndim == 2:
+        return jax.vmap(lambda w, g, v: cdmsgd_update_2d(
+            neighbors, w, g, v, alpha, mu, interpret=interpret))(
+                weights, grad, momentum)
+    return cdmsgd_update_2d(neighbors, weights, grad, momentum, alpha, mu,
+                            interpret=interpret)
+
+
+def cdmsgd_nesterov_update_flat(neighbors, weights, grad, momentum, alpha, mu,
+                                *, interpret: bool = True):
+    if weights.ndim == 2:
+        return jax.vmap(lambda w, g, v: cdmsgd_nesterov_update_2d(
+            neighbors, w, g, v, alpha, mu, interpret=interpret))(
+                weights, grad, momentum)
+    return cdmsgd_nesterov_update_2d(neighbors, weights, grad, momentum,
+                                     alpha, mu, interpret=interpret)
+
+
+def cdadam_update_flat(neighbors, weights, grad, m, v, alpha, b1, b2, eps,
+                       bc1, bc2, *, interpret: bool = True):
+    if weights.ndim == 2:
+        return jax.vmap(lambda w, g, mi, vi: cdadam_update_2d(
+            neighbors, w, g, mi, vi, alpha, b1, b2, eps, bc1, bc2,
+            interpret=interpret))(weights, grad, m, v)
+    return cdadam_update_2d(neighbors, weights, grad, m, v, alpha, b1, b2,
+                            eps, bc1, bc2, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# pytree entry points (one kernel launch per dtype bucket)
+# --------------------------------------------------------------------------
+
+
+def _pack_all(spec, self_tree, neighbor_trees, *other_trees):
+    """Pack self+neighbors into stacked (S, rows, 128) buckets + extras."""
+    self_bufs = flatbuf.pack(self_tree, spec)
+    nbr_bufs = [flatbuf.pack(t, spec) for t in neighbor_trees]
+    stacked = [jnp.stack([sb] + [nb[i] for nb in nbr_bufs])
+               for i, sb in enumerate(self_bufs)]
+    others = [flatbuf.pack(t, spec) for t in other_trees]
+    return stacked, others
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -51,14 +111,11 @@ def cdsgd_update_tree(
     *,
     interpret: bool = True,
 ) -> PyTree:
-    def leaf(x, g, *nbrs):
-        tiles = [_to_tiles(t)[0] for t in (x,) + nbrs]
-        gt, n = _to_tiles(g)
-        stacked = jnp.stack(tiles)
-        out = cdsgd_update_2d(stacked, weights, gt, alpha, interpret=interpret)
-        return _from_tiles(out, n, x.shape, x.dtype)
-
-    return jax.tree.map(leaf, self_tree, grad_tree, *neighbor_trees)
+    spec = flatbuf.make_flat_spec(self_tree)
+    stacked, (grads,) = _pack_all(spec, self_tree, neighbor_trees, grad_tree)
+    outs = [cdsgd_update_2d(nb, weights, g, alpha, interpret=interpret)
+            for nb, g in zip(stacked, grads)]
+    return flatbuf.unpack(outs, spec)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -73,18 +130,66 @@ def cdmsgd_update_tree(
     *,
     interpret: bool = True,
 ):
-    def leaf(x, g, v, *nbrs):
-        tiles = [_to_tiles(t)[0] for t in (x,) + nbrs]
-        gt, n = _to_tiles(g)
-        vt, _ = _to_tiles(v)
-        stacked = jnp.stack(tiles)
-        out, new_v = cdmsgd_update_2d(stacked, weights, gt, vt, alpha, mu,
-                                      interpret=interpret)
-        return (_from_tiles(out, n, x.shape, x.dtype),
-                _from_tiles(new_v, n, v.shape, v.dtype))
-
-    pairs = jax.tree.map(leaf, self_tree, grad_tree, momentum_tree, *neighbor_trees)
-    flat, treedef = jax.tree.flatten(pairs, is_leaf=lambda t: isinstance(t, tuple))
-    params = jax.tree.unflatten(treedef, [p for p, _ in flat])
-    mom = jax.tree.unflatten(treedef, [v for _, v in flat])
+    spec = flatbuf.make_flat_spec(self_tree)
+    stacked, (grads, moms) = _pack_all(
+        spec, self_tree, neighbor_trees, grad_tree, momentum_tree)
+    pairs = [cdmsgd_update_2d(nb, weights, g, v, alpha, mu, interpret=interpret)
+             for nb, g, v in zip(stacked, grads, moms)]
+    params = flatbuf.unpack([p for p, _ in pairs], spec)
+    mom = flatbuf.unpack([v for _, v in pairs], spec)
     return params, mom
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cdmsgd_nesterov_update_tree(
+    self_tree: PyTree,
+    neighbor_trees: Sequence[PyTree],
+    weights: jnp.ndarray,
+    grad_tree: PyTree,            # evaluated at the current lookahead point
+    momentum_tree: PyTree,
+    alpha,
+    mu,
+    *,
+    interpret: bool = True,
+):
+    """Returns ``(params', momentum', lookahead')`` in one sweep per bucket."""
+    spec = flatbuf.make_flat_spec(self_tree)
+    stacked, (grads, moms) = _pack_all(
+        spec, self_tree, neighbor_trees, grad_tree, momentum_tree)
+    triples = [cdmsgd_nesterov_update_2d(nb, weights, g, v, alpha, mu,
+                                         interpret=interpret)
+               for nb, g, v in zip(stacked, grads, moms)]
+    params = flatbuf.unpack([t[0] for t in triples], spec)
+    mom = flatbuf.unpack([t[1] for t in triples], spec)
+    look = flatbuf.unpack([t[2] for t in triples], spec)
+    return params, mom, look
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cdadam_update_tree(
+    self_tree: PyTree,
+    neighbor_trees: Sequence[PyTree],
+    weights: jnp.ndarray,
+    grad_tree: PyTree,
+    m_tree: PyTree,
+    v_tree: PyTree,
+    alpha,
+    b1,
+    b2,
+    eps,
+    bc1,
+    bc2,
+    *,
+    interpret: bool = True,
+):
+    """Returns ``(params', m', v')``; moments stay local, params mix."""
+    spec = flatbuf.make_flat_spec(self_tree)
+    stacked, (grads, ms, vs) = _pack_all(
+        spec, self_tree, neighbor_trees, grad_tree, m_tree, v_tree)
+    triples = [cdadam_update_2d(nb, weights, g, m, v, alpha, b1, b2, eps,
+                                bc1, bc2, interpret=interpret)
+               for nb, g, m, v in zip(stacked, grads, ms, vs)]
+    params = flatbuf.unpack([t[0] for t in triples], spec)
+    new_m = flatbuf.unpack([t[1] for t in triples], spec)
+    new_v = flatbuf.unpack([t[2] for t in triples], spec)
+    return params, new_m, new_v

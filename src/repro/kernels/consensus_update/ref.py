@@ -18,3 +18,26 @@ def cdmsgd_update_ref(neighbors, weights, grad, momentum, alpha, mu):
     mixed = jnp.einsum("s,sre->re", weights.astype(jnp.float32),
                        neighbors.astype(jnp.float32))
     return (mixed + v).astype(neighbors.dtype), v.astype(momentum.dtype)
+
+
+def cdmsgd_nesterov_update_ref(neighbors, weights, grad, momentum, alpha, mu):
+    """CDMSGD + the next lookahead point ``x' + mu v'`` (Algorithm 3)."""
+    v = mu * momentum.astype(jnp.float32) - alpha * grad.astype(jnp.float32)
+    mixed = jnp.einsum("s,sre->re", weights.astype(jnp.float32),
+                       neighbors.astype(jnp.float32))
+    x = mixed + v
+    return (x.astype(neighbors.dtype), v.astype(momentum.dtype),
+            (x + mu * v).astype(neighbors.dtype))
+
+
+def cdadam_update_ref(neighbors, weights, grad, m, v, alpha, b1, b2, eps,
+                      bc1, bc2):
+    """Consensus mixing + local Adam moments (beyond-paper extension)."""
+    g = grad.astype(jnp.float32)
+    new_m = b1 * m.astype(jnp.float32) + (1.0 - b1) * g
+    new_v = b2 * v.astype(jnp.float32) + (1.0 - b2) * g * g
+    mixed = jnp.einsum("s,sre->re", weights.astype(jnp.float32),
+                       neighbors.astype(jnp.float32))
+    out = mixed - alpha * (new_m / bc1) / (jnp.sqrt(new_v / bc2) + eps)
+    return (out.astype(neighbors.dtype), new_m.astype(m.dtype),
+            new_v.astype(v.dtype))

@@ -32,7 +32,7 @@ import traceback
 
 def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
            mixing: str, optimizer_name: str, topology: str, microbatches: int = 1,
-           context_parallel: bool = False):
+           context_parallel: bool = False, fused: bool = False):
     import jax
     from repro.configs import get_config, INPUT_SHAPES
     from repro.core.optim import make_optimizer
@@ -47,7 +47,10 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
         return None, "skip: full-attention arch at 500k decode (DESIGN.md)"
 
     if shape.kind == "train":
-        opt = make_optimizer(optimizer_name, 0.01, **({"mu": 0.9} if optimizer_name in ("cdmsgd", "cdmsgd_nesterov", "msgd") else {}))
+        kw = {"mu": 0.9} if optimizer_name in ("cdmsgd", "cdmsgd_nesterov", "msgd") else {}
+        if fused:
+            kw["fused"] = True
+        opt = make_optimizer(optimizer_name, 0.01, **kw)
         bundle = steps_lib.build_train_step(
             cfg, shape, mesh, opt, mode=mode, topology_name=topology, mixing=mixing,
             microbatches=microbatches)
@@ -73,7 +76,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
              optimizer_name: str = "cdmsgd", topology: str = "ring",
              out_dir: str = "results/dryrun", tag: str = "",
              analyze: bool = True, verbose: bool = True, microbatches: int = 1,
-             context_parallel: bool = False):
+             context_parallel: bool = False, fused: bool = False):
     import jax
     from repro.analysis.hlo import analyze_hlo
     from repro.analysis.roofline import model_flops, roofline_from_stats
@@ -83,7 +86,8 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     t0 = time.time()
     built, skip = _build(arch, shape_name, multi_pod=multi_pod, mode=mode,
                          mixing=mixing, optimizer_name=optimizer_name, topology=topology,
-                         microbatches=microbatches, context_parallel=context_parallel)
+                         microbatches=microbatches, context_parallel=context_parallel,
+                         fused=fused)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
               "mixing": mixing, "topology": topology, "optimizer": optimizer_name,
               "microbatches": microbatches}
@@ -103,6 +107,8 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
             t_compile = time.time() - t0 - t_lower
             ma = compiled.memory_analysis()
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):   # jax 0.4.x: one dict per program
+                ca = ca[0] if ca else {}
             print(f"[dryrun] {label} memory_analysis: {ma}")
             print(f"[dryrun] {label} cost_analysis flops={ca.get('flops')} "
                   f"bytes={ca.get('bytes accessed')}")
@@ -157,8 +163,12 @@ def main() -> int:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--mode", default="train", choices=["train", "train_hier"])
-    ap.add_argument("--mixing", default="dense", choices=["dense", "ppermute"])
+    ap.add_argument("--mixing", default="dense",
+                    choices=["dense", "ppermute", "ppermute_fused"])
     ap.add_argument("--optimizer", default="cdmsgd")
+    ap.add_argument("--fused", action="store_true",
+                    help="flat-buffer fused optimizer update (pairs with "
+                         "--mixing ppermute_fused)")
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
@@ -183,7 +193,7 @@ def main() -> int:
                        mixing=args.mixing, optimizer_name=args.optimizer,
                        topology=args.topology, out_dir=args.out, tag=args.tag,
                        analyze=not args.no_analyze, microbatches=args.microbatch,
-                       context_parallel=args.context_parallel)
+                       context_parallel=args.context_parallel, fused=args.fused)
         if str(rec.get("status", "")).startswith("FAIL"):
             failures += 1
     print(f"[dryrun] done: {len(pairs)} pairs, {failures} failures")

@@ -10,6 +10,14 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across versions: 0.4.x has no ``axis_types`` kwarg."""
+    if hasattr(jax.sharding, "AxisType"):   # jax >= 0.5
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=auto)
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
 
@@ -19,13 +27,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 4, n_model: int = 2, *, multi_pod: bool = False):
     """Small host-device mesh for tests (requires the XLA host-device flag)."""
-    auto3 = (jax.sharding.AxisType.Auto,) * 3
     if multi_pod:
-        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"), axis_types=auto3)
-    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=auto3[:2])
+        return _make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return _make_mesh((n_data, n_model), ("data", "model"))

@@ -220,7 +220,7 @@ def cache_partition_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
         # fallback: batch-shard dim 1 if it matches
         return P(*([None] * len(shp)))
 
-    flat, treedef = jax.tree.flatten_with_path(structure)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(structure)
     specs = [leaf_spec(path, leaf) for path, leaf in flat]
     return jax.tree.unflatten(treedef, specs)
 

@@ -7,11 +7,18 @@ mixing runs either as
 
 * ``mixing="dense"``   — stacked ``Pi`` einsum under pjit (paper-faithful
   semantics, naive collective schedule: XLA lowers it to all-gathers over
-  the agent axis), or
+  the agent axis),
 * ``mixing="ppermute"``— a ``shard_map`` region whose circulant topology
-  lowers to `collective-permute`s between ICI neighbours — the paper's
-  fixed-topology communication pattern expressed natively (and the §Perf
-  optimization target).
+  lowers to `collective-permute`s between ICI neighbours, applied leaf by
+  leaf (one collective per leaf per shift), or
+* ``mixing="ppermute_fused"`` — the whole optimizer update runs inside one
+  ``shard_map`` region on dtype-bucketed flat buffers
+  (:mod:`repro.core.flatbuf`): one ``lax.ppermute`` per circulant shift
+  offset per bucket for the *entire model*, followed by the fused Pallas
+  update kernel (one launch per bucket) in the same region.  With a
+  ``fused=True`` optimizer this is the §Perf fast path; a non-fused
+  optimizer still runs correctly (its per-leaf update executes locally
+  inside the region).
 
 `serve_step` decodes one token against the sharded KV cache; `prefill_step`
 is the full-sequence forward (compute-equivalent to cache-filling prefill;
@@ -41,8 +48,12 @@ PyTree = Any
 
 
 def _shard_map(fn, mesh, in_specs, out_specs):
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=False)
+    if hasattr(jax, "shard_map"):          # jax >= 0.6
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm  # jax 0.4.x
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 @dataclasses.dataclass
@@ -69,6 +80,44 @@ class TrainStepBundle:
             structs, specs)
 
 
+def _agent_factors(mesh: Mesh, agent_axes) -> consensus_lib.FactoredMix:
+    """Per-axis circulant factors for a multi-axis agent mesh."""
+    factors = []
+    for a in agent_axes:
+        s = mesh.shape[a]
+        t = make_topology("ring" if s > 2 else "fully_connected", s)
+        factors.append((a, t))
+    return consensus_lib.FactoredMix(tuple(factors))
+
+
+def make_local_fused_comm(
+    topology: Topology, mesh: Mesh, mode: str, *, interpret: bool = True,
+) -> CommOps:
+    """CommOps whose every member runs *inside* a shard_map region.
+
+    Carries a :class:`repro.core.consensus.FlatComm` so ``fused=True``
+    optimizers run the flat-buffer ppermute + Pallas-kernel fast path; the
+    ``mix``/``mean`` members are the local (non-shard_map-wrapped) circulant
+    fns so non-fused optimizers work in the same region.
+    """
+    rules = shlib.rules_for_mode(mode, mesh)
+    agent_axes = rules["agent"]
+    axes = agent_axes if isinstance(agent_axes, tuple) else (agent_axes,)
+    if len(axes) > 1:
+        fm = _agent_factors(mesh, axes)
+        flat = consensus_lib.sharded_flat_comm(fm.factors, interpret=interpret)
+        local_mix = fm.make_mix_fn()
+        lam2, lamn, n_agents = fm.lambda2, fm.lambdan, fm.n_agents
+    else:
+        flat = consensus_lib.sharded_flat_comm([(axes[0], topology)],
+                                               interpret=interpret)
+        local_mix = consensus_lib.make_sharded_mix_fn(topology, axes[0])
+        lam2, lamn, n_agents = topology.lambda2, topology.lambdan, topology.n_agents
+    local_mean = consensus_lib.make_sharded_mean_fn(axes)
+    return CommOps(mix=local_mix, mean=local_mean, n_agents=n_agents,
+                   lambda2=lam2, lambdan=lamn, flat=flat)
+
+
 def make_mix_comm(
     topology: Topology, mesh: Mesh, param_specs: PyTree, mode: str, mixing: str,
 ) -> CommOps:
@@ -76,18 +125,16 @@ def make_mix_comm(
     rules = shlib.rules_for_mode(mode, mesh)
     agent_axes = rules["agent"]
     if mixing == "dense":
-        return stacked_comm_ops(topology)
+        # no FlatComm here: under pjit the batched (vmapped) fused kernel
+        # would force all-gathers of the stacked params — the sharded fused
+        # fast path is mixing="ppermute_fused"; dense stays the reference.
+        return dataclasses.replace(stacked_comm_ops(topology), flat=None)
     if mixing != "ppermute":
         raise ValueError(f"unknown mixing {mixing!r}")
 
     if isinstance(agent_axes, tuple) and len(agent_axes) > 1:
         # factored topology: one circulant factor per mesh axis
-        sizes = [mesh.shape[a] for a in agent_axes]
-        factors = []
-        for a, s in zip(agent_axes, sizes):
-            t = make_topology("ring" if s > 2 else "fully_connected", s)
-            factors.append((a, t))
-        fm = consensus_lib.FactoredMix(tuple(factors))
+        fm = _agent_factors(mesh, agent_axes)
         local_mix = fm.make_mix_fn()
         lam2, lamn = fm.lambda2, fm.lambdan
         n_agents = fm.n_agents
@@ -119,6 +166,7 @@ def build_train_step(
     mixing: str = "dense",
     remat: bool = True,
     microbatches: int = 1,
+    interpret: bool = True,       # Pallas interpret mode (fused path; False on TPU)
 ) -> TrainStepBundle:
     rules = shlib.rules_for_mode(mode, mesh)
     n_agents = shlib.agent_count(mesh, mode)
@@ -129,7 +177,12 @@ def build_train_step(
     pspecs = shlib.safe_partition_specs(template, rules, mesh)
     opt_specs = optimizer.state_specs(pspecs)
     batch_specs = shlib.train_batch_specs(cfg, shape, mesh, mode)
-    comm = make_mix_comm(topology, mesh, pspecs, mode, mixing)
+    if mixing == "ppermute_fused":
+        # the whole optimizer update (neighbor exchange + fused kernel) runs
+        # inside one shard_map region; comm members are local fns.
+        comm = make_local_fused_comm(topology, mesh, mode, interpret=interpret)
+    else:
+        comm = make_mix_comm(topology, mesh, pspecs, mode, mixing)
 
     def train_step(params, opt_state, batch):
         gp = optimizer.grad_params(params, opt_state)
@@ -157,7 +210,16 @@ def build_train_step(
 
             gsum, (losses, metrics) = jax.lax.scan(mb_step, zero, mb)
             grads = jax.tree.map(lambda g: g / microbatches, gsum)
-        new_params, new_opt = optimizer.update(params, grads, opt_state, comm)
+        if mixing == "ppermute_fused":
+            def local_update(p, g, s):
+                return optimizer.update(p, g, s, comm)
+
+            new_params, new_opt = _shard_map(
+                local_update, mesh,
+                (pspecs, pspecs, opt_specs), (pspecs, opt_specs),
+            )(params, grads, opt_state)
+        else:
+            new_params, new_opt = optimizer.update(params, grads, opt_state, comm)
         out = {"loss": jnp.mean(losses)}
         out.update({k: jnp.mean(v) for k, v in metrics.items()})
         return new_params, new_opt, out

@@ -30,6 +30,9 @@ def main() -> None:
     ap.add_argument("--agents", type=int, default=5)
     ap.add_argument("--topology", default="fully_connected")
     ap.add_argument("--optimizer", default="cdsgd")
+    ap.add_argument("--fused", action="store_true",
+                    help="flat-buffer fused consensus update (one Pallas "
+                         "launch per dtype bucket; consensus optimizers only)")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--schedule", default="fixed", choices=["fixed", "diminishing"])
@@ -61,6 +64,8 @@ def main() -> None:
     kw = {}
     if args.optimizer in ("cdmsgd", "cdmsgd_nesterov", "msgd", "fedavg"):
         kw["mu"] = args.momentum
+    if args.fused:
+        kw["fused"] = True
     opt = make_optimizer(args.optimizer, sched, **kw)
     topo = make_topology(args.topology, args.agents)
 

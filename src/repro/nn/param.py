@@ -75,7 +75,7 @@ def _init_leaf(pd: ParamDef, key) -> jnp.ndarray:
 def init_params(template: PyTree, key) -> PyTree:
     """Materialize parameters; keys derived per tree path (deterministic)."""
 
-    flat, treedef = jax.tree.flatten_with_path(template, is_leaf=_is_def)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template, is_leaf=_is_def)
     leaves = []
     for path, pd in flat:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)

@@ -104,23 +104,30 @@ def wkv6_chunked(r, k, v, w, u, state0=None, *, chunk: int = 32):
     """Chunked (matmul-form) WKV6 — numerically identical recurrence,
     O(S/C) scan steps instead of O(S), intra-chunk work on the MXU.
 
-    Within a chunk with cumulative decays ``A_t = prod_{tau<=t} w_tau``:
+    Within a block with cumulative decays ``A_t = prod_{tau<=t} w_tau``:
 
         y_t   = (r_t * A_{t-1}) . S_0
               + sum_{tau<t} [ (r_t * A_{t-1}/A_tau) . k_tau ] v_tau
               + (r_t . (u * k_t)) v_t
         S_C   = diag(A_C) S_0 + sum_tau diag(A_C/A_tau) k_tau v_tau^T
 
-    Decay *ratios* are always <= 1 so the products cannot overflow; the
-    1/A_tau factors bound the usable chunk size (f32: chunk <= ~32 for
-    worst-case decays) — the default is chosen accordingly.  This is the
-    §Perf optimization for the rwkv6 prefill/train memory term: the scan
-    trip count drops 32x and the state stops round-tripping per token.
+    ``chunk`` sets the scan/state granularity (trip count = S/chunk); the
+    intra-chunk pair term is evaluated on ``sub``-sized blocks because its
+    factored ``1/A_tau`` terms are the only place exponent range matters —
+    the state-update ratios ``A_C/A_tau`` are always <= 1 and stable at any
+    chunk size.  With the mid-block shift, ``sub=16`` keeps the f32 exp
+    range safe down to per-step decays of ~1e-5 (harsher than any practical
+    RWKV decay).  This is the §Perf optimization for the rwkv6
+    prefill/train memory term: the scan trip count drops ``chunk``x and the
+    state stops round-tripping per token.
     """
     b, s, n_h, hs = r.shape
     chunk = min(chunk, s)
     if s % chunk:
         raise ValueError(f"seq {s} must be a multiple of chunk {chunk}")
+    sub = min(16, chunk)
+    while chunk % sub:
+        sub -= 1
     n_chunks = s // chunk
     f32 = jnp.float32
     r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
@@ -132,25 +139,22 @@ def wkv6_chunked(r, k, v, w, u, state0=None, *, chunk: int = 32):
         return jnp.moveaxis(a.reshape(b, n_chunks, chunk, n_h, hs), 1, 0)
 
     rc, kc, vc, wc = (to_chunks(a) for a in (r, k, v, w))
-    mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)   # strict lower: tau < t
+    mask = jnp.tril(jnp.ones((sub, sub), bool), -1)       # strict lower: tau < t
 
-    def step(S, xs):
-        rb, kb, vb, wb = xs                         # (b, C, n_h, hs)
-        # log-space with a mid-chunk shift: halves the exponent range of the
-        # 1/A_tau factors (decays below ~exp(-80/C) per step still underflow
-        # f32 — chunk size is the knob; C=32 covers all practical RWKV decays)
+    def block(S, rb, kb, vb, wb):
+        """One sub-block: (y, S') from the factored log-space form."""
         lw = jnp.log(jnp.maximum(wb, 1e-38))
         l_inc = jnp.cumsum(lw, axis=1)               # log A_t (inclusive)
-        mid = l_inc[:, chunk // 2 : chunk // 2 + 1]  # per-(b,h,hs) shift
+        mid = l_inc[:, sub // 2 : sub // 2 + 1]      # per-(b,h,hs) shift
         a_inc = jnp.exp(l_inc - mid)
         a_exc = jnp.exp(l_inc - lw - mid)            # A_{t-1} (exclusive)
         r_dec = rb * a_exc                           # r_t * A_{t-1} * e^-mid
         k_dec = kb / a_inc                           # k_tau * e^mid / A_tau
-        # inter-chunk: y_inter[t] = (r_t A_{t-1}) . S; undo the shift on S's
+        # inter-block: y_inter[t] = (r_t A_{t-1}) . S; undo the shift on S's
         # contracted dim (S_shift[i,j] = e^{mid_i} S[i,j])
         s_shift = jnp.exp(mid[:, 0])[..., None] * S  # (b, n_h, hs, hs)
         y_inter = jnp.einsum("bchi,bhij->bchj", r_dec, s_shift)
-        # intra-chunk pair scores: shifts cancel in r_dec . k_dec
+        # intra-block pair scores: shifts cancel in r_dec . k_dec
         p = jnp.einsum("bthi,bchi->bhtc", r_dec, k_dec)
         p = jnp.where(mask[None, None], p, 0.0)
         y_intra = jnp.einsum("bhtc,bchj->bthj", p, vb)
@@ -163,6 +167,15 @@ def wkv6_chunked(r, k, v, w, u, state0=None, *, chunk: int = 32):
         s_new = a_last_true[..., None] * S + jnp.einsum("bchi,bchj->bhij", k_scaled, vb)
         return s_new, y
 
+    def step(S, xs):
+        rb, kb, vb, wb = xs                          # (b, C, n_h, hs)
+        ys = []
+        for i in range(chunk // sub):                # static unroll
+            sl = slice(i * sub, (i + 1) * sub)
+            S, y = block(S, rb[:, sl], kb[:, sl], vb[:, sl], wb[:, sl])
+            ys.append(y)
+        return S, ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=1)
+
     S, ys = lax.scan(step, s0, (rc, kc, vc, wc))
     y = jnp.moveaxis(ys, 0, 1).reshape(b, s, n_h, hs)
     return y, S
@@ -171,9 +184,10 @@ def wkv6_chunked(r, k, v, w, u, state0=None, *, chunk: int = 32):
 def rwkv6_time_mix(params, x, *, head_size: int = 64,
                    state: Optional[Dict[str, jnp.ndarray]] = None,
                    chunk: int = 32):
-    # chunk=32 is decay-safe for per-step decays >= ~0.004 (f32 exp range
-    # after the mid-chunk shift); chunk=64 halves the memory term again
-    # (EXPERIMENTS.md §Perf C3) but requires decays >= ~0.06 — opt-in.
+    # any chunk size is decay-safe: the intra-chunk pair term runs on
+    # 16-wide sub-blocks (see wkv6_chunked), so chunk only trades scan trip
+    # count against the (b, chunk, n_h, hs) activation term
+    # (EXPERIMENTS.md §Perf C3).
     """Returns (y, new_state). state = {"shift": (b,d), "S": (b,n_h,hs,hs)}."""
     b, s, d = x.shape
     n_h = d // head_size

@@ -1,0 +1,80 @@
+"""Hypothesis compatibility shim.
+
+Re-exports ``given`` / ``settings`` / ``strategies`` / ``hypothesis.extra.numpy``
+when hypothesis is installed; otherwise provides a deterministic fixed-seed
+fallback implementing the tiny strategy subset these tests use
+(``st.integers``, ``st.floats``, ``hnp.arrays``), so the suite collects and
+runs with or without hypothesis in the environment.
+
+The fallback draws ``_N_EXAMPLES`` samples from ``np.random.default_rng(0)``
+per test — less adversarial than hypothesis's shrinking search, but the same
+property is exercised on a spread of inputs and failures are reproducible.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _N_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng):
+            return self._sample_fn(rng)
+
+    class _StModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=-1e6, max_value=1e6, width=64, **_kw):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    st = _StModule()
+
+    class _HnpModule:
+        @staticmethod
+        def arrays(dtype, shape, elements=None):
+            shape = (shape,) if isinstance(shape, int) else tuple(shape)
+
+            def sample(rng):
+                if elements is None:
+                    return rng.standard_normal(shape).astype(dtype)
+                n = int(np.prod(shape)) if shape else 1
+                flat = [elements.sample(rng) for _ in range(n)]
+                return np.asarray(flat, dtype=dtype).reshape(shape)
+
+            return _Strategy(sample)
+
+    hnp = _HnpModule()
+
+    def given(**strategies):
+        def decorator(fn):
+            # NB: no functools.wraps — copying fn's signature would make
+            # pytest resolve the strategy-drawn parameters as fixtures.
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(_N_EXAMPLES):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return decorator
+
+    def settings(**_kw):
+        def decorator(fn):
+            return fn
+
+        return decorator

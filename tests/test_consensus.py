@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+from hypcompat import given, settings, st, hnp
 
 from repro.core.consensus import (
     FactoredMix,

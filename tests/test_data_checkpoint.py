@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data import (
@@ -83,8 +83,8 @@ def test_checkpoint_roundtrip(tmp_path):
     save_checkpoint(d, 12, tree)
     assert latest_step(d) == 12
     restored = restore_checkpoint(d, tree)
-    for (pa, la), (pb, lb) in zip(jax.tree.flatten_with_path(tree)[0],
-                                  jax.tree.flatten_with_path(restored)[0]):
+    for (pa, la), (pb, lb) in zip(jax.tree_util.tree_flatten_with_path(tree)[0],
+                                  jax.tree_util.tree_flatten_with_path(restored)[0]):
         np.testing.assert_array_equal(np.asarray(la, np.float32),
                                       np.asarray(lb, np.float32))
 

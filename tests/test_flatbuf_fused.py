@@ -1,0 +1,315 @@
+"""Flat-buffer fused consensus updates: pack/unpack + fused-vs-oracle parity.
+
+The fused path must be semantics-preserving: every test pins a fused
+whole-model update (one Pallas launch per dtype bucket) against either the
+dense-``Pi`` stacked oracle (``mix_pytree_stacked``) or the unfused
+reference optimizer, including odd leaf sizes (not a multiple of 128),
+bf16 params with f32 accumulation, and momentum-state round-trips.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flatbuf
+from repro.core.consensus import mix_pytree_stacked
+from repro.core.optim import (
+    CDSGD,
+    CDMSGD,
+    CDMSGDNesterov,
+    CDAdam,
+    stacked_comm_ops,
+)
+from repro.core.topology import make_topology
+from repro.core.trainer import CollaborativeTrainer
+from repro.kernels.consensus_update import ops as kops
+from repro.kernels.consensus_update.consensus_update import (
+    cdadam_update_2d,
+    cdmsgd_nesterov_update_2d,
+)
+from repro.kernels.consensus_update.ref import (
+    cdadam_update_ref,
+    cdmsgd_nesterov_update_ref,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol_for_tree(tree):
+    has_bf16 = any(x.dtype == jnp.bfloat16 for x in jax.tree.leaves(tree))
+    return dict(rtol=2e-2, atol=2e-2) if has_bf16 else dict(rtol=3e-5, atol=3e-5)
+
+
+def assert_trees_close(a, b, **tol):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32), **tol)
+
+
+def make_tree(lead=(), *, seed=0):
+    """Mixed-dtype tree with odd (non-128-multiple) leaf sizes + a scalar."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    mk = lambda k, shape: jax.random.normal(k, tuple(lead) + shape)
+    return {
+        "w": mk(ks[0], (7, 9)),                              # 63 elems
+        "b": mk(ks[1], (300,)),                              # odd, > 2 rows
+        "h": mk(ks[2], (256,)).astype(jnp.bfloat16),         # aligned bf16
+        "o": mk(ks[3], (130,)).astype(jnp.bfloat16),         # odd bf16
+        "s": mk(ks[4], ()),                                  # scalar leaf
+    }
+
+
+# -------------------------------------------------------------------------
+# pack / unpack
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lead", [(), (4,)])
+def test_pack_unpack_roundtrip(lead):
+    tree = make_tree(lead)
+    spec = flatbuf.make_flat_spec(tree, lead=len(lead))
+    bufs = flatbuf.pack(tree, spec)
+    assert spec.n_buckets == 2          # f32 + bf16
+    for bucket, buf in zip(spec.buckets, bufs):
+        assert buf.shape == tuple(lead) + (bucket.rows, flatbuf.LANE)
+        assert buf.dtype == bucket.dtype
+    back = flatbuf.unpack(bufs, spec)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_casts_to_bucket_dtype():
+    """f32 grads packed against a bf16 param spec land in bf16 (the unfused
+    ``g.astype(param.dtype)`` semantics)."""
+    params = {"h": jnp.ones((64,), jnp.bfloat16)}
+    grads = {"h": jnp.full((64,), 0.3, jnp.float32)}
+    spec = flatbuf.make_flat_spec(params)
+    (buf,) = flatbuf.pack(grads, spec)
+    assert buf.dtype == jnp.bfloat16
+
+
+def test_pack_rejects_wrong_structure():
+    tree = make_tree()
+    spec = flatbuf.make_flat_spec(tree)
+    with pytest.raises(ValueError):
+        flatbuf.pack({"w": tree["w"]}, spec)
+
+
+def test_slots_are_row_aligned_and_disjoint():
+    tree = make_tree()
+    spec = flatbuf.make_flat_spec(tree)
+    for bucket in spec.buckets:
+        row = 0
+        for slot in bucket.slots:
+            assert slot.row_start == row
+            assert slot.rows * flatbuf.LANE >= slot.size
+            row += slot.rows
+        assert bucket.rows == row
+
+
+# -------------------------------------------------------------------------
+# new kernels vs refs
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows", [8, 300])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_cdadam_kernel_sweep(rows, dt):
+    nb = jax.random.normal(KEY, (3, rows, 128)).astype(dt)
+    g = jax.random.normal(jax.random.PRNGKey(1), (rows, 128)).astype(dt)
+    m = jax.random.normal(jax.random.PRNGKey(2), (rows, 128)).astype(dt)
+    v = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (rows, 128))).astype(dt)
+    w = jnp.array([0.5, 0.25, 0.25], jnp.float32)
+    args = (1e-3, 0.9, 0.999, 1e-8, 0.1, 1e-3)
+    out = cdadam_update_2d(nb, w, g, m, v, *args, interpret=True)
+    ref = cdadam_update_ref(nb, w, g, m, v, *args)
+    tol = dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **tol)
+
+
+@pytest.mark.parametrize("rows", [64, 257])
+def test_cdmsgd_nesterov_kernel_sweep(rows):
+    nb = jax.random.normal(KEY, (3, rows, 128))
+    g = jax.random.normal(jax.random.PRNGKey(1), (rows, 128))
+    v = jax.random.normal(jax.random.PRNGKey(2), (rows, 128))
+    w = jnp.array([0.5, 0.25, 0.25], jnp.float32)
+    out = cdmsgd_nesterov_update_2d(nb, w, g, v, 0.05, 0.9, interpret=True)
+    ref = cdmsgd_nesterov_update_ref(nb, w, g, v, 0.05, 0.9)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------------------
+# fused optimizers vs the dense-Pi stacked oracle
+# -------------------------------------------------------------------------
+
+N_AGENTS = 5
+
+
+def _stacked_setup(seed=0):
+    topo = make_topology("ring", N_AGENTS)
+    comm = stacked_comm_ops(topo)
+    params = make_tree((N_AGENTS,), seed=seed)
+    grads = jax.tree.map(
+        lambda x: 0.1 * jax.random.normal(jax.random.PRNGKey(99), x.shape), params)
+    return topo, comm, params, grads
+
+
+def test_fused_cdsgd_matches_dense_pi_oracle():
+    """x' = Pi x - alpha g against mix_pytree_stacked directly (eq. 5)."""
+    topo, comm, params, grads = _stacked_setup()
+    opt = CDSGD(0.05, fused=True)
+    new, _ = opt.update(params, grads, opt.init(params), comm)
+    mixed = mix_pytree_stacked(jnp.asarray(topo.pi, jnp.float32), params)
+    want = jax.tree.map(lambda w, g: w - 0.05 * g.astype(w.dtype), mixed, grads)
+    assert_trees_close(new, want, **tol_for_tree(params))
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (CDSGD, {}),
+    (CDMSGD, {"mu": 0.9}),
+    (CDMSGDNesterov, {"mu": 0.9}),
+    (CDAdam, {}),
+])
+def test_fused_matches_unfused_over_steps(cls, kw):
+    """Three update steps: params AND optimizer state must track."""
+    _, comm, params, grads = _stacked_setup()
+    ref_opt = cls(0.05, **kw)
+    fus_opt = cls(0.05, fused=True, **kw)
+    pr, rs = params, ref_opt.init(params)
+    pf, fs = params, fus_opt.init(params)
+    for _ in range(3):
+        gr = ref_opt.grad_params(pr, rs)
+        gf = fus_opt.grad_params(pf, fs)
+        assert_trees_close(gr, gf, **tol_for_tree(params))
+        pr, rs = ref_opt.update(pr, grads, rs, comm)
+        pf, fs = fus_opt.update(pf, grads, fs, comm)
+    assert_trees_close(pr, pf, **tol_for_tree(params))
+
+
+def test_fused_momentum_state_roundtrip():
+    """CDMSGD momentum survives pack -> kernel -> unpack with exact
+    structure/shape/dtype and reference values."""
+    _, comm, params, grads = _stacked_setup()
+    ref_opt = CDMSGD(0.05, mu=0.9)
+    fus_opt = CDMSGD(0.05, mu=0.9, fused=True)
+    _, rs = ref_opt.update(params, grads, ref_opt.init(params), comm)
+    _, fs = fus_opt.update(params, grads, fus_opt.init(params), comm)
+    assert jax.tree.structure(fs.inner) == jax.tree.structure(rs.inner)
+    for a, b in zip(jax.tree.leaves(rs.inner), jax.tree.leaves(fs.inner)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert_trees_close(rs.inner, fs.inner, **tol_for_tree(params))
+
+
+def test_fused_nesterov_lookahead_state():
+    """Fused Nesterov stores the kernel-emitted lookahead; it must equal the
+    unfused ``x + mu v`` recomputation."""
+    _, comm, params, grads = _stacked_setup()
+    ref_opt = CDMSGDNesterov(0.05, mu=0.9)
+    fus_opt = CDMSGDNesterov(0.05, mu=0.9, fused=True)
+    rs = ref_opt.init(params)
+    fs = fus_opt.init(params)
+    # before any update the lookahead is the params themselves
+    assert_trees_close(fus_opt.grad_params(params, fs),
+                       ref_opt.grad_params(params, rs), rtol=1e-6, atol=1e-6)
+    pr, rs = ref_opt.update(params, grads, rs, comm)
+    pf, fs = fus_opt.update(params, grads, fs, comm)
+    assert_trees_close(fus_opt.grad_params(pf, fs),
+                       ref_opt.grad_params(pr, rs), **tol_for_tree(params))
+
+
+def test_fused_cdadam_moments_stay_local():
+    _, comm, params, grads = _stacked_setup()
+    opt = CDAdam(1e-3, fused=True)
+    _, st = opt.update(params, grads, opt.init(params), comm)
+    m, _ = st.inner
+    want = jax.tree.map(lambda g, p: (0.1 * g).astype(p.dtype), grads, params)
+    assert_trees_close(m, want, **tol_for_tree(params))
+
+
+def test_fused_tree_ops_match_refs():
+    """cdadam/nesterov whole-tree ops vs leafwise reference composition."""
+    tree = {"a": jax.random.normal(KEY, (5, 9)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (301,))}
+    left = jax.tree.map(lambda x: x + 1.0, tree)
+    right = jax.tree.map(lambda x: x - 2.0, tree)
+    grads = jax.tree.map(jnp.ones_like, tree)
+    mom = jax.tree.map(lambda x: 0.5 * jnp.ones_like(x), tree)
+    w = jnp.array([1 / 3, 1 / 3, 1 / 3], jnp.float32)
+
+    p, v, la = kops.cdmsgd_nesterov_update_tree(
+        tree, [left, right], w, grads, mom, 0.1, 0.9, interpret=True)
+    want_v = jax.tree.map(lambda m_, g: 0.9 * m_ - 0.1 * g, mom, grads)
+    want_p = jax.tree.map(lambda x, l, r, v_: (x + l + r) / 3 + v_,
+                          tree, left, right, want_v)
+    want_la = jax.tree.map(lambda p_, v_: p_ + 0.9 * v_, want_p, want_v)
+    assert_trees_close(p, want_p, rtol=3e-5, atol=3e-5)
+    assert_trees_close(v, want_v, rtol=3e-5, atol=3e-5)
+    assert_trees_close(la, want_la, rtol=3e-5, atol=3e-5)
+
+    second = jax.tree.map(lambda x: jnp.abs(x) + 0.5, tree)
+    p2, m2, v2 = kops.cdadam_update_tree(
+        tree, [left, right], w, grads, mom, second,
+        1e-3, 0.9, 0.999, 1e-8, 0.1, 1e-3, interpret=True)
+    want_m2 = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, mom, grads)
+    want_v2 = jax.tree.map(lambda s, g: 0.999 * s + 0.001 * g * g, second, grads)
+    want_p2 = jax.tree.map(
+        lambda x, l, r, m_, s: (x + l + r) / 3
+        - 1e-3 * (m_ / 0.1) / (jnp.sqrt(s / 1e-3) + 1e-8),
+        tree, left, right, want_m2, want_v2)
+    assert_trees_close(p2, want_p2, rtol=3e-5, atol=3e-5)
+    assert_trees_close(m2, want_m2, rtol=3e-5, atol=3e-5)
+    assert_trees_close(v2, want_v2, rtol=3e-5, atol=3e-5)
+
+
+# -------------------------------------------------------------------------
+# launch-count accounting + end-to-end trainer
+# -------------------------------------------------------------------------
+
+
+def test_one_pallas_call_per_dtype_bucket():
+    """The whole fused stacked update is ONE batched pallas_call per bucket
+    and the per-leaf mixing einsum is gone from the step jaxpr."""
+    _, comm, params, grads = _stacked_setup()
+    opt = CDMSGD(0.05, mu=0.9, fused=True)
+    state = opt.init(params)
+    jaxpr = str(jax.make_jaxpr(
+        lambda p, g, s: opt.update(p, g, s, comm))(params, grads, state))
+    spec = flatbuf.make_flat_spec(params, lead=1)
+    assert spec.n_buckets == 2
+    assert jaxpr.count("pallas_call") == spec.n_buckets
+
+
+def test_trainer_end_to_end_fused_matches_reference():
+    """CollaborativeTrainer with a fused optimizer: losses and params track
+    the unfused trainer through real gradient steps."""
+    from repro.nn.paper_models import (
+        classifier_loss, mlp_classifier_apply, mlp_classifier_template)
+    from repro.nn.param import init_params
+
+    loss = functools.partial(classifier_loss, mlp_classifier_apply)
+    params = init_params(mlp_classifier_template(8, 4, width=16, depth=2),
+                         jax.random.PRNGKey(0))
+    topo = make_topology("ring", 4)
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.standard_normal((4, 8, 8)), jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 4, (4, 8)), jnp.int32)}
+
+    results = {}
+    for name, fused in (("ref", False), ("fused", True)):
+        tr = CollaborativeTrainer(loss, params, topo,
+                                  CDMSGD(0.05, mu=0.9, fused=fused))
+        for _ in range(3):
+            m = tr.step(batch)
+        results[name] = (tr.state.params, m["loss"])
+    assert abs(results["ref"][1] - results["fused"][1]) < 1e-4
+    assert_trees_close(results["ref"][0], results["fused"][0],
+                       rtol=1e-4, atol=1e-4)

@@ -69,8 +69,8 @@ def test_analyzer_matches_real_compiled_scan():
         from jax import lax
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.analysis.hlo import analyze_hlo
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(4, 2)
         def f(w, x):
             def body(h, wi):
                 return jnp.tanh(h @ wi), None

@@ -86,6 +86,67 @@ def test_sharded_train_step_runs_and_mixings_agree():
 
 
 @pytest.mark.slow
+def test_sharded_fused_train_step_matches_dense():
+    """mixing="ppermute_fused" + fused optimizer: the whole-model flat-buffer
+    update inside one shard_map region must match dense-Pi mixing, with
+    exactly one pallas_call per dtype bucket and one ppermute per non-zero
+    circulant shift in the step jaxpr."""
+    res = run_sub(textwrap.dedent("""
+        import dataclasses
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.core.optim import make_optimizer
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch import steps as steps_lib
+        from repro.nn.param import init_params
+
+        cfg = dataclasses.replace(get_config("granite-3-8b").reduced(),
+                                  param_dtype="float32")
+        shape = InputShape("tiny_train", 16, 8, "train")
+        mesh = make_debug_mesh(4, 2)
+
+        outs = {}
+        for mixing, fused in (("dense", False), ("ppermute_fused", True)):
+            opt = make_optimizer("cdmsgd", 0.05, mu=0.9, fused=fused)
+            b = steps_lib.build_train_step(cfg, shape, mesh, opt, mode="train",
+                                           topology_name="ring", mixing=mixing)
+            params = init_params(b.param_template, jax.random.PRNGKey(0))
+            params = jax.tree.map(
+                lambda x: x + 0.01 * jax.random.normal(jax.random.PRNGKey(1), x.shape, x.dtype), params)
+            opt_state = opt.init(params)
+            rng = np.random.default_rng(0)
+            batch = {
+                "inputs": jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 2, 16)), jnp.int32),
+                "targets": jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 2, 16)), jnp.int32),
+            }
+            with mesh:
+                if mixing == "ppermute_fused":
+                    jaxpr = str(jax.make_jaxpr(b.step_fn)(params, opt_state, batch))
+                    counts = {"pallas": jaxpr.count("pallas_call"),
+                              "ppermute": jaxpr.count("ppermute")}
+                step = jax.jit(b.step_fn)
+                new_params, new_state, metrics = step(params, opt_state, batch)
+            outs[mixing] = (new_params, float(metrics["loss"]))
+
+        pd, ld = outs["dense"]; pp, lp = outs["ppermute_fused"]
+        diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))), pd, pp)
+        print("RESULT " + json.dumps({
+            "loss_dense": ld, "loss_fused": lp,
+            "max_param_diff": max(jax.tree.leaves(diffs)),
+            "n_buckets": 1, "pallas_calls": counts["pallas"],
+            "ppermutes": counts["ppermute"],
+        }))
+    """))
+    assert abs(res["loss_dense"] - res["loss_fused"]) < 1e-4
+    assert res["max_param_diff"] < 1e-3, "fused update must equal dense Pi"
+    assert res["pallas_calls"] == res["n_buckets"], "one kernel launch per bucket"
+    assert res["ppermutes"] == 2, "ring = one ppermute per non-zero shift"
+
+
+@pytest.mark.slow
 def test_sharded_serve_step_runs():
     res = run_sub(textwrap.dedent("""
         import json
