@@ -18,20 +18,34 @@ Analytic HBM sweeps per element (S = stencil size, neighbor count + self):
 ``pallas_call`` per dtype bucket, one collective per circulant shift per
 bucket — see repro.core.flatbuf) against the per-leaf launch baseline, and
 emits one machine-readable ``JSON,{...}`` line for the perf trajectory.
+
+``exchange_wire`` reports the analytic bytes-on-wire per consensus step for
+each exchange precision (f32/bf16/int8/fp8 — see benchmarks/README.md for
+how to read the columns), and ``alias_accounting`` reports the extra HBM
+output allocation of the fused update with and without
+``input_output_aliases`` (aliased = params/momentum update in place).
+
+``--smoke`` runs only the consensus-path benches (CI-friendly);
+``--json-out FILE`` writes the records as a JSON file (the CI workflow
+publishes it as the ``BENCH_2.json`` artifact).
 """
 
+import argparse
 import json
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import consensus as consensus_lib
 from repro.core import flatbuf
+from repro.core.topology import make_topology
 from repro.kernels.consensus_update import ops as cons_ops
 from repro.kernels.consensus_update.consensus_update import (
     LANE,
     cdsgd_update_2d,
     cdmsgd_update_2d,
+    sr_quantize_2d,
 )
 from repro.kernels.consensus_update.ref import cdsgd_update_ref
 from repro.kernels.flash_attention.flash_attention import flash_attention
@@ -121,6 +135,8 @@ def bucketed_model_update():
         "collectives_per_step_ring": {"per_leaf": coll_leaf, "fused": coll_fused},
         "hbm_bytes": {"unfused_optimizer": bytes_unfused_opt,
                       "fused_kernel": bytes_fused},
+        "wire_bytes_per_shift": {e: spec.exchange_bytes(e)
+                                 for e in flatbuf.EXCHANGE_DTYPES},
         "us_per_call_interp": {"per_leaf": round(t_leaf, 1),
                                "fused": round(t_fused, 1)},
     }
@@ -133,7 +149,57 @@ def bucketed_model_update():
     return row, rec
 
 
-def run():
+def exchange_wire():
+    """Analytic bytes-on-wire per consensus step, per exchange precision.
+
+    Model: 1M f32 params (the paper-figure training dtype) on a ring
+    (degree 2).  int8/fp8 pay 1 byte/element + one f32 scale per 128-lane
+    row, so the f32->int8 wire ratio is 512/132 = 3.88x.
+    """
+    spec = flatbuf.make_flat_spec(
+        {"w": jax.ShapeDtypeStruct((1024, 1024), jnp.float32)})
+    topo = make_topology("ring", 8)
+    per_step = {
+        exch: consensus_lib.exchange_bytes_per_step(spec, topo, exch)["per_step_bytes"]
+        for exch in flatbuf.EXCHANGE_DTYPES}
+    ratio = per_step["f32"] / per_step["int8"]
+    assert ratio >= 3.5, f"int8 exchange must cut wire bytes >=3.5x, got {ratio:.2f}"
+    rec = {"bench": "consensus/exchange_wire", "model": "1M f32, ring deg 2",
+           "per_step_bytes": per_step,
+           "ratio_f32_over_int8": round(ratio, 3)}
+    row = ("kernel/exchange_wire", 0.0,
+           ";".join(f"{k}={v}" for k, v in per_step.items())
+           + f";f32/int8={ratio:.2f}x")
+    return row, rec
+
+
+def alias_accounting(rows_n: int = 8192):
+    """Extra HBM output bytes of the fused CDMSGD bucket update, aliased
+    (input_output_aliases: grad->params, momentum->momentum') vs not."""
+    nb = jnp.ones((3, rows_n, 128), jnp.float32)
+    g = jnp.ones((rows_n, 128), jnp.float32)
+    mom = jnp.ones((rows_n, 128), jnp.float32)
+    w = jnp.array([1 / 3, 1 / 3, 1 / 3], jnp.float32)
+    bucket_bytes = rows_n * 128 * 4
+
+    out = {}
+    for name, alias in (("aliased", True), ("unaliased", False)):
+        jaxpr = str(jax.make_jaxpr(lambda *a: cdmsgd_update_2d(
+            *a, 0.05, 0.9, alias=alias, interpret=True))(nb, w, g, mom))
+        groups = cons_ops.alias_groups(jaxpr)
+        n_aliased = len(groups[0]) if groups else 0
+        out[name] = {"aliased_outputs": n_aliased,
+                     "extra_output_bytes": (2 - n_aliased) * bucket_bytes}
+    assert out["aliased"]["extra_output_bytes"] == 0
+    rec = {"bench": "consensus/alias_accounting",
+           "bucket_bytes": bucket_bytes, **out}
+    row = ("kernel/alias_accounting", 0.0,
+           f"extra_hbm_out_aliased={out['aliased']['extra_output_bytes']};"
+           f"unaliased={out['unaliased']['extra_output_bytes']}")
+    return row, rec
+
+
+def run(smoke: bool = False, json_out: str = None):
     key = jax.random.PRNGKey(0)
     rows = []
     records = []
@@ -159,10 +225,34 @@ def run():
                     "cdsgd": {"fused_sweeps": 5, "unfused_sweeps": 7},
                     "cdmsgd": {"fused_sweeps": 7, "unfused_sweeps": 10}})
 
+    # quantized exchange: quantize + int8-neighbor fused update (neighbors
+    # on the wire are int8 + row scales; self rides native at weights[0])
+    q, sc = jax.jit(lambda x: sr_quantize_2d(x, 0, interpret=True))(g)
+    nb_q = jnp.stack([q, q])
+    sc_q = jnp.stack([sc, sc])
+    w_q = jnp.array([1 / 3, 1 / 3, 1 / 3], jnp.float32)  # [self, nbr, nbr]
+    slf = jax.random.normal(key, (rows_n, 128), jnp.float32)
+    t_quant = _time(jax.jit(lambda x: sr_quantize_2d(x, 0, interpret=True)), g)
+    t_qmom = _time(jax.jit(lambda n, s, sb, *a: cdmsgd_update_2d(
+        n, w_q, *a, 0.05, 0.9, scales=s, self_buf=sb, interpret=True)),
+        nb_q, sc_q, slf, g, mom)
+    rows.append(("kernel/consensus_update_momentum_int8", t_qmom,
+                 f"quantize_us={t_quant:.0f};dequant=in-register"))
+
     # whole-model bucketed update vs per-leaf launches
     row, rec = bucketed_model_update()
     rows.append(row)
     records.append(rec)
+
+    # bytes-on-wire per exchange precision + in-place aliasing accounting
+    for fn in (exchange_wire, alias_accounting):
+        row, rec = fn()
+        rows.append(row)
+        records.append(rec)
+
+    if smoke:
+        _emit(rows, records, json_out)
+        return rows
 
     # flash attention 1k seq
     q = jax.random.normal(key, (1, 4, 1024, 64), jnp.float32)
@@ -184,11 +274,25 @@ def run():
     t_ref = _time(jax.jit(wkv6_ref), r, kk, vv, ww, u)
     rows.append(("kernel/wkv6_scan", t_kernel, f"ref_us={t_ref:.0f};state_hbm_roundtrips=0"))
 
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
-    print("JSON," + json.dumps(records))
+    _emit(rows, records, json_out)
     return rows
 
 
+def _emit(rows, records, json_out):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print("JSON," + json.dumps(records))
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"wrote {json_out}")
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="consensus-path benches only (fast; used by CI)")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the JSON records to this file")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_out=args.json_out)

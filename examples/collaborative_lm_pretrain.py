@@ -56,6 +56,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--fused", action="store_true",
+                    help="flat-buffer fused consensus update")
+    ap.add_argument("--exchange", default="f32",
+                    choices=["f32", "bf16", "int8", "fp8"],
+                    help="simulated neighbor-exchange wire precision "
+                         "(implies --fused; the knob lives on the fused path)")
     ap.add_argument("--diminishing", action="store_true")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
@@ -69,6 +75,11 @@ def main():
     sched = (schedules.diminishing(theta=args.lr * 20, eps=1.0, t=20.0)
              if args.diminishing else args.lr)
     kw = {"mu": 0.9} if args.optimizer in ("cdmsgd", "cdmsgd_nesterov") else {}
+    if args.exchange != "f32" and not args.fused:
+        print(f"[e2e] --exchange {args.exchange} implies --fused; enabling")
+        args.fused = True
+    if args.fused:
+        kw["fused"] = True
     opt = make_optimizer(args.optimizer, sched, **kw)
     topo = make_topology(args.topology, args.agents)
 
@@ -80,7 +91,12 @@ def main():
                 jnp.float32)
         return loss_fn(cfg, p, {**batch, **extra})
 
-    trainer = CollaborativeTrainer(lm_loss, params, topo, opt)
+    trainer = CollaborativeTrainer(lm_loss, params, topo, opt,
+                                   exchange=args.exchange)
+
+    from repro.core.consensus import describe_exchange_cost
+    print("[e2e] " + describe_exchange_cost(trainer.state.params, topo,
+                                            args.exchange))
 
     # private token shards per agent
     tokens = make_lm_tokens(1 << 16, vocab=cfg.vocab_size, seed=0)

@@ -39,6 +39,11 @@ def main():
     loss = functools.partial(classifier_loss, mlp_classifier_apply)
     trainer = CollaborativeTrainer(loss, params, topology, optimizer)
 
+    # what one consensus step costs on the wire, per exchange precision
+    from repro.core.consensus import describe_exchange_cost
+    for exch in ("f32", "int8"):
+        print(describe_exchange_cost(trainer.state.params, topology, exch))
+
     # 4. train: each step = local gradient + Pi-mixing with neighbors
     train_loop(trainer, part.batches(64), n_steps=200, log_every=25, printer=print)
 

@@ -35,6 +35,9 @@ def run_one(topology_name, n_agents, steps=120):
     train_loop(tr, part.batches(64), steps)
     ev = tr.evaluate({"x": jnp.asarray(val.x), "y": jnp.asarray(val.y)})
     half_acc = tr.history.series("acc")[steps // 2 - 1]
+    from repro.core.consensus import exchange_bytes_per_step
+    from repro.core.flatbuf import make_flat_spec
+    spec = make_flat_spec(tr.state.params, lead=1)
     return {
         "lambda2": topo.lambda2,
         "gap": topo.spectral_gap,
@@ -43,6 +46,8 @@ def run_one(topology_name, n_agents, steps=120):
         "acc_var": ev["acc_var"],
         "consensus": tr.history.last("consensus_error"),
         "degree": topo.degree(),
+        "wire_f32": exchange_bytes_per_step(spec, topo, "f32")["per_step_bytes"],
+        "wire_int8": exchange_bytes_per_step(spec, topo, "int8")["per_step_bytes"],
     }
 
 
@@ -55,11 +60,12 @@ def main():
 
     print("\n== topology sparsity at N=8 (paper Fig 2b) ==")
     print(f"{'topology':>16} {'deg':>4} {'lambda2':>8} {'val acc':>8} "
-          f"{'acc var':>10} {'consensus':>11}")
+          f"{'acc var':>10} {'consensus':>11} {'wire f32':>10} {'int8':>10}")
     for name in ("fully_connected", "torus", "ring", "chain"):
         r = run_one(name, 8)
         print(f"{name:>16} {r['degree']:>4} {r['lambda2']:>8.3f} {r['val_acc']:>8.4f} "
-              f"{r['acc_var']:>10.2e} {r['consensus']:>11.3e}")
+              f"{r['acc_var']:>10.2e} {r['consensus']:>11.3e} "
+              f"{r['wire_f32']:>10,} {r['wire_int8']:>10,}")
     print("\npaper's claim: sparser graph (higher lambda2) -> faster average "
           "convergence,\nbut less stable consensus (higher accuracy variance).")
 

@@ -54,18 +54,34 @@ MixFn = Callable[[PyTree], PyTree]
 class FlatComm:
     """Whole-model fused-update support carried inside :class:`CommOps`.
 
-    ``gather(bufs)`` maps the packed self-buffers to kernel-ready neighbor
-    operands: in the **stacked** mode it returns the full agent stack per
-    bucket with the dense ``Pi`` as ``(A, A)`` weights (the fused kernels
-    vmap over agent rows); in the **sharded** mode it issues one
-    ``lax.ppermute`` per circulant shift offset per bucket and returns the
-    ``(S, rows, 128)`` stencil stack with ``(S,)`` weights.
+    ``gather(bufs, seed)`` maps the packed self-buffers to kernel-ready
+    neighbor operands ``(neighbor_stacks, weights, scales, selfs)``: in the
+    **stacked** mode it returns the full agent stack per bucket with the
+    dense ``Pi`` as ``(A, A)`` weights (the fused kernels vmap over agent
+    rows); in the **sharded** mode it issues one ``lax.ppermute`` per
+    circulant shift offset per bucket and returns the ``(S, rows, 128)``
+    stencil stack with ``(S,)`` weights.
+
+    ``exchange`` selects the wire precision of the neighbor stacks:
+    ``"f32"`` (native bucket dtype), ``"bf16"`` (cast), or ``"int8"`` /
+    ``"fp8"`` (stochastic-rounding quantization with one f32 scale per
+    128-lane row).  For quantized exchanges the per-bucket ``scales`` entry
+    is the ``(..., rows, 1)`` stack the fused kernels dequantize with
+    in-register, and ``selfs`` carries the native-precision self buffers —
+    the local parameters never cross the wire, so they are mixed exactly at
+    ``weights[..., 0]`` while only true neighbor payloads pay quantization
+    noise.  Both are ``None`` for unquantized exchanges.  ``seed`` (an
+    int32 scalar, typically the optimizer step) drives the stochastic
+    rounding; it is decorrelated per bucket and per agent, identically in
+    both execution modes, so stacked and sharded quantized trajectories
+    match exactly.
     """
 
     lead: int                     # leading replica axes excluded from packing
     batched: bool                 # True: stacked simulation (dense Pi vmap)
-    gather: Callable              # list[bufs] -> (list[neighbor stacks], weights)
+    gather: Callable              # (bufs, seed) -> (nbrs, weights, scales, selfs)
     interpret: bool = True        # interpret=True for CPU; False on TPU
+    exchange: str = "f32"         # wire precision: f32 | bf16 | int8 | fp8
 
     def spec(self, tree: PyTree) -> flatbuf.FlatSpec:
         return flatbuf.make_flat_spec(tree, lead=self.lead)
@@ -85,26 +101,97 @@ class FlatComm:
         return flatbuf.unpack(bufs, spec)
 
 
-def stacked_flat_comm(topology: Topology, *, interpret: bool = True) -> FlatComm:
-    """FlatComm for agent-stacked pytrees (dense ``Pi``, any topology)."""
+# distinct odd strides decorrelate the stochastic-rounding streams across
+# steps, buckets, and agents while keeping stacked/sharded seeds identical
+# (without the step stride, step t+1 / bucket b would collide with step
+# t+1-7919k / bucket b+k; int32 wraparound at large steps is fine — the
+# seed only needs to be a well-spread hash input).
+_SEED_STEP_STRIDE = 1000003
+_SEED_BUCKET_STRIDE = 7919
+_SEED_AGENT_STRIDE = 104729
+
+
+def _check_exchange(exchange: str) -> str:
+    """Fail at comm construction, not deep inside the first traced update."""
+    if exchange not in flatbuf.EXCHANGE_DTYPES:
+        raise ValueError(f"unknown exchange precision {exchange!r}; "
+                         f"expected one of {flatbuf.EXCHANGE_DTYPES}")
+    return exchange
+
+
+def _wire_payload(buf, seed, exchange: str, interpret: bool):
+    """Cast/quantize one packed bucket for the wire -> (payload, scales).
+
+    ``bf16`` casts the whole stencil *including* the self tile: without
+    scales the kernels need one homogeneous neighbor operand, and the
+    ~2^-8 relative rounding this adds to the self term is the mode's
+    stated noise level anyway.  int8/fp8 keep self native (see ``selfs``).
+    """
+    if exchange == "f32":
+        return buf, None
+    if exchange == "bf16":
+        return buf.astype(jnp.bfloat16), None
+    from repro.kernels.consensus_update.consensus_update import sr_quantize_2d
+    return sr_quantize_2d(buf, seed, exchange=exchange, interpret=interpret)
+
+
+def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
+                      exchange: str = "f32") -> FlatComm:
+    """FlatComm for agent-stacked pytrees (dense ``Pi``, any topology).
+
+    Quantized exchanges quantize the agent stack once (per-agent seeds
+    matching the sharded path's ``axis_index``-derived seeds) and return
+    the native-precision stack as ``selfs``: agent ``j`` mixes its own
+    exact parameters at ``weights[j, 0] = Pi[j, j]`` and the dequantized
+    wire payloads of everyone else (``weights[j, 1:] = Pi[j, :]`` with the
+    diagonal zeroed) — exactly what the sharded exchange delivers, where
+    the self buffer never crosses the wire.
+    """
+    _check_exchange(exchange)
     pi = jnp.asarray(topology.pi, dtype=jnp.float32)
+    n = topology.n_agents
+    # quantized-form weights: [diag | off-diagonal rows], (A, A+1)
+    pi_q = jnp.concatenate(
+        [jnp.diag(pi)[:, None], pi * (1.0 - jnp.eye(n, dtype=pi.dtype))], axis=1)
 
-    def gather(bufs):
-        return list(bufs), pi
+    def gather(bufs, seed):
+        if exchange in ("f32", "bf16"):
+            return ([_wire_payload(b, None, exchange, interpret)[0] for b in bufs],
+                    pi, [None] * len(bufs), [None] * len(bufs))
+        payloads, scales = [], []
+        base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
+        agent_seeds = _SEED_AGENT_STRIDE * jnp.arange(n, dtype=jnp.int32)
+        for bi, b in enumerate(bufs):
+            q, sc = jax.vmap(
+                lambda x, s: _wire_payload(x, s, exchange, interpret)
+            )(b, base + _SEED_BUCKET_STRIDE * bi + agent_seeds)
+            payloads.append(q)
+            scales.append(sc)
+        return payloads, pi_q, scales, list(bufs)
 
-    return FlatComm(lead=1, batched=True, gather=gather, interpret=interpret)
+    return FlatComm(lead=1, batched=True, gather=gather, interpret=interpret,
+                    exchange=exchange)
 
 
 def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
-                      lead: int = 1, interpret: bool = True) -> FlatComm:
+                      lead: int = 1, interpret: bool = True,
+                      exchange: str = "f32") -> FlatComm:
     """FlatComm for use inside ``shard_map``; circulant topologies only.
 
     ``factors`` is ``[(axis_name, Topology), ...]`` — one entry for the
     plain single-axis agent mesh, several for a Kronecker-factored one.
     Each bucket costs one ``lax.ppermute`` per non-zero shift combination;
     weights are the (outer-)product of the per-factor circulant weights.
+
+    With a quantized ``exchange`` each agent quantizes its bucket ONCE and
+    every non-identity shift permutes the int8/fp8 payload plus its
+    ``(rows, 1)`` row scales — ~3.9x fewer bytes per shift than the f32
+    wire; the self term (the identity shift) stays in native precision
+    since it moves no data.
     """
     import itertools
+
+    _check_exchange(exchange)
 
     per_axis = []
     for axis_name, topo in factors:
@@ -118,25 +205,62 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
         per_axis.append((axis_name, topo.n_agents, sorted(shifts.items())))
 
     combos = list(itertools.product(*[s for _, _, s in per_axis])) or [()]
-    weights = jnp.asarray([float(np.prod([w for _, w in combo]) if combo else 1.0)
-                           for combo in combos], jnp.float32)
 
-    def gather(bufs):
-        stacked = []
-        for b in bufs:
-            stencil = []
-            for combo in combos:
-                nb = b
-                for (axis_name, n, _), (s, _w) in zip(per_axis, combo):
-                    if s % n:
-                        # agent j receives from agent (j + s) mod n
-                        perm = [((j + s) % n, j) for j in range(n)]
-                        nb = lax.ppermute(nb, axis_name, perm=perm)
-                stencil.append(nb)
-            stacked.append(jnp.stack(stencil))
-        return stacked, weights
+    def _combo_weight(combo):
+        return float(np.prod([w for _, w in combo]) if combo else 1.0)
 
-    return FlatComm(lead=lead, batched=False, gather=gather, interpret=interpret)
+    def _is_identity(combo):
+        return all(s % n == 0 for (_, n, _), (s, _w) in zip(per_axis, combo))
+
+    weights = jnp.asarray([_combo_weight(c) for c in combos], jnp.float32)
+    # quantized form: self (identity shift, native precision) first, then
+    # one entry per wire-crossing shift combination.
+    wire_combos = [c for c in combos if not _is_identity(c)]
+    self_weight = sum(_combo_weight(c) for c in combos if _is_identity(c))
+    weights_q = jnp.asarray([self_weight] + [_combo_weight(c) for c in wire_combos],
+                            jnp.float32)
+
+    def _agent_index():
+        """Linearized agent index — matches the stacked topology order."""
+        idx = jnp.int32(0)
+        for axis_name, n, _ in per_axis:
+            idx = idx * n + lax.axis_index(axis_name).astype(jnp.int32)
+        return idx
+
+    def _shift_all(x, combo):
+        for (axis_name, n, _), (s, _w) in zip(per_axis, combo):
+            if s % n:
+                # agent j receives from agent (j + s) mod n
+                perm = [((j + s) % n, j) for j in range(n)]
+                x = lax.ppermute(x, axis_name, perm=perm)
+        return x
+
+    quantized = exchange in ("int8", "fp8") and wire_combos
+
+    def gather(bufs, seed):
+        stacked, stacked_scales, selfs = [], [], []
+        base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
+        if quantized:
+            base = base + _SEED_AGENT_STRIDE * _agent_index()
+        for bi, b in enumerate(bufs):
+            if not quantized:
+                payload, _ = _wire_payload(b, None, exchange if exchange == "bf16"
+                                           else "f32", interpret)
+                stacked.append(jnp.stack([_shift_all(payload, c) for c in combos]))
+                stacked_scales.append(None)
+                selfs.append(None)
+                continue
+            payload, sc = _wire_payload(b, base + _SEED_BUCKET_STRIDE * bi,
+                                        exchange, interpret)
+            stacked.append(jnp.stack([_shift_all(payload, c) for c in wire_combos]))
+            stacked_scales.append(
+                jnp.stack([_shift_all(sc, c) for c in wire_combos]))
+            selfs.append(b)
+        w = weights_q if quantized else weights
+        return stacked, w, stacked_scales, selfs
+
+    return FlatComm(lead=lead, batched=False, gather=gather,
+                    interpret=interpret, exchange=exchange)
 
 
 # --------------------------------------------------------------------------
@@ -274,6 +398,43 @@ class FactoredMix:
             return tree
 
         return mix
+
+
+# --------------------------------------------------------------------------
+# Wire-cost accounting
+# --------------------------------------------------------------------------
+
+
+def exchange_bytes_per_step(spec: "flatbuf.FlatSpec", topology: Topology,
+                            exchange: str = "f32") -> dict:
+    """Per-step bytes-on-wire estimate for the fused consensus exchange.
+
+    The paper's fixed-topology cost model (eq. 5/6): each agent sends/
+    receives ``degree`` whole-model transfers per step.  ``per_neighbor``
+    comes from :meth:`repro.core.flatbuf.FlatSpec.exchange_bytes` for the
+    chosen wire precision (int8/fp8 add one f32 scale per 128-lane row).
+    """
+    per_neighbor = spec.exchange_bytes(exchange)
+    degree = topology.degree()
+    return {
+        "exchange": exchange,
+        "degree": degree,
+        "per_neighbor_bytes": per_neighbor,
+        "per_step_bytes": per_neighbor * degree,
+        "native_per_step_bytes": spec.exchange_bytes("f32") * degree,
+    }
+
+
+def describe_exchange_cost(params: PyTree, topology: Topology,
+                           exchange: str = "f32", *, lead: int = 1) -> str:
+    """One-line human-readable :func:`exchange_bytes_per_step` report
+    (shared by the train/dryrun CLIs and the examples)."""
+    wire = exchange_bytes_per_step(
+        flatbuf.make_flat_spec(params, lead=lead), topology, exchange)
+    return (f"exchange={exchange}: {wire['per_step_bytes']:,} bytes/agent/step "
+            f"on the wire ({wire['degree']} neighbors x "
+            f"{wire['per_neighbor_bytes']:,} B; native "
+            f"{wire['native_per_step_bytes']:,} B)")
 
 
 # --------------------------------------------------------------------------

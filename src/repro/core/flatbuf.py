@@ -9,30 +9,54 @@ view instead:
 
 * leaves are grouped into **dtype buckets** (bf16 params never mix bits with
   f32 gains/biases), preserving first-appearance order;
-* within a bucket every leaf is padded up to a whole number of 128-wide rows
-  and assigned a static ``row_start`` — so the packed buffer is a
-  ``(*lead, rows, 128)`` array whose layout is described entirely by
-  compile-time metadata (:class:`FlatSpec`);
-* ``pack`` is a cast + reshape + single concatenate per bucket (reshape-only
-  when the bucket has one leaf of aligned size); ``unpack`` is a static
-  slice + reshape per leaf — no gathers, no scatter, no host work.
+* within a bucket leaves are packed **contiguously** at static element
+  ``offset``\\ s; only the bucket tail is zero-padded up to a whole number of
+  128-wide rows — so the packed buffer is a ``(*lead, rows, 128)`` array
+  whose layout is described entirely by compile-time metadata
+  (:class:`FlatSpec`);
+* ``pack`` is a cast + reshape + **one** concatenate + **one** tail pad per
+  bucket (reshape-only when the bucket is a single 128-aligned leaf);
+  ``unpack`` is a static slice + reshape per leaf — no gathers, no scatter,
+  no host work.
 
 ``lead`` counts leading *replica* axes excluded from flattening: the stacked
 simulation packs ``(A, ...)`` leaves with ``lead=1`` into ``(A, rows, 128)``
 buffers; the sharded trainer packs its local shard (agent axis of size 1)
 the same way and squeezes.
 
+:func:`make_flat_spec` memoizes by ``(treedef, shapes, dtypes, lead)`` so
+retraced steps reuse the same slot metadata instead of rebuilding it.
+
 The fused update kernels in :mod:`repro.kernels.consensus_update` then walk
 one bucket in a single ``pallas_call``, and the sharded circulant exchange
 issues one ``lax.ppermute`` per shift offset per bucket — instead of one
 per leaf — which is the whole-step communication pattern the paper's
 fixed-topology argument (eq. 5/6) assumes.
+
+Exchange precision
+------------------
+What each ``ppermute`` carries is selectable (``FlatComm(exchange=...)`` in
+:mod:`repro.core.consensus`): ``"f32"`` moves the native bucket bytes,
+``"bf16"`` halves f32 buckets, and ``"int8"`` / ``"fp8"`` move one byte per
+element plus one f32 scale per 128-lane row (stochastic-rounding
+quantization; dequantized in-register inside the fused kernels).
+:meth:`FlatSpec.exchange_bytes` is the bytes-on-wire estimator used by the
+benchmarks, examples and the dryrun to report per-step exchange cost.
+
+Because leaves pack contiguously, a 128-lane row at a leaf boundary can
+span two leaves, and a quantized exchange then shares one scale across
+them — a small-magnitude leaf adjacent to a large-magnitude one absorbs
+rounding noise proportional to the neighbor's row amax in that row.  At
+most ``n_leaves - 1`` of the bucket's rows are affected; the documented
+int8 trajectory tolerances (tests/test_flatbuf_fused.py,
+tests/test_sharded.py) are measured on real mixed-magnitude models and
+include this effect.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +64,11 @@ import jax.numpy as jnp
 PyTree = Any
 
 LANE = 128
+
+# bytes per element moved over the wire, per exchange precision; quantized
+# exchanges additionally move one f32 scale per LANE-wide row (see
+# `BucketSpec.exchange_bytes`).  "f32" means *native* bucket precision.
+EXCHANGE_DTYPES = ("f32", "bf16", "int8", "fp8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,14 +78,13 @@ class LeafSlot:
     index: int                      # position in the flattened-tree order
     shape: Tuple[int, ...]          # per-replica shape (lead axes excluded)
     size: int                       # prod(shape)
-    row_start: int                  # first 128-wide row in the bucket
-    rows: int                       # rows occupied (size padded up to LANE)
+    offset: int                     # element offset in the flattened bucket
 
 
 @dataclasses.dataclass(frozen=True)
 class BucketSpec:
     dtype: Any                      # canonical jnp dtype of the bucket
-    rows: int                       # total rows = sum(slot.rows)
+    rows: int                       # ceil(sum(slot.size) / LANE)
     slots: Tuple[LeafSlot, ...]
 
     @property
@@ -70,6 +98,18 @@ class BucketSpec:
     @property
     def bytes(self) -> int:
         return self.n_padded * jnp.dtype(self.dtype).itemsize
+
+    def exchange_bytes(self, exchange: str = "f32") -> int:
+        """Bytes one neighbor transfer of this bucket puts on the wire."""
+        if exchange == "f32":               # native bucket precision
+            return self.bytes
+        if exchange == "bf16":
+            return self.n_padded * min(2, jnp.dtype(self.dtype).itemsize)
+        if exchange in ("int8", "fp8"):
+            # 1 byte/element + one f32 scale per 128-lane row
+            return self.n_padded + self.rows * 4
+        raise ValueError(f"unknown exchange precision {exchange!r}; "
+                         f"expected one of {EXCHANGE_DTYPES}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,10 +129,28 @@ class FlatSpec:
     def total_bytes(self) -> int:
         return sum(b.bytes for b in self.buckets)
 
+    def exchange_bytes(self, exchange: str = "f32") -> int:
+        """Bytes-on-wire for ONE neighbor transfer of the whole model."""
+        return sum(b.exchange_bytes(exchange) for b in self.buckets)
+
+
+# spec cache: keyed on everything make_flat_spec reads — retraced steps hand
+# in fresh tracers but identical (treedef, shapes, dtypes, lead) signatures.
+_SPEC_CACHE: Dict[Any, FlatSpec] = {}
+
 
 def make_flat_spec(tree: PyTree, lead: int = 0) -> FlatSpec:
-    """Build the bucketed layout for ``tree`` (shapes/dtypes only, no data)."""
+    """Build the bucketed layout for ``tree`` (shapes/dtypes only, no data).
+
+    Memoized: repeated calls with the same structure/shapes/dtypes return
+    the identical :class:`FlatSpec` object.
+    """
     leaves, treedef = jax.tree.flatten(tree)
+    key = (treedef, lead,
+           tuple((tuple(x.shape), jnp.dtype(x.dtype).name) for x in leaves))
+    cached = _SPEC_CACHE.get(key)
+    if cached is not None:
+        return cached
     order: List[Any] = []           # bucket dtypes in first-appearance order
     grouped = {}
     for index, leaf in enumerate(leaves):
@@ -108,15 +166,17 @@ def make_flat_spec(tree: PyTree, lead: int = 0) -> FlatSpec:
     buckets = []
     for dt in order:
         slots = []
-        row = 0
+        offset = 0
         for index, shape, size in grouped[dt]:
-            rows = -(-size // LANE)
             slots.append(LeafSlot(index=index, shape=shape, size=size,
-                                  row_start=row, rows=rows))
-            row += rows
-        buckets.append(BucketSpec(dtype=dt, rows=row, slots=tuple(slots)))
-    return FlatSpec(treedef=treedef, n_leaves=len(leaves), lead=lead,
+                                  offset=offset))
+            offset += size
+        rows = -(-offset // LANE)
+        buckets.append(BucketSpec(dtype=dt, rows=rows, slots=tuple(slots)))
+    spec = FlatSpec(treedef=treedef, n_leaves=len(leaves), lead=lead,
                     buckets=tuple(buckets))
+    _SPEC_CACHE[key] = spec
+    return spec
 
 
 def pack(tree: PyTree, spec: FlatSpec) -> List[jnp.ndarray]:
@@ -124,6 +184,8 @@ def pack(tree: PyTree, spec: FlatSpec) -> List[jnp.ndarray]:
 
     Leaves are cast to their bucket dtype (grads/momenta packed against a
     parameter spec inherit the unfused ``g.astype(param.dtype)`` semantics).
+    Each bucket is ONE concatenate of the flattened leaves plus ONE tail pad
+    up to the row boundary; a single 128-aligned leaf is a pure reshape.
     """
     leaves, treedef = jax.tree.flatten(tree)
     if treedef != spec.treedef:
@@ -139,13 +201,12 @@ def pack(tree: PyTree, spec: FlatSpec) -> List[jnp.ndarray]:
                     f"leaf {slot.index}: shape {x.shape} != spec {slot.shape} "
                     f"(lead={spec.lead})")
             lead_shape = tuple(x.shape[:spec.lead])
-            flat = x.astype(bucket.dtype).reshape(lead_shape + (slot.size,))
-            padding = slot.rows * LANE - slot.size
-            if padding:
-                flat = jnp.pad(flat, [(0, 0)] * spec.lead + [(0, padding)])
-            pieces.append(flat)
-        buf = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=-1)
-        out.append(buf.reshape(lead_shape + (bucket.rows, LANE)))
+            pieces.append(x.astype(bucket.dtype).reshape(lead_shape + (slot.size,)))
+        flat = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=-1)
+        padding = bucket.n_padded - bucket.n_real
+        if padding:
+            flat = jnp.pad(flat, [(0, 0)] * spec.lead + [(0, padding)])
+        out.append(flat.reshape(lead_shape + (bucket.rows, LANE)))
     return out
 
 
@@ -158,7 +219,6 @@ def unpack(bufs: Sequence[jnp.ndarray], spec: FlatSpec) -> PyTree:
         lead_shape = tuple(buf.shape[:-2])
         flat = buf.reshape(lead_shape + (bucket.rows * LANE,))
         for slot in bucket.slots:
-            start = slot.row_start * LANE
-            piece = flat[..., start:start + slot.size]
+            piece = flat[..., slot.offset:slot.offset + slot.size]
             leaves[slot.index] = piece.reshape(lead_shape + slot.shape)
     return jax.tree.unflatten(spec.treedef, leaves)

@@ -61,8 +61,13 @@ def identity_comm_ops() -> CommOps:
     return CommOps(mix=ident, mean=ident, n_agents=1, lambda2=0.0, lambdan=1.0)
 
 
-def stacked_comm_ops(topology, *, interpret: bool = True) -> CommOps:
-    """CommOps for agent-stacked pytrees (leading axis = agent)."""
+def stacked_comm_ops(topology, *, interpret: bool = True,
+                     exchange: str = "f32") -> CommOps:
+    """CommOps for agent-stacked pytrees (leading axis = agent).
+
+    ``exchange`` sets the fused path's simulated wire precision
+    (f32 | bf16 | int8 | fp8 — see :class:`repro.core.consensus.FlatComm`).
+    """
     pi = jnp.asarray(topology.pi, dtype=jnp.float32)
 
     def mix(tree):
@@ -73,7 +78,8 @@ def stacked_comm_ops(topology, *, interpret: bool = True) -> CommOps:
 
     return CommOps(mix=mix, mean=mean, n_agents=topology.n_agents,
                    lambda2=topology.lambda2, lambdan=topology.lambdan,
-                   flat=consensus.stacked_flat_comm(topology, interpret=interpret))
+                   flat=consensus.stacked_flat_comm(topology, interpret=interpret,
+                                                    exchange=exchange))
 
 
 def sharded_comm_ops(topology, axis_name: str) -> CommOps:
@@ -167,13 +173,18 @@ class DistributedOptimizer:
 # --------------------------------------------------------------------------
 
 
-def _flat_setup(fl, params, *trees):
-    """Pack params (+ same-structured trees) against one shared FlatSpec."""
+def _flat_setup(fl, params, step, *trees):
+    """Pack params (+ same-structured trees) against one shared FlatSpec.
+
+    ``step`` seeds the stochastic rounding of quantized exchanges (the
+    gather decorrelates it per bucket/agent); unquantized exchanges ignore
+    it and return ``None`` scales.
+    """
     spec = fl.spec(params)
     bufs = fl.pack(params, spec)
     others = [fl.pack(t, spec) for t in trees]
-    nbrs, weights = fl.gather(bufs)
-    return spec, nbrs, weights, others
+    nbrs, weights, scales, selfs = fl.gather(bufs, jnp.asarray(step, jnp.int32))
+    return spec, nbrs, weights, scales, selfs, others
 
 
 class CDSGD(DistributedOptimizer):
@@ -190,9 +201,10 @@ class CDSGD(DistributedOptimizer):
     def apply_fused(self, params, grads, inner, alpha, comm, step):
         from repro.kernels.consensus_update import ops as kops
         fl = comm.flat
-        spec, nbrs, w, (g,) = _flat_setup(fl, params, grads)
-        outs = [kops.cdsgd_update_flat(nb, w, gb, alpha, interpret=fl.interpret)
-                for nb, gb in zip(nbrs, g)]
+        spec, nbrs, w, scs, sfs, (g,) = _flat_setup(fl, params, step, grads)
+        outs = [kops.cdsgd_update_flat(nb, w, gb, alpha, scales=sc,
+                                       self_buf=sf, interpret=fl.interpret)
+                for nb, sc, sf, gb in zip(nbrs, scs, sfs, g)]
         return fl.unpack(outs, spec), inner
 
 
@@ -221,10 +233,11 @@ class CDMSGD(DistributedOptimizer):
     def apply_fused(self, params, grads, v, alpha, comm, step):
         from repro.kernels.consensus_update import ops as kops
         fl = comm.flat
-        spec, nbrs, w, (g, vb) = _flat_setup(fl, params, grads, v)
+        spec, nbrs, w, scs, sfs, (g, vb) = _flat_setup(fl, params, step, grads, v)
         pairs = [kops.cdmsgd_update_flat(nb, w, gb, vi, alpha, self.mu,
+                                         scales=sc, self_buf=sf,
                                          interpret=fl.interpret)
-                 for nb, gb, vi in zip(nbrs, g, vb)]
+                 for nb, sc, sf, gb, vi in zip(nbrs, scs, sfs, g, vb)]
         new_params = fl.unpack([p for p, _ in pairs], spec)
         new_v = fl.unpack([nv for _, nv in pairs], spec)
         return new_params, new_v
@@ -268,10 +281,12 @@ class CDMSGDNesterov(CDMSGD):
         from repro.kernels.consensus_update import ops as kops
         fl = comm.flat
         v, _ = inner
-        spec, nbrs, w, (g, vb) = _flat_setup(fl, params, grads, v)
+        spec, nbrs, w, scs, sfs, (g, vb) = _flat_setup(fl, params, step, grads, v)
         triples = [kops.cdmsgd_nesterov_update_flat(nb, w, gb, vi, alpha,
-                                                    self.mu, interpret=fl.interpret)
-                   for nb, gb, vi in zip(nbrs, g, vb)]
+                                                    self.mu, scales=sc,
+                                                    self_buf=sf,
+                                                    interpret=fl.interpret)
+                   for nb, sc, sf, gb, vi in zip(nbrs, scs, sfs, g, vb)]
         new_params = fl.unpack([t[0] for t in triples], spec)
         new_v = fl.unpack([t[1] for t in triples], spec)
         look = fl.unpack([t[2] for t in triples], spec)
@@ -314,11 +329,13 @@ class CDAdam(DistributedOptimizer):
         t = (step + 1).astype(jnp.float32)
         bc1 = 1.0 - self.b1**t
         bc2 = 1.0 - self.b2**t
-        spec, nbrs, w, (g, mb, vb) = _flat_setup(fl, params, grads, m, v)
+        spec, nbrs, w, scs, sfs, (g, mb, vb) = _flat_setup(fl, params, step,
+                                                          grads, m, v)
         triples = [kops.cdadam_update_flat(nb, w, gb, mi, vi, alpha, self.b1,
                                            self.b2, self.eps, bc1, bc2,
+                                           scales=sc, self_buf=sf,
                                            interpret=fl.interpret)
-                   for nb, gb, mi, vi in zip(nbrs, g, mb, vb)]
+                   for nb, sc, sf, gb, mi, vi in zip(nbrs, scs, sfs, g, mb, vb)]
         new_params = fl.unpack([t_[0] for t_ in triples], spec)
         new_m = fl.unpack([t_[1] for t_ in triples], spec)
         new_v = fl.unpack([t_[2] for t_ in triples], spec)

@@ -57,6 +57,14 @@ class CollaborativeTrainer:
     ``pallas_call`` per parameter dtype bucket instead of one mix + axpy
     per pytree leaf.  ``interpret`` selects Pallas interpret mode (True on
     CPU, False on TPU).
+
+    ``exchange`` simulates the neighbor-exchange wire precision of the
+    fused path (``"f32"`` native, ``"bf16"``, or ``"int8"``/``"fp8"``
+    stochastic-rounding quantization — the bandwidth knob of the sharded
+    trainer, see :class:`repro.core.consensus.FlatComm`).  ``donate=True``
+    (default) donates params and optimizer state to the jitted step, so
+    together with the kernels' ``input_output_aliases`` the model updates
+    in place instead of allocating a fresh copy per optimizer slot.
     """
 
     def __init__(
@@ -69,11 +77,19 @@ class CollaborativeTrainer:
         stack: bool = True,
         donate: bool = True,
         interpret: bool = True,
+        exchange: str = "f32",
     ):
         self.loss_fn = loss_fn
         self.topology = topology
         self.optimizer = optimizer
-        self.comm: CommOps = stacked_comm_ops(topology, interpret=interpret)
+        if exchange != "f32" and not getattr(optimizer, "fused", False):
+            import warnings
+            warnings.warn(
+                f"exchange={exchange!r} only affects fused optimizers; "
+                f"{type(optimizer).__name__}(fused=False) will mix in native "
+                "precision", stacklevel=2)
+        self.comm: CommOps = stacked_comm_ops(topology, interpret=interpret,
+                                              exchange=exchange)
         stacked = broadcast_to_agents(params, topology.n_agents) if stack else params
         self.state = TrainState(params=stacked, opt_state=optimizer.init(stacked))
         self.history = MetricHistory()

@@ -16,6 +16,31 @@ grid walks row-blocks; each grid step loads one ``(block_rows, 128)`` tile
 of self/neighbors/grad into VMEM, accumulates in f32, and writes the
 updated tile.  ``S`` (the neighbor-stencil size = topology degree + self)
 is static — for a ring it is 3, for a 2-D torus 5.
+
+Quantized neighbor exchange
+---------------------------
+The neighbor stack may arrive **quantized** (int8 or fp8-e4m3, one f32
+scale per 128-lane row: ``scales (S, rows, 1)``) — the form produced by
+:func:`sr_quantize_2d` before the circulant ``ppermute`` so each shift
+moves ~4x fewer bytes.  Passing ``scales`` (plus the native-precision
+``self_buf``, which never crossed the wire and therefore pays no
+quantization noise — ``weights[0]`` applies to it, ``weights[1:]`` to the
+wire payloads) to any ``*_update_2d`` wrapper dequantizes **in-register**
+during the mixing accumulation (one extra VPU multiply per element); the
+dequantized neighbor tiles are never materialized in HBM.
+
+Quantization uses stochastic rounding — unbiased, so consensus averaging
+stays centered — via ``pltpu.prng_random_bits`` on TPU and a
+``jax.random``-based fallback under interpret mode (the TPU PRNG
+primitives have no CPU lowering).
+
+In-place updates
+----------------
+Every fused kernel threads ``input_output_aliases``: the gradient operand
+donates its buffer to the updated params and each optimizer-state operand
+(momentum / Adam moments) donates to its successor, so the whole update
+allocates no extra HBM output copy per model/slot (``alias=False`` opts
+out, e.g. when a caller reuses the gradient afterwards).
 """
 
 from __future__ import annotations
@@ -29,29 +54,185 @@ from jax.experimental import pallas as pl
 LANE = 128
 DEFAULT_BLOCK_ROWS = 256
 
+_QMAX = {"int8": 127.0, "fp8": 448.0}          # fp8 = float8_e4m3fn
+_QDTYPE = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}
 
-def _cdsgd_kernel(w_ref, alpha_ref, nbrs_ref, grad_ref, out_ref, *, n_stencil: int):
-    acc = jnp.zeros(out_ref.shape, jnp.float32)
+
+# --------------------------------------------------------------------------
+# quantize stage (runs before the ppermute exchange)
+# --------------------------------------------------------------------------
+
+
+# decorrelates the PRNG streams of adjacent row blocks; a per-block seed
+# OPERAND (not `pl.program_id`) keeps the streams correct when the whole
+# pallas_call is vmapped over agents (the batching rule prepends the batch
+# axis to the grid, which would silently re-bind program_id(0)).
+_SEED_BLOCK_STRIDE = 15485863
+
+
+def _quantize_math(xf, u, qmax: float, qdtype):
+    """Shared per-row scale + rounding math of both sr_quantize_2d paths.
+
+    ``u`` is the uniform-[0,1) stochastic-rounding draw, or None for
+    deterministic nearest rounding (fp8).  One definition keeps the TPU
+    kernel and the CPU-interpret fallback from drifting apart.
+    """
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    scaled = xf / scale
+    if u is not None:
+        scaled = jnp.clip(jnp.floor(scaled + u), -qmax, qmax)
+    return scaled.astype(qdtype), scale
+
+
+def _sr_quantize_kernel(seed_ref, x_ref, q_ref, scale_ref, *, qmax: float,
+                        stochastic: bool):
+    """Per-row (128-lane block) scaled quantization with stochastic rounding."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    u = None
+    if stochastic:
+        pltpu.prng_seed(seed_ref[0])          # per-block seed operand
+        bits = pltpu.bitcast(pltpu.prng_random_bits(x_ref.shape), jnp.uint32)
+        # top 24 bits: exactly representable in f32, so u stays strictly < 1
+        # (a raw 2^-32 scaling rounds the largest uint32s up to u == 1.0,
+        # which would bias floor(x + u) upward by a full quantization step)
+        u = (bits >> 8).astype(jnp.float32) * (1.0 / 16777216.0)
+    q, scale = _quantize_math(x_ref[...].astype(jnp.float32), u, qmax,
+                              q_ref.dtype)
+    q_ref[...] = q
+    scale_ref[...] = scale
+
+
+def sr_quantize_2d(
+    x: jnp.ndarray,               # (rows, 128) — one packed flat bucket
+    seed,                         # int32 scalar (traced ok); per-step seed
+    *,
+    exchange: str = "int8",       # "int8" (stochastic) | "fp8" (nearest)
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> tuple:
+    """Quantize a flat bucket for the wire: ``(q, scales)``.
+
+    ``q`` is ``(rows, 128)`` int8 / float8_e4m3fn, ``scales`` is
+    ``(rows, 1)`` f32 — one scale per 128-element row block, so a transfer
+    costs ``rows * (128 + 4)`` bytes instead of ``rows * 512`` (f32).
+
+    int8 uses stochastic rounding (unbiased: ``E[q * scale] = x``); fp8
+    e4m3 uses nearest rounding (its 3-bit mantissa makes SR needless for
+    consensus averaging).  On CPU/interpret the TPU PRNG primitives do not
+    lower, so the stochastic path draws its uniforms from ``jax.random``
+    with the same per-``seed`` determinism.
+    """
+    rows, lane = x.shape
+    assert lane == LANE, x.shape
+    qmax = _QMAX[exchange]
+    qdtype = _QDTYPE[exchange]
+    stochastic = exchange == "int8"
+    if interpret:
+        u = None
+        if stochastic:
+            key = jax.random.PRNGKey(jnp.asarray(seed, jnp.int32))
+            u = jax.random.uniform(key, x.shape, jnp.float32)
+        return _quantize_math(x.astype(jnp.float32), u, qmax, qdtype)
+    block_rows = min(block_rows, rows)
+    n_blocks = pl.cdiv(rows, block_rows)
+    kernel = functools.partial(_sr_quantize_kernel, qmax=qmax,
+                               stochastic=stochastic)
+    block_seeds = (jnp.asarray(seed, jnp.int32)
+                   + _SEED_BLOCK_STRIDE * jnp.arange(n_blocks, dtype=jnp.int32))
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),                 # per-block seed
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, lane), qdtype),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(block_seeds, x)
+
+
+def sr_dequantize_2d(q: jnp.ndarray, scales: jnp.ndarray,
+                     dtype=jnp.float32) -> jnp.ndarray:
+    """Reference inverse of :func:`sr_quantize_2d` (tests / oracle only —
+    the fused kernels dequantize in-register and never materialize this)."""
+    return (q.astype(jnp.float32) * scales).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# fused update kernels
+# --------------------------------------------------------------------------
+
+
+def _mix_stencil(w_ref, nbrs_ref, scales_ref, self_ref, n_stencil: int, shape):
+    """f32 mixing accumulation.
+
+    Unquantized (``scales_ref is None``): ``neighbors`` includes self and
+    ``weights`` is the full ``(S,)`` stencil row.  Quantized: the self
+    buffer stays in native precision (it never crosses the wire) at
+    ``weights[0]``; ``neighbors`` holds the ``n_stencil`` int8/fp8 wire
+    payloads which are dequantized in-register with their per-row scales
+    at ``weights[1:]``.
+    """
+    if scales_ref is None:
+        acc = jnp.zeros(shape, jnp.float32)
+        for s in range(n_stencil):
+            acc += w_ref[s] * nbrs_ref[s].astype(jnp.float32)
+        return acc
+    acc = w_ref[0] * self_ref[...].astype(jnp.float32)
     for s in range(n_stencil):
-        acc += w_ref[s] * nbrs_ref[s].astype(jnp.float32)
+        acc += w_ref[s + 1] * (nbrs_ref[s].astype(jnp.float32) * scales_ref[s])
+    return acc
+
+
+def _cdsgd_body(w_ref, alpha_ref, nbrs_ref, scales_ref, self_ref, grad_ref,
+                out_ref, *, n_stencil: int):
+    acc = _mix_stencil(w_ref, nbrs_ref, scales_ref, self_ref, n_stencil,
+                       out_ref.shape)
     acc -= alpha_ref[0] * grad_ref[...].astype(jnp.float32)
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-def _cdmsgd_kernel(w_ref, alpha_ref, mu_ref, nbrs_ref, grad_ref, mom_ref,
-                   out_ref, new_mom_ref, *, n_stencil: int):
+def _cdsgd_kernel(w, a, nbrs, grad, out, *, n_stencil):
+    _cdsgd_body(w, a, nbrs, None, None, grad, out, n_stencil=n_stencil)
+
+
+def _cdsgd_kernel_q(w, a, slf, nbrs, scales, grad, out, *, n_stencil):
+    _cdsgd_body(w, a, nbrs, scales, slf, grad, out, n_stencil=n_stencil)
+
+
+def _cdmsgd_body(w_ref, alpha_ref, mu_ref, nbrs_ref, scales_ref, self_ref,
+                 grad_ref, mom_ref, out_ref, new_mom_ref, *, n_stencil: int):
     v = mu_ref[0] * mom_ref[...].astype(jnp.float32) \
         - alpha_ref[0] * grad_ref[...].astype(jnp.float32)
-    acc = jnp.zeros(out_ref.shape, jnp.float32)
-    for s in range(n_stencil):
-        acc += w_ref[s] * nbrs_ref[s].astype(jnp.float32)
+    acc = _mix_stencil(w_ref, nbrs_ref, scales_ref, self_ref, n_stencil,
+                       out_ref.shape)
     out_ref[...] = (acc + v).astype(out_ref.dtype)
     new_mom_ref[...] = v.astype(new_mom_ref.dtype)
 
 
-def _cdmsgd_nesterov_kernel(w_ref, alpha_ref, mu_ref, nbrs_ref, grad_ref,
-                            mom_ref, out_ref, new_mom_ref, look_ref,
-                            *, n_stencil: int):
+def _cdmsgd_kernel(w, a, m, nbrs, grad, mom, out, nmom, *, n_stencil):
+    _cdmsgd_body(w, a, m, nbrs, None, None, grad, mom, out, nmom,
+                 n_stencil=n_stencil)
+
+
+def _cdmsgd_kernel_q(w, a, m, slf, nbrs, scales, grad, mom, out, nmom,
+                     *, n_stencil):
+    _cdmsgd_body(w, a, m, nbrs, scales, slf, grad, mom, out, nmom,
+                 n_stencil=n_stencil)
+
+
+def _cdmsgd_nesterov_body(w_ref, alpha_ref, mu_ref, nbrs_ref, scales_ref,
+                          self_ref, grad_ref, mom_ref, out_ref, new_mom_ref,
+                          look_ref, *, n_stencil: int):
     """CDMSGD + the *next* step's Nesterov lookahead point in the same sweep.
 
     ``look = x' + mu v'`` is where Algorithm 3 evaluates the next gradient;
@@ -61,17 +242,29 @@ def _cdmsgd_nesterov_kernel(w_ref, alpha_ref, mu_ref, nbrs_ref, grad_ref,
     mu = mu_ref[0]
     v = mu * mom_ref[...].astype(jnp.float32) \
         - alpha_ref[0] * grad_ref[...].astype(jnp.float32)
-    acc = jnp.zeros(out_ref.shape, jnp.float32)
-    for s in range(n_stencil):
-        acc += w_ref[s] * nbrs_ref[s].astype(jnp.float32)
+    acc = _mix_stencil(w_ref, nbrs_ref, scales_ref, self_ref, n_stencil,
+                       out_ref.shape)
     x = acc + v
     out_ref[...] = x.astype(out_ref.dtype)
     new_mom_ref[...] = v.astype(new_mom_ref.dtype)
     look_ref[...] = (x + mu * v).astype(look_ref.dtype)
 
 
-def _cdadam_kernel(w_ref, scal_ref, nbrs_ref, grad_ref, m_ref, v_ref,
-                   out_ref, new_m_ref, new_v_ref, *, n_stencil: int):
+def _cdmsgd_nesterov_kernel(w, a, m, nbrs, grad, mom, out, nmom, look,
+                            *, n_stencil):
+    _cdmsgd_nesterov_body(w, a, m, nbrs, None, None, grad, mom, out, nmom,
+                          look, n_stencil=n_stencil)
+
+
+def _cdmsgd_nesterov_kernel_q(w, a, m, slf, nbrs, scales, grad, mom, out,
+                              nmom, look, *, n_stencil):
+    _cdmsgd_nesterov_body(w, a, m, nbrs, scales, slf, grad, mom, out, nmom,
+                          look, n_stencil=n_stencil)
+
+
+def _cdadam_body(w_ref, scal_ref, nbrs_ref, scales_ref, self_ref, grad_ref,
+                 m_ref, v_ref, out_ref, new_m_ref, new_v_ref,
+                 *, n_stencil: int):
     """Consensus mixing + local Adam moments, one f32-accumulated pass.
 
     ``scal_ref`` packs [alpha, b1, b2, eps, bc1, bc2] — the bias corrections
@@ -81,85 +274,141 @@ def _cdadam_kernel(w_ref, scal_ref, nbrs_ref, grad_ref, m_ref, v_ref,
     g = grad_ref[...].astype(jnp.float32)
     m = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * g
     v = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * g * g
-    acc = jnp.zeros(out_ref.shape, jnp.float32)
-    for s in range(n_stencil):
-        acc += w_ref[s] * nbrs_ref[s].astype(jnp.float32)
+    acc = _mix_stencil(w_ref, nbrs_ref, scales_ref, self_ref, n_stencil,
+                       out_ref.shape)
     step_dir = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
     out_ref[...] = (acc - alpha * step_dir).astype(out_ref.dtype)
     new_m_ref[...] = m.astype(new_m_ref.dtype)
     new_v_ref[...] = v.astype(new_v_ref.dtype)
 
 
+def _cdadam_kernel(w, sc, nbrs, grad, m, v, out, nm, nv, *, n_stencil):
+    _cdadam_body(w, sc, nbrs, None, None, grad, m, v, out, nm, nv,
+                 n_stencil=n_stencil)
+
+
+def _cdadam_kernel_q(w, sc, slf, nbrs, scales, grad, m, v, out, nm, nv,
+                     *, n_stencil):
+    _cdadam_body(w, sc, nbrs, scales, slf, grad, m, v, out, nm, nv,
+                 n_stencil=n_stencil)
+
+
 def _grid_and_specs(rows: int, block_rows: int, n_stencil: int):
     grid = (pl.cdiv(rows, block_rows),)
     nbr_spec = pl.BlockSpec((n_stencil, block_rows, LANE), lambda i: (0, i, 0))
+    scale_spec = pl.BlockSpec((n_stencil, block_rows, 1), lambda i: (0, i, 0))
     mat_spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
-    return grid, nbr_spec, mat_spec
+    return grid, nbr_spec, scale_spec, mat_spec
+
+
+def _aliases(enabled: bool, pairs):
+    """input_output_aliases dict; ``pairs`` is ((input_idx, output_idx), ...)."""
+    return dict(pairs) if enabled else {}
+
+
+def _mix_operands(quantized, s, nbr_spec, scale_spec, mat_spec,
+                  neighbors, scales, self_buf):
+    """Mixing operand group: ``[self,] neighbors [, scales]``.
+
+    Quantized form: ``neighbors (S, rows, 128)`` int8/fp8 are the wire
+    payloads only; the native-precision ``self_buf`` rides separately at
+    ``weights[0]`` (it never crossed the wire, so it is never quantized).
+    Unquantized form: ``neighbors`` includes the self tile, no extras.
+    Returns ``(in_specs, args, n_weights)``.
+    """
+    if not quantized:
+        return [nbr_spec], [neighbors], s
+    assert self_buf is not None and scales.shape[0] == s
+    return ([mat_spec, nbr_spec, scale_spec],
+            [self_buf, neighbors, scales], s + 1)
 
 
 def cdsgd_update_2d(
-    neighbors: jnp.ndarray,       # (S, rows, 128) — neighbor (incl. self) tiles
+    neighbors: jnp.ndarray,       # (S, rows, 128) — neighbor tiles (see below)
     weights: jnp.ndarray,         # (S,) f32 — Pi row restricted to the stencil
-    grad: jnp.ndarray,            # (rows, 128)
+    grad: jnp.ndarray,            # (rows, 128) — bucket dtype; donated to out
     alpha,                        # scalar
     *,
+    scales: jnp.ndarray = None,   # (S, rows, 1) f32 when neighbors quantized
+    self_buf: jnp.ndarray = None, # (rows, 128) native self tile (quantized form)
     block_rows: int = DEFAULT_BLOCK_ROWS,
+    alias: bool = True,
     interpret: bool = False,
 ) -> jnp.ndarray:
     s, rows, lane = neighbors.shape
     assert lane == LANE and grad.shape == (rows, lane)
     block_rows = min(block_rows, rows)
-    grid, nbr_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
-    kernel = functools.partial(_cdsgd_kernel, n_stencil=s)
+    grid, nbr_spec, scale_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
+    quantized = scales is not None
+    kernel = functools.partial(
+        _cdsgd_kernel_q if quantized else _cdsgd_kernel, n_stencil=s)
+    mix_specs, mix_args, n_w = _mix_operands(
+        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales, self_buf)
+    assert weights.shape == (n_w,)
+    in_specs = [
+        pl.BlockSpec((n_w,), lambda i: (0,)),      # weights (whole, tiny)
+        pl.BlockSpec((1,), lambda i: (0,)),        # alpha
+        *mix_specs,
+        mat_spec,                                  # grad
+    ]
+    args = [weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
+            *mix_args, grad]
+    grad_idx = len(args) - 1
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((s,), lambda i: (0,)),        # weights (whole, tiny)
-            pl.BlockSpec((1,), lambda i: (0,)),        # alpha
-            nbr_spec,
-            mat_spec,
-        ],
+        in_specs=in_specs,
         out_specs=mat_spec,
-        out_shape=jax.ShapeDtypeStruct((rows, lane), neighbors.dtype),
+        out_shape=jax.ShapeDtypeStruct((rows, lane), grad.dtype),
+        input_output_aliases=_aliases(alias, ((grad_idx, 0),)),
         interpret=interpret,
-    )(weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32), neighbors, grad)
+    )(*args)
 
 
 def cdmsgd_update_2d(
     neighbors: jnp.ndarray,       # (S, rows, 128)
     weights: jnp.ndarray,         # (S,)
-    grad: jnp.ndarray,            # (rows, 128)
-    momentum: jnp.ndarray,        # (rows, 128)
+    grad: jnp.ndarray,            # (rows, 128) — donated to params out
+    momentum: jnp.ndarray,        # (rows, 128) — donated to new momentum
     alpha,
     mu,
     *,
+    scales: jnp.ndarray = None,
+    self_buf: jnp.ndarray = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
+    alias: bool = True,
     interpret: bool = False,
 ):
     s, rows, lane = neighbors.shape
     block_rows = min(block_rows, rows)
-    grid, nbr_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
-    kernel = functools.partial(_cdmsgd_kernel, n_stencil=s)
+    grid, nbr_spec, scale_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
+    quantized = scales is not None
+    kernel = functools.partial(
+        _cdmsgd_kernel_q if quantized else _cdmsgd_kernel, n_stencil=s)
+    mix_specs, mix_args, n_w = _mix_operands(
+        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales, self_buf)
+    in_specs = [
+        pl.BlockSpec((n_w,), lambda i: (0,)),      # weights
+        pl.BlockSpec((1,), lambda i: (0,)),        # alpha
+        pl.BlockSpec((1,), lambda i: (0,)),        # mu
+        *mix_specs,
+        mat_spec, mat_spec,                        # grad, momentum
+    ]
+    args = [weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
+            jnp.asarray([mu], jnp.float32), *mix_args, grad, momentum]
+    g_idx = len(args) - 2
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((s,), lambda i: (0,)),        # weights
-            pl.BlockSpec((1,), lambda i: (0,)),        # alpha
-            pl.BlockSpec((1,), lambda i: (0,)),        # mu
-            nbr_spec,
-            mat_spec,
-            mat_spec,
-        ],
+        in_specs=in_specs,
         out_specs=(mat_spec, mat_spec),
         out_shape=(
-            jax.ShapeDtypeStruct((rows, lane), neighbors.dtype),
+            jax.ShapeDtypeStruct((rows, lane), grad.dtype),
             jax.ShapeDtypeStruct((rows, lane), momentum.dtype),
         ),
+        input_output_aliases=_aliases(alias, ((g_idx, 0), (g_idx + 1, 1))),
         interpret=interpret,
-    )(weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
-      jnp.asarray([mu], jnp.float32), neighbors, grad, momentum)
+    )(*args)
 
 
 def cdmsgd_nesterov_update_2d(
@@ -170,42 +419,57 @@ def cdmsgd_nesterov_update_2d(
     alpha,
     mu,
     *,
+    scales: jnp.ndarray = None,
+    self_buf: jnp.ndarray = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
+    alias: bool = True,
     interpret: bool = False,
 ):
-    """Returns ``(x', v', x' + mu v')`` — params, momentum, next lookahead."""
+    """Returns ``(x', v', x' + mu v')`` — params, momentum, next lookahead.
+
+    ``grad`` donates to ``x'`` and ``momentum`` to ``v'``; the lookahead is
+    the one genuinely new buffer of the step.
+    """
     s, rows, lane = neighbors.shape
     block_rows = min(block_rows, rows)
-    grid, nbr_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
-    kernel = functools.partial(_cdmsgd_nesterov_kernel, n_stencil=s)
+    grid, nbr_spec, scale_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
+    quantized = scales is not None
+    kernel = functools.partial(
+        _cdmsgd_nesterov_kernel_q if quantized else _cdmsgd_nesterov_kernel,
+        n_stencil=s)
+    mix_specs, mix_args, n_w = _mix_operands(
+        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales, self_buf)
+    in_specs = [
+        pl.BlockSpec((n_w,), lambda i: (0,)),      # weights
+        pl.BlockSpec((1,), lambda i: (0,)),        # alpha
+        pl.BlockSpec((1,), lambda i: (0,)),        # mu
+        *mix_specs,
+        mat_spec, mat_spec,                        # grad, momentum
+    ]
+    args = [weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
+            jnp.asarray([mu], jnp.float32), *mix_args, grad, momentum]
+    g_idx = len(args) - 2
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((s,), lambda i: (0,)),        # weights
-            pl.BlockSpec((1,), lambda i: (0,)),        # alpha
-            pl.BlockSpec((1,), lambda i: (0,)),        # mu
-            nbr_spec,
-            mat_spec,
-            mat_spec,
-        ],
+        in_specs=in_specs,
         out_specs=(mat_spec, mat_spec, mat_spec),
         out_shape=(
-            jax.ShapeDtypeStruct((rows, lane), neighbors.dtype),
+            jax.ShapeDtypeStruct((rows, lane), grad.dtype),
             jax.ShapeDtypeStruct((rows, lane), momentum.dtype),
-            jax.ShapeDtypeStruct((rows, lane), neighbors.dtype),
+            jax.ShapeDtypeStruct((rows, lane), grad.dtype),
         ),
+        input_output_aliases=_aliases(alias, ((g_idx, 0), (g_idx + 1, 1))),
         interpret=interpret,
-    )(weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
-      jnp.asarray([mu], jnp.float32), neighbors, grad, momentum)
+    )(*args)
 
 
 def cdadam_update_2d(
     neighbors: jnp.ndarray,       # (S, rows, 128)
     weights: jnp.ndarray,         # (S,)
-    grad: jnp.ndarray,            # (rows, 128)
-    m: jnp.ndarray,               # (rows, 128) first moment (local)
-    v: jnp.ndarray,               # (rows, 128) second moment (local)
+    grad: jnp.ndarray,            # (rows, 128) — donated to params out
+    m: jnp.ndarray,               # (rows, 128) first moment; donated to m'
+    v: jnp.ndarray,               # (rows, 128) second moment; donated to v'
     alpha,
     b1,
     b2,
@@ -213,32 +477,42 @@ def cdadam_update_2d(
     bc1,                          # 1 - b1**t (traced; computed by the caller)
     bc2,                          # 1 - b2**t
     *,
+    scales: jnp.ndarray = None,
+    self_buf: jnp.ndarray = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
+    alias: bool = True,
     interpret: bool = False,
 ):
     """Returns ``(x', m', v')`` — mixed params with a local-Adam step."""
     s, rows, lane = neighbors.shape
     block_rows = min(block_rows, rows)
-    grid, nbr_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
-    kernel = functools.partial(_cdadam_kernel, n_stencil=s)
+    grid, nbr_spec, scale_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
+    quantized = scales is not None
+    kernel = functools.partial(
+        _cdadam_kernel_q if quantized else _cdadam_kernel, n_stencil=s)
     scal = jnp.stack([jnp.asarray(x, jnp.float32) for x in
                       (alpha, b1, b2, eps, bc1, bc2)])
+    mix_specs, mix_args, n_w = _mix_operands(
+        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales, self_buf)
+    in_specs = [
+        pl.BlockSpec((n_w,), lambda i: (0,)),      # weights
+        pl.BlockSpec((6,), lambda i: (0,)),        # packed scalars
+        *mix_specs,
+        mat_spec, mat_spec, mat_spec,              # grad, m, v
+    ]
+    args = [weights.astype(jnp.float32), scal, *mix_args, grad, m, v]
+    g_idx = len(args) - 3
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((s,), lambda i: (0,)),        # weights
-            pl.BlockSpec((6,), lambda i: (0,)),        # packed scalars
-            nbr_spec,
-            mat_spec,
-            mat_spec,
-            mat_spec,
-        ],
+        in_specs=in_specs,
         out_specs=(mat_spec, mat_spec, mat_spec),
         out_shape=(
-            jax.ShapeDtypeStruct((rows, lane), neighbors.dtype),
+            jax.ShapeDtypeStruct((rows, lane), grad.dtype),
             jax.ShapeDtypeStruct((rows, lane), m.dtype),
             jax.ShapeDtypeStruct((rows, lane), v.dtype),
         ),
+        input_output_aliases=_aliases(
+            alias, ((g_idx, 0), (g_idx + 1, 1), (g_idx + 2, 2))),
         interpret=interpret,
-    )(weights.astype(jnp.float32), scal, neighbors, grad, m, v)
+    )(*args)

@@ -20,6 +20,15 @@ dispatch on ``weights.ndim``:
   operands ``(A, rows, 128)``, and the kernel is vmapped over agent rows of
   ``Pi`` (still a single batched ``pallas_call`` in the jaxpr).
 
+``scales`` (same leading shape as ``neighbors``, trailing ``(rows, 1)``)
+marks the neighbor stack as int8/fp8-quantized wire payloads
+(:func:`repro.kernels.consensus_update.consensus_update.sr_quantize_2d`);
+the kernels dequantize in-register during the mixing accumulation.  In that
+form ``neighbors`` excludes the self tile — the native-precision self
+buffer rides in ``self_buf`` at ``weights[0]`` (per-agent ``(A, rows, 128)``
+in the stacked mode, with ``weights (A, A+1)`` = ``[diag(Pi), off-diag
+rows]``), since the local parameters never cross the wire.
+
 On CPU (this container) the kernels run with ``interpret=True``; on TPU
 pass ``interpret=False`` for the compiled path.
 """
@@ -27,7 +36,8 @@ pass ``interpret=False`` for the compiled path.
 from __future__ import annotations
 
 import functools
-from typing import Any, Sequence
+import re
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,46 +54,84 @@ from repro.kernels.consensus_update.consensus_update import (
 PyTree = Any
 
 
+def alias_groups(jaxpr_text: str) -> List[List[Tuple[int, int]]]:
+    """``input_output_aliases`` pairs per pallas_call in a printed jaxpr.
+
+    Shared accounting helper (tests + benchmarks): one inner list per
+    launch, each entry an ``(input_index, output_index)`` alias.  Parses
+    the jaxpr text because the params are not otherwise reachable from a
+    traced callable.
+    """
+    groups = re.findall(r"input_output_aliases=\(((?:\(\d+, \d+\),? ?)*)\)",
+                        jaxpr_text)
+    return [[(int(a), int(b)) for a, b in re.findall(r"\((\d+), (\d+)\)", g)]
+            for g in groups]
+
+
 # --------------------------------------------------------------------------
 # bucket-level entry points (packed buffers in, packed buffers out)
 # --------------------------------------------------------------------------
 
 
-def cdsgd_update_flat(neighbors, weights, grad, alpha, *, interpret: bool = True):
+def cdsgd_update_flat(neighbors, weights, grad, alpha, *, scales=None,
+                      self_buf=None, interpret: bool = True):
     if weights.ndim == 2:
+        if scales is not None:
+            return jax.vmap(lambda w, sb, g: cdsgd_update_2d(
+                neighbors, w, g, alpha, scales=scales, self_buf=sb,
+                interpret=interpret))(weights, self_buf, grad)
         return jax.vmap(lambda w, g: cdsgd_update_2d(
             neighbors, w, g, alpha, interpret=interpret))(weights, grad)
-    return cdsgd_update_2d(neighbors, weights, grad, alpha, interpret=interpret)
+    return cdsgd_update_2d(neighbors, weights, grad, alpha, scales=scales,
+                           self_buf=self_buf, interpret=interpret)
 
 
 def cdmsgd_update_flat(neighbors, weights, grad, momentum, alpha, mu, *,
-                       interpret: bool = True):
+                       scales=None, self_buf=None, interpret: bool = True):
     if weights.ndim == 2:
+        if scales is not None:
+            return jax.vmap(lambda w, sb, g, v: cdmsgd_update_2d(
+                neighbors, w, g, v, alpha, mu, scales=scales, self_buf=sb,
+                interpret=interpret))(weights, self_buf, grad, momentum)
         return jax.vmap(lambda w, g, v: cdmsgd_update_2d(
-            neighbors, w, g, v, alpha, mu, interpret=interpret))(
-                weights, grad, momentum)
+            neighbors, w, g, v, alpha, mu,
+            interpret=interpret))(weights, grad, momentum)
     return cdmsgd_update_2d(neighbors, weights, grad, momentum, alpha, mu,
+                            scales=scales, self_buf=self_buf,
                             interpret=interpret)
 
 
 def cdmsgd_nesterov_update_flat(neighbors, weights, grad, momentum, alpha, mu,
-                                *, interpret: bool = True):
+                                *, scales=None, self_buf=None,
+                                interpret: bool = True):
     if weights.ndim == 2:
+        if scales is not None:
+            return jax.vmap(lambda w, sb, g, v: cdmsgd_nesterov_update_2d(
+                neighbors, w, g, v, alpha, mu, scales=scales, self_buf=sb,
+                interpret=interpret))(weights, self_buf, grad, momentum)
         return jax.vmap(lambda w, g, v: cdmsgd_nesterov_update_2d(
-            neighbors, w, g, v, alpha, mu, interpret=interpret))(
-                weights, grad, momentum)
+            neighbors, w, g, v, alpha, mu,
+            interpret=interpret))(weights, grad, momentum)
     return cdmsgd_nesterov_update_2d(neighbors, weights, grad, momentum,
-                                     alpha, mu, interpret=interpret)
+                                     alpha, mu, scales=scales,
+                                     self_buf=self_buf, interpret=interpret)
 
 
 def cdadam_update_flat(neighbors, weights, grad, m, v, alpha, b1, b2, eps,
-                       bc1, bc2, *, interpret: bool = True):
+                       bc1, bc2, *, scales=None, self_buf=None,
+                       interpret: bool = True):
     if weights.ndim == 2:
+        if scales is not None:
+            return jax.vmap(lambda w, sb, g, mi, vi: cdadam_update_2d(
+                neighbors, w, g, mi, vi, alpha, b1, b2, eps, bc1, bc2,
+                scales=scales, self_buf=sb, interpret=interpret))(
+                    weights, self_buf, grad, m, v)
         return jax.vmap(lambda w, g, mi, vi: cdadam_update_2d(
             neighbors, w, g, mi, vi, alpha, b1, b2, eps, bc1, bc2,
             interpret=interpret))(weights, grad, m, v)
     return cdadam_update_2d(neighbors, weights, grad, m, v, alpha, b1, b2,
-                            eps, bc1, bc2, interpret=interpret)
+                            eps, bc1, bc2, scales=scales, self_buf=self_buf,
+                            interpret=interpret)
 
 
 # --------------------------------------------------------------------------

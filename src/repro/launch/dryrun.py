@@ -32,7 +32,8 @@ import traceback
 
 def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
            mixing: str, optimizer_name: str, topology: str, microbatches: int = 1,
-           context_parallel: bool = False, fused: bool = False):
+           context_parallel: bool = False, fused: bool = False,
+           exchange: str = "f32"):
     import jax
     from repro.configs import get_config, INPUT_SHAPES
     from repro.core.optim import make_optimizer
@@ -53,11 +54,12 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
         opt = make_optimizer(optimizer_name, 0.01, **kw)
         bundle = steps_lib.build_train_step(
             cfg, shape, mesh, opt, mode=mode, topology_name=topology, mixing=mixing,
-            microbatches=microbatches)
+            microbatches=microbatches, exchange=exchange)
         params = bundle.param_structs(mesh)
         opt_state = bundle.opt_state_structs(mesh, opt)
         args = (params, opt_state, bundle.batch_specs)
         fn = bundle.step_fn
+        return (fn, args, mesh, cfg, shape, bundle), None
     elif shape.kind == "prefill":
         bundle = steps_lib.build_prefill_step(cfg, shape, mesh,
                                               context_parallel=context_parallel)
@@ -68,7 +70,7 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
         cache, tokens, cur = bundle.input_structs
         args = (bundle.param_structs(mesh), cache, tokens, cur)
         fn = bundle.step_fn
-    return (fn, args, mesh, cfg, shape), None
+    return (fn, args, mesh, cfg, shape, None), None
 
 
 def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -76,7 +78,8 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
              optimizer_name: str = "cdmsgd", topology: str = "ring",
              out_dir: str = "results/dryrun", tag: str = "",
              analyze: bool = True, verbose: bool = True, microbatches: int = 1,
-             context_parallel: bool = False, fused: bool = False):
+             context_parallel: bool = False, fused: bool = False,
+             exchange: str = "f32"):
     import jax
     from repro.analysis.hlo import analyze_hlo
     from repro.analysis.roofline import model_flops, roofline_from_stats
@@ -87,10 +90,10 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     built, skip = _build(arch, shape_name, multi_pod=multi_pod, mode=mode,
                          mixing=mixing, optimizer_name=optimizer_name, topology=topology,
                          microbatches=microbatches, context_parallel=context_parallel,
-                         fused=fused)
+                         fused=fused, exchange=exchange)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
               "mixing": mixing, "topology": topology, "optimizer": optimizer_name,
-              "microbatches": microbatches}
+              "microbatches": microbatches, "exchange": exchange}
     if skip:
         record["status"] = skip
         _dump(out_dir, label, record)
@@ -98,10 +101,27 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
             print(f"[dryrun] {label}: {skip}")
         return record
 
-    fn, args, mesh, cfg, shape = built
+    fn, args, mesh, cfg, shape, bundle = built
+    if bundle is not None:
+        # analytic bytes-on-wire for the consensus exchange — visible even
+        # on hosts where the step itself can't run.  The exchange knob only
+        # acts on the fused flat-buffer path; other mixings move native
+        # bytes regardless of --exchange, and the record must say so.
+        from repro.core import consensus as consensus_lib
+        from repro.core import flatbuf
+        live = exchange if (mixing == "ppermute_fused" and fused) else "f32"
+        if live != exchange and verbose:
+            print(f"[dryrun] {label}: --exchange {exchange} has no effect on "
+                  f"mixing={mixing!r} fused={fused} — reporting native bytes")
+        record["exchange_bytes_per_step"] = consensus_lib.exchange_bytes_per_step(
+            flatbuf.make_flat_spec(args[0], lead=1), bundle.topology, live)
+        if verbose:
+            print(f"[dryrun] {label} " + consensus_lib.describe_exchange_cost(
+                args[0], bundle.topology, live))
+    donate = bundle.donate_argnums if bundle is not None else ()
     try:
         with mesh:
-            lowered = jax.jit(fn).lower(*args)
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
@@ -169,6 +189,10 @@ def main() -> int:
     ap.add_argument("--fused", action="store_true",
                     help="flat-buffer fused optimizer update (pairs with "
                          "--mixing ppermute_fused)")
+    ap.add_argument("--exchange", default="f32",
+                    choices=["f32", "bf16", "int8", "fp8"],
+                    help="neighbor-exchange wire precision for the fused "
+                         "path (int8/fp8: quantize before ppermute)")
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
@@ -193,7 +217,8 @@ def main() -> int:
                        mixing=args.mixing, optimizer_name=args.optimizer,
                        topology=args.topology, out_dir=args.out, tag=args.tag,
                        analyze=not args.no_analyze, microbatches=args.microbatch,
-                       context_parallel=args.context_parallel, fused=args.fused)
+                       context_parallel=args.context_parallel, fused=args.fused,
+                       exchange=args.exchange)
         if str(rec.get("status", "")).startswith("FAIL"):
             failures += 1
     print(f"[dryrun] done: {len(pairs)} pairs, {failures} failures")

@@ -33,6 +33,11 @@ def main() -> None:
     ap.add_argument("--fused", action="store_true",
                     help="flat-buffer fused consensus update (one Pallas "
                          "launch per dtype bucket; consensus optimizers only)")
+    ap.add_argument("--exchange", default="f32",
+                    choices=["f32", "bf16", "int8", "fp8"],
+                    help="neighbor-exchange wire precision of the fused "
+                         "path: int8/fp8 = stochastic-rounding quantization "
+                         "before the exchange, ~4x fewer bytes per neighbor")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--schedule", default="fixed", choices=["fixed", "diminishing"])
@@ -64,6 +69,10 @@ def main() -> None:
     kw = {}
     if args.optimizer in ("cdmsgd", "cdmsgd_nesterov", "msgd", "fedavg"):
         kw["mu"] = args.momentum
+    if args.exchange != "f32" and not args.fused:
+        # the exchange knob lives on the fused flat-buffer path
+        print(f"[train] --exchange {args.exchange} implies --fused; enabling")
+        args.fused = True
     if args.fused:
         kw["fused"] = True
     opt = make_optimizer(args.optimizer, sched, **kw)
@@ -77,7 +86,12 @@ def main() -> None:
                 jnp.float32)
         return loss_fn(cfg, p, {**batch, **extra})
 
-    trainer = CollaborativeTrainer(lm_loss, params, topo, opt)
+    trainer = CollaborativeTrainer(lm_loss, params, topo, opt,
+                                   exchange=args.exchange)
+
+    from repro.core.consensus import describe_exchange_cost
+    print("[train] " + describe_exchange_cost(trainer.state.params, topo,
+                                              args.exchange))
     tokens = make_lm_tokens(1 << 15, vocab=cfg.vocab_size, seed=args.seed)
     batches = lm_agent_batches(tokens, args.agents, args.batch, args.seq, seed=args.seed)
 
