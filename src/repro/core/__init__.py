@@ -9,6 +9,9 @@ communication topology — lives here, independent of any model family:
   stacked-simulation and sharded (ppermute / all_gather) forms.
 * :mod:`repro.core.optim` — CDSGD / CDMSGD (Polyak, Nesterov) / CDAdam and
   the baselines (centralized SGD/MSGD, FedAvg).
+* :mod:`repro.core.engine` — the StepProgram phase pipeline (grad / pack /
+  quantize / exchange / update) shared by both execution modes, with the
+  ``sync`` | ``overlap`` exchange schedules (see ARCHITECTURE.md).
 * :mod:`repro.core.schedules` — fixed and diminishing step sizes.
 * :mod:`repro.core.lyapunov` — the paper's Lyapunov analysis as code
   (eq. 7-9, Proposition 1, Theorem 1 constants).
@@ -16,6 +19,7 @@ communication topology — lives here, independent of any model family:
 
 from repro.core.topology import Topology, make_topology
 from repro.core.consensus import FactoredMix
+from repro.core.engine import StepProgram
 from repro.core.optim import (
     CDSGD,
     CDMSGD,
@@ -37,6 +41,7 @@ __all__ = [
     "Topology",
     "make_topology",
     "FactoredMix",
+    "StepProgram",
     "CDSGD",
     "CDMSGD",
     "CDMSGDNesterov",

@@ -74,7 +74,24 @@ class FlatComm:
     int32 scalar, typically the optimizer step) drives the stochastic
     rounding; it is decorrelated per bucket and per agent, identically in
     both execution modes, so stacked and sharded quantized trajectories
-    match exactly.
+    match exactly whenever their bucket layouts coincide (params sharded
+    over non-agent mesh axes pack differently per device, which draws the
+    same seeds at different row positions).
+
+    Phase stages (the StepProgram engine's pipeline, see
+    :mod:`repro.core.engine`): ``gather`` is the one-shot sync form;
+    ``quantize_stage(bufs, seed)`` and ``exchange_stage(wire)`` expose the
+    same computation as two separately schedulable halves.
+    ``quantize_stage`` maps packed buckets to the **wire state** — one
+    ``(payload, row_scales)`` pair per bucket, always carrying the leading
+    agent axes so it can live inside the optimizer state under either
+    execution mode (f32/bf16 wires carry unit scales).  ``exchange_stage``
+    turns a wire state into the self-separated kernel operands
+    ``(neighbor_stacks, weights_q, scale_stacks)`` with the self weight
+    first — in the sharded mode this is where the ``ppermute``\\ s happen,
+    and because the wire state may come from the *previous* optimizer step
+    the exchange has no data dependency on the current backward (the
+    ``schedule="overlap"`` one-step-stale pipeline).
     """
 
     lead: int                     # leading replica axes excluded from packing
@@ -82,6 +99,10 @@ class FlatComm:
     gather: Callable              # (bufs, seed) -> (nbrs, weights, scales, selfs)
     interpret: bool = True        # interpret=True for CPU; False on TPU
     exchange: str = "f32"         # wire precision: f32 | bf16 | int8 | fp8
+    n_agents: int = 1
+    # split phase stages (see class docstring); None on comms predating them
+    quantize_stage: Optional[Callable] = None   # (bufs, seed) -> wire
+    exchange_stage: Optional[Callable] = None   # (wire) -> (nbrs, weights_q, scales)
 
     def spec(self, tree: PyTree) -> flatbuf.FlatSpec:
         return flatbuf.make_flat_spec(tree, lead=self.lead)
@@ -135,6 +156,31 @@ def _wire_payload(buf, seed, exchange: str, interpret: bool):
     return sr_quantize_2d(buf, seed, exchange=exchange, interpret=interpret)
 
 
+def _quantize_wire_stacked(bufs, seed, n: int, exchange: str, interpret: bool):
+    """Quantize agent-stacked ``(A, rows, 128)`` buckets for the wire.
+
+    Returns the wire state: one ``(payload, (A, rows, 1) f32 scales)`` pair
+    per bucket.  Per-agent seeds match the sharded stage's
+    ``axis_index``-derived seeds, so both execution modes produce the same
+    wire bits from the same parameters.  f32/bf16 wires cast and carry
+    unit scales (the fused kernels' in-register dequant multiply is then
+    the identity), so every exchange precision shares one wire layout.
+    """
+    if exchange in ("f32", "bf16"):
+        return tuple(
+            (_wire_payload(b, None, exchange, interpret)[0],
+             jnp.ones(b.shape[:-1] + (1,), jnp.float32)) for b in bufs)
+    base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
+    agent_seeds = _SEED_AGENT_STRIDE * jnp.arange(n, dtype=jnp.int32)
+    out = []
+    for bi, b in enumerate(bufs):
+        q, sc = jax.vmap(
+            lambda x, s: _wire_payload(x, s, exchange, interpret)
+        )(b, base + _SEED_BUCKET_STRIDE * bi + agent_seeds)
+        out.append((q, sc))
+    return tuple(out)
+
+
 def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
                       exchange: str = "f32") -> FlatComm:
     """FlatComm for agent-stacked pytrees (dense ``Pi``, any topology).
@@ -154,23 +200,25 @@ def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
     pi_q = jnp.concatenate(
         [jnp.diag(pi)[:, None], pi * (1.0 - jnp.eye(n, dtype=pi.dtype))], axis=1)
 
+    def quantize_stage(bufs, seed):
+        return _quantize_wire_stacked(bufs, seed, n, exchange, interpret)
+
+    def exchange_stage(wire):
+        # stacked simulation: every agent already sees the full stack — the
+        # "exchange" is handing the wire payloads to the kernels with the
+        # self-separated [diag(Pi) | zero-diag Pi] weights.
+        return ([p for p, _ in wire], pi_q, [sc for _, sc in wire])
+
     def gather(bufs, seed):
         if exchange in ("f32", "bf16"):
             return ([_wire_payload(b, None, exchange, interpret)[0] for b in bufs],
                     pi, [None] * len(bufs), [None] * len(bufs))
-        payloads, scales = [], []
-        base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
-        agent_seeds = _SEED_AGENT_STRIDE * jnp.arange(n, dtype=jnp.int32)
-        for bi, b in enumerate(bufs):
-            q, sc = jax.vmap(
-                lambda x, s: _wire_payload(x, s, exchange, interpret)
-            )(b, base + _SEED_BUCKET_STRIDE * bi + agent_seeds)
-            payloads.append(q)
-            scales.append(sc)
-        return payloads, pi_q, scales, list(bufs)
+        nbrs, w, scales = exchange_stage(quantize_stage(bufs, seed))
+        return nbrs, w, scales, list(bufs)
 
     return FlatComm(lead=1, batched=True, gather=gather, interpret=interpret,
-                    exchange=exchange)
+                    exchange=exchange, n_agents=n,
+                    quantize_stage=quantize_stage, exchange_stage=exchange_stage)
 
 
 def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
@@ -236,31 +284,102 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
         return x
 
     quantized = exchange in ("int8", "fp8") and wire_combos
+    n_total = 1
+    for _, n, _ in per_axis:
+        n_total *= n
+
+    def quantize_stage(bufs, seed):
+        """Local squeezed buckets -> wire state (lead axes restored).
+
+        Runs inside ``shard_map``: the returned pairs carry the size-1
+        local agent axes so the wire state round-trips through sharded
+        optimizer-state PartitionSpecs unchanged.
+        """
+        base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
+        if exchange in ("int8", "fp8"):
+            base = base + _SEED_AGENT_STRIDE * _agent_index()
+        out = []
+        for bi, b in enumerate(bufs):
+            if exchange in ("int8", "fp8"):
+                p, sc = _wire_payload(b, base + _SEED_BUCKET_STRIDE * bi,
+                                      exchange, interpret)
+            else:
+                p, _ = _wire_payload(b, None, exchange, interpret)
+                sc = jnp.ones(b.shape[:-1] + (1,), jnp.float32)
+            out.append((p.reshape((1,) * lead + p.shape),
+                        sc.reshape((1,) * lead + sc.shape)))
+        return tuple(out)
+
+    def exchange_stage(wire):
+        """Wire state -> (neighbor stacks, weights_q, scale stacks).
+
+        One ``lax.ppermute`` per non-identity shift combination for the
+        payload, plus one for the row scales when the wire is quantized
+        (f32/bf16 wires carry unit scales, which are shift-invariant — the
+        kernels' dequant operand is synthesized locally, no collective);
+        the self term never moves.  The wire may be one optimizer step
+        stale (``schedule="overlap"``) — nothing here reads the current
+        params or gradients.
+        """
+        if not wire_combos:
+            raise ValueError("exchange_stage needs at least one wire-crossing "
+                             "shift (topology has no neighbors)")
+        nbrs, scs = [], []
+        for p, sc in wire:
+            p = p.reshape(p.shape[lead:])
+            sc = sc.reshape(sc.shape[lead:])
+            nbrs.append(jnp.stack([_shift_all(p, c) for c in wire_combos]))
+            if exchange in ("int8", "fp8"):
+                scs.append(jnp.stack([_shift_all(sc, c) for c in wire_combos]))
+            else:
+                scs.append(jnp.broadcast_to(sc, (len(wire_combos),) + sc.shape))
+        return nbrs, weights_q, scs
 
     def gather(bufs, seed):
-        stacked, stacked_scales, selfs = [], [], []
-        base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
-        if quantized:
-            base = base + _SEED_AGENT_STRIDE * _agent_index()
-        for bi, b in enumerate(bufs):
-            if not quantized:
+        if not quantized:
+            stacked = []
+            for b in bufs:
                 payload, _ = _wire_payload(b, None, exchange if exchange == "bf16"
                                            else "f32", interpret)
                 stacked.append(jnp.stack([_shift_all(payload, c) for c in combos]))
-                stacked_scales.append(None)
-                selfs.append(None)
-                continue
-            payload, sc = _wire_payload(b, base + _SEED_BUCKET_STRIDE * bi,
-                                        exchange, interpret)
-            stacked.append(jnp.stack([_shift_all(payload, c) for c in wire_combos]))
-            stacked_scales.append(
-                jnp.stack([_shift_all(sc, c) for c in wire_combos]))
-            selfs.append(b)
-        w = weights_q if quantized else weights
-        return stacked, w, stacked_scales, selfs
+            return stacked, weights, [None] * len(bufs), [None] * len(bufs)
+        nbrs, w, scs = exchange_stage(quantize_stage(bufs, seed))
+        return nbrs, w, scs, list(bufs)
 
     return FlatComm(lead=lead, batched=False, gather=gather,
-                    interpret=interpret, exchange=exchange)
+                    interpret=interpret, exchange=exchange, n_agents=n_total,
+                    quantize_stage=quantize_stage, exchange_stage=exchange_stage)
+
+
+def initial_wire_state(fl: FlatComm, params: PyTree) -> tuple:
+    """Wire state priming the ``schedule="overlap"`` double-buffer.
+
+    The overlap schedule exchanges the *previous* step's quantized buckets;
+    before step 0 there is no previous step, so the convention is
+    ``x_{-1} := x_0``: quantize the initial params with seed ``-1`` (the
+    per-step stages use the optimizer step ``>= 0``, so the stream never
+    collides).  Computed on the *global* agent-stacked view — usable
+    outside ``shard_map`` — with per-agent seeds identical to what the
+    sharded ``axis_index``-seeded quantize stage produces, so both
+    execution modes start from the same wire bits.
+
+    For a *sharded* comm this global path assumes the packed layout equals
+    the per-device layout — true only when params shard over no non-agent
+    mesh axis; the sharded trainer instead initializes per shard with
+    :func:`repro.core.engine.make_local_wire_init` inside ``shard_map``.
+    """
+    if fl.quantize_stage is None:
+        raise ValueError("FlatComm has no quantize stage; overlap needs the "
+                         "staged flat-buffer comm")
+    if fl.lead != 1:
+        raise ValueError("overlap wire state assumes one leading agent axis")
+    spec = flatbuf.make_flat_spec(params, lead=fl.lead)
+    bufs = flatbuf.pack(params, spec)           # global view, lead kept
+    seed = jnp.int32(-1)
+    if fl.batched:
+        return fl.quantize_stage(bufs, seed)
+    return _quantize_wire_stacked(bufs, seed, fl.n_agents, fl.exchange,
+                                  fl.interpret)
 
 
 # --------------------------------------------------------------------------

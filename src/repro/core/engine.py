@@ -1,0 +1,378 @@
+"""StepProgram: one phase-pipeline for both execution modes.
+
+Every collaborative training step — stacked simulation
+(:class:`repro.core.trainer.CollaborativeTrainer`) and sharded production
+(:func:`repro.launch.steps.build_train_step`) — is the same five named
+phases; this module is their single definition and the front-ends only
+supply mode-specific comm ops and (for the sharded mode) the ``shard_map``
+wrapper around the update group:
+
+* ``grad``     — one vmapped backward over the leading agent axis,
+  including the gradient-accumulation ``scan`` when ``microbatches > 1``
+  (:func:`make_grad_phase`);
+* ``pack``     — the parameter pytree into dtype-bucketed ``(rows, 128)``
+  flat buffers (:mod:`repro.core.flatbuf`);
+* ``quantize`` — stochastic-rounding int8/fp8 wire payloads + per-row f32
+  scales (``FlatComm.quantize_stage``; f32/bf16 wires cast + unit scales);
+* ``exchange`` — neighbor mixing operands: dense-``Pi`` stacks in the
+  stacked mode, one circulant ``lax.ppermute`` per shift per bucket in the
+  sharded mode (``FlatComm.exchange_stage``);
+* ``update``   — the fused Pallas kernel per bucket (or the reference
+  per-leaf path for unfused optimizers).
+
+Schedules
+---------
+``schedule="sync"`` (default) runs quantize -> exchange -> update on the
+*current* params inside the optimizer's ``comm.flat.gather`` — today's
+semantics, bit-for-bit.
+
+``schedule="overlap"`` pipelines the exchange one step deep: the quantized
+buckets + row scales live double-buffered in ``OptState.wire``, so step
+``t`` exchanges the payload quantized at step ``t-1`` while the backward of
+step ``t`` runs.  The update becomes the one-step-stale mixing
+
+    x^i_{t+1} = pi_ii x^i_t + sum_{j != i} pi_ij q(x^j_{t-1}) - alpha g^i_t
+
+with the self term always fresh and full precision (it never crosses the
+wire).  The staleness rides entirely in *which* buffers feed the existing
+fused kernels' self-separated ``(self, wire payloads)`` weight form — no
+new kernel variants.  Lian et al. (1705.09056) show decentralized SGD
+tolerates exactly this stale/pipelined communication at an unchanged
+convergence rate; Jiang et al. (1805.12120) generalize the mixing schedule.
+The payoff is structural: the ``ppermute``\\ s consume only carried
+optimizer state, so the collective is off the grad->update critical path —
+:func:`exchange_dependency_report` proves it from the jaxpr and the dryrun
+records it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consensus
+from repro.core.optim import (
+    CommOps,
+    DistributedOptimizer,
+    ExchangeResult,
+    OptState,
+)
+
+PyTree = Any
+
+PHASES = ("grad", "pack", "quantize", "exchange", "update")
+SCHEDULES = ("sync", "overlap")
+
+
+# --------------------------------------------------------------------------
+# grad phase (shared by both execution modes)
+# --------------------------------------------------------------------------
+
+
+def make_grad_phase(agent_loss: Callable, microbatches: int = 1) -> Callable:
+    """The ``grad`` phase: ``(gp, batch) -> ((losses, metrics), grads)``.
+
+    ``agent_loss(params, batch) -> (loss, metrics)`` is the single-agent
+    loss; the phase vmaps its value_and_grad over the leading agent axis.
+    ``microbatches > 1`` splits the per-agent batch dim and accumulates
+    gradients in f32 over a ``lax.scan`` (losses/metrics keep the leading
+    microbatch axis; callers reduce with ``jnp.mean`` either way).
+    """
+    grad_fn = jax.vmap(jax.value_and_grad(agent_loss, has_aux=True))
+    if microbatches == 1:
+        return grad_fn
+
+    def grad_phase(gp, batch):
+        # gradient accumulation: (A, B, ...) -> scan over (M, A, B/M, ...)
+        def split(x):
+            a, b = x.shape[:2]
+            return jnp.moveaxis(
+                x.reshape(a, microbatches, b // microbatches, *x.shape[2:]), 1, 0)
+
+        mb = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), gp)
+
+        def mb_step(acc, one):
+            (l, met), g = grad_fn(gp, one)
+            acc = jax.tree.map(lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+            return acc, (l, met)
+
+        gsum, (losses, metrics) = jax.lax.scan(mb_step, zero, mb)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        return (losses, metrics), grads
+
+    return grad_phase
+
+
+# --------------------------------------------------------------------------
+# update phase group (pack / quantize / exchange / update)
+# --------------------------------------------------------------------------
+
+
+def check_overlap_support(optimizer: DistributedOptimizer,
+                          comm: CommOps) -> consensus.FlatComm:
+    """Overlap needs the staged flat-buffer path; fail with the reason."""
+    fl = comm.flat
+    if fl is None or fl.exchange_stage is None:
+        raise ValueError(
+            "schedule='overlap' needs a flat-buffer comm with split "
+            "quantize/exchange stages (stacked_comm_ops / "
+            "make_local_fused_comm with mixing='ppermute_fused')")
+    has_fused = type(optimizer).apply_fused is not DistributedOptimizer.apply_fused
+    if not (getattr(optimizer, "fused", False) and has_fused):
+        raise ValueError(
+            f"schedule='overlap' needs a fused=True consensus optimizer; "
+            f"{type(optimizer).__name__}(fused="
+            f"{getattr(optimizer, 'fused', False)}) has no fused update to "
+            "feed the stale exchange into")
+    return fl
+
+
+def make_local_wire_init(fl: consensus.FlatComm) -> Callable:
+    """Per-shard overlap wire initializer (run it inside ``shard_map``).
+
+    Packs the *local* params and quantizes with seed ``-1`` — the same
+    ``x_{-1} := x_0`` convention as :func:`repro.core.consensus.
+    initial_wire_state`, but with the local flat layout, which differs from
+    the global one whenever params also shard over non-agent mesh axes.
+    """
+
+    def local_init(params):
+        spec = fl.spec(params)
+        bufs = fl.pack(params, spec)
+        return fl.quantize_stage(bufs, jnp.int32(-1))
+
+    return local_init
+
+
+def make_update_phase(optimizer: DistributedOptimizer, comm: CommOps,
+                      schedule: str = "sync") -> Callable:
+    """The update phase group: ``(params, grads, state) -> (params', state')``.
+
+    ``sync``: the optimizer gathers synchronously on the current params
+    (bit-for-bit today's behavior).  ``overlap``: exchange the carried
+    one-step-stale wire state, update against it with the fresh self
+    buffers, then quantize the *current* params as the next step's wire.
+    In the sharded mode the returned callable is the function the caller
+    wraps in ``shard_map``; in the stacked mode it is called directly —
+    the same phase code serves both.
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                         f"{SCHEDULES}")
+    if schedule == "sync":
+        def update_sync(params, grads, state):
+            return optimizer.update(params, grads, state, comm)
+        return update_sync
+
+    fl = check_overlap_support(optimizer, comm)
+
+    def update_overlap(params, grads, state):
+        spec = fl.spec(params)
+        bufs = fl.pack(params, spec)                      # pack (fresh self)
+        nbrs, w, scales = fl.exchange_stage(state.wire)   # exchange (stale)
+        ex = ExchangeResult(spec=spec, neighbors=nbrs, weights=w,
+                            scales=scales, selfs=bufs)
+        new_params, new_state = optimizer.update(params, grads, state, comm,
+                                                 exchanged=ex)
+        # quantize x_t as the wire step t+1 exchanges (one step stale there)
+        new_wire = fl.quantize_stage(bufs, state.step)
+        return new_params, new_state._replace(wire=new_wire)
+
+    return update_overlap
+
+
+# --------------------------------------------------------------------------
+# the assembled program
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepProgram:
+    """One training step assembled from the named phases.
+
+    Both execution modes build this with :func:`make_grad_phase` +
+    :func:`make_update_phase`; the sharded front-end additionally wraps the
+    update group in ``shard_map`` (``update_phase`` is whatever callable the
+    front-end hands over).  ``extra_metrics(new_params)`` appends
+    mode-specific diagnostics (the stacked trainer's consensus error).
+    """
+
+    optimizer: DistributedOptimizer
+    comm: CommOps
+    grad_phase: Callable          # (gp, batch) -> ((losses, metrics), grads)
+    update_phase: Callable        # (params, grads, state) -> (params', state')
+    schedule: str = "sync"
+    extra_metrics: Optional[Callable[[PyTree], Dict[str, jnp.ndarray]]] = None
+    # overlap wire initializer override: the sharded front-end supplies a
+    # shard_map-local packer (the local flat layout differs from the global
+    # one whenever params also shard over non-agent mesh axes); None uses
+    # the global agent-stacked path (the stacked trainer).
+    init_wire: Optional[Callable[[PyTree], Any]] = None
+
+    def init_state(self, params: PyTree) -> OptState:
+        state = self.optimizer.init(params)
+        if self.schedule == "overlap":
+            fl = check_overlap_support(self.optimizer, self.comm)
+            if self.init_wire is not None:
+                state = state._replace(wire=self.init_wire(params))
+            else:
+                state = state._replace(
+                    wire=consensus.initial_wire_state(fl, params))
+        return state
+
+    def step_fn(self, params: PyTree, opt_state: OptState, batch):
+        gp = self.optimizer.grad_params(params, opt_state)
+        (losses, metrics), grads = self.grad_phase(gp, batch)
+        new_params, new_state = self.update_phase(params, grads, opt_state)
+        out = {"loss": jnp.mean(losses)}
+        if self.extra_metrics is not None:
+            out.update(self.extra_metrics(new_params))
+        for k, v in metrics.items():
+            out[k] = jnp.mean(v)
+        return new_params, new_state, out
+
+
+def wire_bytes_per_neighbor(wire) -> int:
+    """Bytes ONE neighbor transfer of a carried wire state moves, per agent,
+    counted from the actual buffers — the overlap schedule must put exactly
+    the sync schedule's bytes on the wire (``FlatSpec.exchange_bytes``),
+    just one step later.  Row scales only cross the wire for quantized
+    payloads; the unit scales of f32/bf16 wires are synthesized locally
+    after the exchange (shift-invariant), so they cost nothing here."""
+    total = 0
+    for payload, scales in wire:
+        quantized = jnp.dtype(payload.dtype).itemsize == 1
+        for x in ((payload, scales) if quantized else (payload,)):
+            per_agent = 1
+            for d in x.shape[1:]:
+                per_agent *= d
+            total += per_agent * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+# --------------------------------------------------------------------------
+# critical-path proof: which step inputs reach the collective exchange?
+# --------------------------------------------------------------------------
+
+
+def _sub_jaxprs(params: dict):
+    for v in params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vals:
+            if isinstance(x, (jax.core.Jaxpr, jax.core.ClosedJaxpr)):
+                yield x
+
+
+def _taint_walk(jaxpr, in_taints, hits, prims):
+    """Propagate per-invar label sets through ``jaxpr``; collect the merged
+    input labels of every eqn whose primitive name contains one of
+    ``prims``.  Conservative: opaque/unmatched sub-jaxprs taint all
+    outputs with the union of inputs, and loop-carried sub-jaxprs
+    (scan/while) iterate to a fixpoint.  Returns per-outvar label sets.
+    """
+    env = {}
+
+    def read(v):
+        if isinstance(v, jax.core.Literal):
+            return frozenset()
+        return env.get(v, frozenset())
+
+    for v, t in zip(jaxpr.invars, in_taints):
+        env[v] = frozenset(t)
+    for eqn in jaxpr.eqns:
+        ins = [read(v) for v in eqn.invars]
+        merged = frozenset().union(*ins) if ins else frozenset()
+        if any(p in eqn.primitive.name for p in prims):
+            hits.append((eqn.primitive.name, merged))
+        out_ts = None
+        subs = list(_sub_jaxprs(eqn.params))
+        if subs:
+            acc = None
+            for sub in subs:
+                j = sub.jaxpr if isinstance(sub, jax.core.ClosedJaxpr) else sub
+                n = len(j.invars)
+                if n == len(ins):
+                    sub_in = list(ins)
+                elif n < len(ins):
+                    sub_in = list(ins[len(ins) - n:])
+                else:
+                    sub_in = [merged] * n
+                looping = eqn.primitive.name in ("scan", "while")
+                for _ in range(5):
+                    sub_out = _taint_walk(j, sub_in, hits, prims)
+                    if not looping:
+                        break
+                    # feed carried-output taints back into the carried inputs
+                    grown = list(sub_in)
+                    nc = eqn.params.get("num_consts")
+                    nk = eqn.params.get("num_carry")
+                    if nc is not None and nk is not None:   # scan layout
+                        for i in range(min(nk, len(sub_out))):
+                            if nc + i < len(grown):
+                                grown[nc + i] = grown[nc + i] | sub_out[i]
+                    else:                                   # while: carry last
+                        k = min(len(sub_out), len(grown))
+                        for i in range(k):
+                            grown[len(grown) - k + i] |= sub_out[i]
+                    if grown == sub_in:
+                        break
+                    sub_in = grown
+                if len(sub_out) == len(eqn.outvars):
+                    acc = (sub_out if acc is None
+                           else [a | b for a, b in zip(acc, sub_out)])
+                else:
+                    acc = [merged] * len(eqn.outvars)
+            out_ts = acc
+        if out_ts is None:
+            out_ts = [merged] * len(eqn.outvars)
+        for v, t in zip(eqn.outvars, out_ts):
+            env[v] = t
+    return [read(v) for v in jaxpr.outvars]
+
+
+def exchange_dependency_report(step_fn, params, opt_state, batch) -> dict:
+    """Which step inputs can reach the collective exchange, from the jaxpr.
+
+    Labels every flat input of ``step_fn(params, opt_state, batch)`` as
+    ``params`` / ``state`` / ``wire`` (the overlap double-buffer inside the
+    optimizer state) / ``batch`` and taints them through the traced step.
+    The returned record is the dryrun's critical-path proof:
+
+    * ``sync``    — the ``ppermute`` payload is quantized from the current
+      params, so ``depends_on_params`` is True: the exchange can only start
+      once the previous step's update has produced those params.
+    * ``overlap`` — the payload is the carried wire state:
+      ``depends_on_params`` and ``depends_on_batch`` are both False, i.e.
+      the collective needs neither the current params (previous update) nor
+      the current batch (backward) and is off the grad->update critical
+      path (``off_grad_update_critical_path``).
+
+    Works on concrete arrays or ShapeDtypeStructs.  Programs whose mixing
+    has no ``ppermute`` (stacked dense ``Pi``) report ``n_ppermutes == 0``.
+    """
+    label_tree = (
+        jax.tree.map(lambda _: "params", params),
+        OptState(step="state",
+                 inner=jax.tree.map(lambda _: "state", opt_state.inner),
+                 wire=jax.tree.map(lambda _: "wire", opt_state.wire)),
+        jax.tree.map(lambda _: "batch", batch),
+    )
+    labels = [frozenset([l]) for l in jax.tree.leaves(label_tree)]
+    closed = jax.make_jaxpr(step_fn)(params, opt_state, batch)
+    assert len(closed.jaxpr.invars) == len(labels), \
+        (len(closed.jaxpr.invars), len(labels))
+    hits: list = []
+    _taint_walk(closed.jaxpr, labels, hits, prims=("ppermute",))
+    union = frozenset().union(*(t for _, t in hits)) if hits else frozenset()
+    return {
+        "n_ppermutes": len(hits),
+        "depends_on_params": "params" in union,
+        "depends_on_batch": "batch" in union,
+        "depends_on_wire_state": "wire" in union,
+        "off_grad_update_critical_path": bool(hits)
+            and "params" not in union and "batch" not in union,
+    }

@@ -28,7 +28,7 @@ Update rules (paper Algorithm 1-3):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +105,30 @@ def factored_comm_ops(factored: consensus.FactoredMix, axis_names) -> CommOps:
 class OptState(NamedTuple):
     step: jnp.ndarray      # scalar int32
     inner: Any             # optimizer-specific (momentum, adam moments, ...)
+    # in-flight wire buffers of the overlap schedule: one (quantized
+    # payload, row scales) pair per flat bucket, quantized from the params
+    # at the *previous* step (see repro.core.engine).  () under
+    # schedule="sync" — the StepProgram engine owns filling/refreshing it.
+    wire: Any = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeResult:
+    """Kernel-ready mixing operands produced by the engine's phase pipeline.
+
+    ``DistributedOptimizer.update(..., exchanged=...)`` consumes this
+    instead of calling ``comm.flat.gather`` itself: the StepProgram engine
+    ran pack / quantize / exchange as separately scheduled phases (possibly
+    against one-step-stale wire state) and hands the fused kernels their
+    operands.  ``selfs`` is always the *fresh* native-precision packed
+    params — the self term never crosses the wire and never goes stale.
+    """
+
+    spec: Any                     # flatbuf.FlatSpec of the param pytree
+    neighbors: Sequence           # per-bucket wire payload stacks
+    weights: jnp.ndarray          # self-separated weights (self first)
+    scales: Sequence              # per-bucket row-scale stacks
+    selfs: Sequence               # per-bucket fresh native self buffers
 
 
 class DistributedOptimizer:
@@ -132,17 +156,32 @@ class DistributedOptimizer:
         """Point at which the caller should evaluate the gradient."""
         return params
 
-    def update(self, params: PyTree, grads: PyTree, state: OptState, comm: CommOps):
+    def update(self, params: PyTree, grads: PyTree, state: OptState,
+               comm: CommOps, *, exchanged: Optional[ExchangeResult] = None):
+        """One optimizer step.
+
+        ``exchanged`` carries pre-computed mixing operands from the
+        StepProgram engine's pack/quantize/exchange phases (the overlap
+        schedule's one-step-stale wire); when None the fused path gathers
+        synchronously via ``comm.flat``.  The wire field of the state is
+        passed through untouched — the engine refreshes it.
+        """
         alpha = self.schedule(state.step)
         # fused is a perf hint: optimizers without a fused implementation
         # (baselines) and comms without flat support use the reference path.
         has_fused = type(self).apply_fused is not DistributedOptimizer.apply_fused
         if self.fused and has_fused and comm.flat is not None:
             new_params, new_inner = self.apply_fused(
-                params, grads, state.inner, alpha, comm, state.step)
+                params, grads, state.inner, alpha, comm, state.step,
+                exchanged=exchanged)
+        elif exchanged is not None:
+            raise ValueError(
+                f"{type(self).__name__} cannot consume exchanged operands: "
+                "the engine's exchange phase feeds fused optimizers only")
         else:
             new_params, new_inner = self.apply(params, grads, state.inner, alpha, comm, state.step)
-        return new_params, OptState(step=state.step + 1, inner=new_inner)
+        return new_params, OptState(step=state.step + 1, inner=new_inner,
+                                    wire=state.wire)
 
     def state_specs(self, param_specs: PyTree) -> "OptState":
         """PartitionSpec tree mirroring init() (for pjit in_shardings)."""
@@ -159,7 +198,8 @@ class DistributedOptimizer:
     def apply(self, params, grads, inner, alpha, comm: CommOps, step):
         raise NotImplementedError
 
-    def apply_fused(self, params, grads, inner, alpha, comm: CommOps, step):
+    def apply_fused(self, params, grads, inner, alpha, comm: CommOps, step,
+                    *, exchanged: Optional[ExchangeResult] = None):
         """Flat-buffer fast path; same contract as ``apply``."""
         raise NotImplementedError(f"{type(self).__name__} has no fused path")
 
@@ -173,13 +213,19 @@ class DistributedOptimizer:
 # --------------------------------------------------------------------------
 
 
-def _flat_setup(fl, params, step, *trees):
+def _flat_setup(fl, params, step, *trees, exchanged=None):
     """Pack params (+ same-structured trees) against one shared FlatSpec.
 
     ``step`` seeds the stochastic rounding of quantized exchanges (the
     gather decorrelates it per bucket/agent); unquantized exchanges ignore
-    it and return ``None`` scales.
+    it and return ``None`` scales.  When the engine already ran the
+    pack/quantize/exchange phases (``exchanged`` given) only the extra
+    trees are packed here; the mixing operands come from the phase outputs.
     """
+    if exchanged is not None:
+        others = [fl.pack(t, exchanged.spec) for t in trees]
+        return (exchanged.spec, exchanged.neighbors, exchanged.weights,
+                exchanged.scales, exchanged.selfs, others)
     spec = fl.spec(params)
     bufs = fl.pack(params, spec)
     others = [fl.pack(t, spec) for t in trees]
@@ -198,10 +244,12 @@ class CDSGD(DistributedOptimizer):
             mixed, grads)
         return new_params, inner
 
-    def apply_fused(self, params, grads, inner, alpha, comm, step):
+    def apply_fused(self, params, grads, inner, alpha, comm, step, *,
+                    exchanged=None):
         from repro.kernels.consensus_update import ops as kops
         fl = comm.flat
-        spec, nbrs, w, scs, sfs, (g,) = _flat_setup(fl, params, step, grads)
+        spec, nbrs, w, scs, sfs, (g,) = _flat_setup(fl, params, step, grads,
+                                                    exchanged=exchanged)
         outs = [kops.cdsgd_update_flat(nb, w, gb, alpha, scales=sc,
                                        self_buf=sf, interpret=fl.interpret)
                 for nb, sc, sf, gb in zip(nbrs, scs, sfs, g)]
@@ -230,10 +278,12 @@ class CDMSGD(DistributedOptimizer):
         new_params = jax.tree.map(lambda w, nv: (w + nv).astype(w.dtype), mixed, new_v)
         return new_params, new_v
 
-    def apply_fused(self, params, grads, v, alpha, comm, step):
+    def apply_fused(self, params, grads, v, alpha, comm, step, *,
+                    exchanged=None):
         from repro.kernels.consensus_update import ops as kops
         fl = comm.flat
-        spec, nbrs, w, scs, sfs, (g, vb) = _flat_setup(fl, params, step, grads, v)
+        spec, nbrs, w, scs, sfs, (g, vb) = _flat_setup(fl, params, step, grads,
+                                                       v, exchanged=exchanged)
         pairs = [kops.cdmsgd_update_flat(nb, w, gb, vi, alpha, self.mu,
                                          scales=sc, self_buf=sf,
                                          interpret=fl.interpret)
@@ -277,11 +327,13 @@ class CDMSGDNesterov(CDMSGD):
             return new_params, (new_v, look)
         return super().apply(params, grads, inner, alpha, comm, step)
 
-    def apply_fused(self, params, grads, inner, alpha, comm, step):
+    def apply_fused(self, params, grads, inner, alpha, comm, step, *,
+                    exchanged=None):
         from repro.kernels.consensus_update import ops as kops
         fl = comm.flat
         v, _ = inner
-        spec, nbrs, w, scs, sfs, (g, vb) = _flat_setup(fl, params, step, grads, v)
+        spec, nbrs, w, scs, sfs, (g, vb) = _flat_setup(fl, params, step, grads,
+                                                       v, exchanged=exchanged)
         triples = [kops.cdmsgd_nesterov_update_flat(nb, w, gb, vi, alpha,
                                                     self.mu, scales=sc,
                                                     self_buf=sf,
@@ -322,15 +374,16 @@ class CDAdam(DistributedOptimizer):
             mixed, new_m, new_v)
         return new_params, (new_m, new_v)
 
-    def apply_fused(self, params, grads, inner, alpha, comm, step):
+    def apply_fused(self, params, grads, inner, alpha, comm, step, *,
+                    exchanged=None):
         from repro.kernels.consensus_update import ops as kops
         fl = comm.flat
         m, v = inner
         t = (step + 1).astype(jnp.float32)
         bc1 = 1.0 - self.b1**t
         bc2 = 1.0 - self.b2**t
-        spec, nbrs, w, scs, sfs, (g, mb, vb) = _flat_setup(fl, params, step,
-                                                          grads, m, v)
+        spec, nbrs, w, scs, sfs, (g, mb, vb) = _flat_setup(
+            fl, params, step, grads, m, v, exchanged=exchanged)
         triples = [kops.cdadam_update_flat(nb, w, gb, mi, vi, alpha, self.b1,
                                            self.b2, self.eps, bc1, bc2,
                                            scales=sc, self_buf=sf,

@@ -1,12 +1,15 @@
 """Multi-agent collaborative trainer (stacked simulation execution mode).
 
-Simulates the paper's N-agent fixed-topology network on any backend:
-every parameter leaf carries a leading agent axis, per-agent gradients come
-from one ``vmap``'d value_and_grad, and the optimizer applies the CDSGD /
-CDMSGD / FedAvg / centralized update with stacked ``CommOps``.  This is the
-execution mode behind every paper-figure benchmark and the theory tests;
-the sharded production mode in :mod:`repro.launch.train` runs the *same*
-optimizer code under pjit + shard_map.
+Simulates the paper's N-agent fixed-topology network on any backend: every
+parameter leaf carries a leading agent axis and the step is assembled from
+the shared :class:`repro.core.engine.StepProgram` phases — the same
+grad/pack/quantize/exchange/update pipeline the sharded production mode
+(:mod:`repro.launch.steps`) wraps in ``shard_map``.  This front-end only
+supplies the stacked ``CommOps`` (dense ``Pi``) and the consensus-error
+metric; it is the execution mode behind every paper-figure benchmark and
+the theory tests, and the oracle the sharded trainers are verified
+against.  ``schedule="overlap"`` selects the one-step-stale pipelined
+exchange (see :mod:`repro.core.engine`).
 """
 
 from __future__ import annotations
@@ -19,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.consensus import consensus_error_pytree
+from repro.core import engine, flatbuf
+from repro.core.consensus import consensus_error_pytree, exchange_bytes_per_step
 from repro.core.optim import CommOps, DistributedOptimizer, stacked_comm_ops
 from repro.core.topology import Topology
 from repro.utils.metrics import MetricHistory
@@ -65,6 +69,10 @@ class CollaborativeTrainer:
     (default) donates params and optimizer state to the jitted step, so
     together with the kernels' ``input_output_aliases`` the model updates
     in place instead of allocating a fresh copy per optimizer slot.
+
+    ``schedule="overlap"`` double-buffers the quantized wire payloads in
+    the optimizer state (one-step-stale neighbor mixing, fresh self term);
+    ``microbatches`` enables the shared gradient-accumulation scan.
     """
 
     def __init__(
@@ -78,10 +86,14 @@ class CollaborativeTrainer:
         donate: bool = True,
         interpret: bool = True,
         exchange: str = "f32",
+        schedule: str = "sync",
+        microbatches: int = 1,
     ):
         self.loss_fn = loss_fn
         self.topology = topology
         self.optimizer = optimizer
+        self.exchange = exchange
+        self.schedule = schedule
         if exchange != "f32" and not getattr(optimizer, "fused", False):
             import warnings
             warnings.warn(
@@ -91,33 +103,27 @@ class CollaborativeTrainer:
         self.comm: CommOps = stacked_comm_ops(topology, interpret=interpret,
                                               exchange=exchange)
         stacked = broadcast_to_agents(params, topology.n_agents) if stack else params
-        self.state = TrainState(params=stacked, opt_state=optimizer.init(stacked))
+        self._program = engine.StepProgram(
+            optimizer=optimizer,
+            comm=self.comm,
+            grad_phase=engine.make_grad_phase(loss_fn, microbatches),
+            update_phase=engine.make_update_phase(optimizer, self.comm, schedule),
+            schedule=schedule,
+            extra_metrics=lambda p: {"consensus_error": consensus_error_pytree(p)},
+        )
+        self.state = TrainState(params=stacked,
+                                opt_state=self._program.init_state(stacked))
         self.history = MetricHistory()
-        self._step_fn = jax.jit(self._make_step(), donate_argnums=(0, 1) if donate else ())
+        self._step_fn = jax.jit(self._program.step_fn,
+                                donate_argnums=(0, 1) if donate else ())
         self._eval_fn = jax.jit(self._make_eval())
-
-    # ------------------------------------------------------------------
-    def _make_step(self):
-        opt, comm, loss_fn = self.optimizer, self.comm, self.loss_fn
-
-        def step(params, opt_state, batch):
-            gp = opt.grad_params(params, opt_state)   # Nesterov lookahead point
-
-            def agent_loss(p, b):
-                return loss_fn(p, b)
-
-            (losses, metrics), grads = jax.vmap(
-                jax.value_and_grad(agent_loss, has_aux=True))(gp, batch)
-            new_params, new_opt_state = opt.update(params, grads, opt_state, comm)
-            out = {
-                "loss": jnp.mean(losses),
-                "consensus_error": consensus_error_pytree(new_params),
-            }
-            for k, v in metrics.items():
-                out[k] = jnp.mean(v)
-            return new_params, new_opt_state, out
-
-        return step
+        # per-step neighbor-exchange cost of the fused flat path (estimate;
+        # train_loop reports the cumulative figure alongside steps/sec)
+        self.wire_bytes_per_step = 0
+        if optimizer.uses_consensus:
+            self.wire_bytes_per_step = exchange_bytes_per_step(
+                flatbuf.make_flat_spec(stacked, lead=1), topology,
+                exchange)["per_step_bytes"]
 
     def _make_eval(self):
         loss_fn = self.loss_fn
@@ -168,12 +174,19 @@ def train_loop(
     printer: Optional[Callable[[str], None]] = None,
 ) -> MetricHistory:
     printer = printer or (lambda s: None)
+    wire_per_step = getattr(trainer, "wire_bytes_per_step", 0)
     t0 = time.time()
     for i in range(n_steps):
         m = trainer.step(next(batches))
         if log_every and (i + 1) % log_every == 0:
+            dt = time.time() - t0
+            sps = (i + 1) / dt if dt > 0 else float("inf")
+            wire = ""
+            if wire_per_step:
+                wire = f" wire={wire_per_step * (i + 1) / 1e6:.1f}MB"
             printer(f"step {i+1}/{n_steps} loss={m['loss']:.4f} "
-                    f"cons={m['consensus_error']:.3e} ({time.time()-t0:.1f}s)")
+                    f"cons={m['consensus_error']:.3e} {sps:.2f} steps/s"
+                    f"{wire} ({dt:.1f}s)")
         if eval_batch is not None and eval_every and (i + 1) % eval_every == 0:
             em = trainer.evaluate(eval_batch)
             trainer.history.log(trainer.state.step, **{f"eval_{k}": v for k, v in em.items()})

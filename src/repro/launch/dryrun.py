@@ -33,7 +33,7 @@ import traceback
 def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
            mixing: str, optimizer_name: str, topology: str, microbatches: int = 1,
            context_parallel: bool = False, fused: bool = False,
-           exchange: str = "f32"):
+           exchange: str = "f32", schedule: str = "sync"):
     import jax
     from repro.configs import get_config, INPUT_SHAPES
     from repro.core.optim import make_optimizer
@@ -54,7 +54,7 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
         opt = make_optimizer(optimizer_name, 0.01, **kw)
         bundle = steps_lib.build_train_step(
             cfg, shape, mesh, opt, mode=mode, topology_name=topology, mixing=mixing,
-            microbatches=microbatches, exchange=exchange)
+            microbatches=microbatches, exchange=exchange, schedule=schedule)
         params = bundle.param_structs(mesh)
         opt_state = bundle.opt_state_structs(mesh, opt)
         args = (params, opt_state, bundle.batch_specs)
@@ -79,7 +79,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
              out_dir: str = "results/dryrun", tag: str = "",
              analyze: bool = True, verbose: bool = True, microbatches: int = 1,
              context_parallel: bool = False, fused: bool = False,
-             exchange: str = "f32"):
+             exchange: str = "f32", schedule: str = "sync"):
     import jax
     from repro.analysis.hlo import analyze_hlo
     from repro.analysis.roofline import model_flops, roofline_from_stats
@@ -90,10 +90,11 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     built, skip = _build(arch, shape_name, multi_pod=multi_pod, mode=mode,
                          mixing=mixing, optimizer_name=optimizer_name, topology=topology,
                          microbatches=microbatches, context_parallel=context_parallel,
-                         fused=fused, exchange=exchange)
+                         fused=fused, exchange=exchange, schedule=schedule)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
               "mixing": mixing, "topology": topology, "optimizer": optimizer_name,
-              "microbatches": microbatches, "exchange": exchange}
+              "microbatches": microbatches, "exchange": exchange,
+              "schedule": schedule}
     if skip:
         record["status"] = skip
         _dump(out_dir, label, record)
@@ -118,6 +119,19 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         if verbose:
             print(f"[dryrun] {label} " + consensus_lib.describe_exchange_cost(
                 args[0], bundle.topology, live))
+        # which step inputs reach the collective exchange (the overlap
+        # schedule's proof: ppermutes consume only carried wire state, so
+        # they are off the grad->update critical path)
+        try:
+            from repro.core import engine
+            with mesh:
+                record["exchange_schedule"] = engine.exchange_dependency_report(
+                    fn, *args)
+            if verbose:
+                print(f"[dryrun] {label} exchange_schedule: "
+                      f"{record['exchange_schedule']}")
+        except Exception as e:  # analysis must never sink the record
+            record["exchange_schedule"] = f"FAIL: {type(e).__name__}: {e}"
     donate = bundle.donate_argnums if bundle is not None else ()
     try:
         with mesh:
@@ -193,6 +207,13 @@ def main() -> int:
                     choices=["f32", "bf16", "int8", "fp8"],
                     help="neighbor-exchange wire precision for the fused "
                          "path (int8/fp8: quantize before ppermute)")
+    ap.add_argument("--schedule", default="sync", choices=["sync", "overlap"],
+                    help="exchange schedule: 'overlap' exchanges the "
+                         "previous step's quantized buckets (double-buffered "
+                         "in the optimizer state) so the collective-permute "
+                         "leaves the grad->update critical path; the record's "
+                         "exchange_schedule field proves the dependency "
+                         "structure")
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
@@ -218,7 +239,7 @@ def main() -> int:
                        topology=args.topology, out_dir=args.out, tag=args.tag,
                        analyze=not args.no_analyze, microbatches=args.microbatch,
                        context_parallel=args.context_parallel, fused=args.fused,
-                       exchange=args.exchange)
+                       exchange=args.exchange, schedule=args.schedule)
         if str(rec.get("status", "")).startswith("FAIL"):
             failures += 1
     print(f"[dryrun] done: {len(pairs)} pairs, {failures} failures")

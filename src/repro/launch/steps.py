@@ -1,9 +1,11 @@
 """Sharded production step builders: train_step / prefill_step / serve_step.
 
-``build_train_step`` returns a jit-able CDSGD training step over the
-production mesh: per-agent gradients come from one ``vmap``'d backward over
-the leading agent axis (sharded on the agent mesh axes), and the consensus
-mixing runs either as
+``build_train_step`` is a thin front-end over the shared
+:class:`repro.core.engine.StepProgram` phase pipeline (grad -> pack ->
+quantize -> exchange -> update — the same phases the stacked
+``CollaborativeTrainer`` assembles): this module only supplies the
+mesh-specific comm ops and wraps the update phase group in ``shard_map``.
+The consensus mixing runs either as
 
 * ``mixing="dense"``   — stacked ``Pi`` einsum under pjit (paper-faithful
   semantics, naive collective schedule: XLA lowers it to all-gathers over
@@ -15,10 +17,16 @@ mixing runs either as
   ``shard_map`` region on dtype-bucketed flat buffers
   (:mod:`repro.core.flatbuf`): one ``lax.ppermute`` per circulant shift
   offset per bucket for the *entire model*, followed by the fused Pallas
-  update kernel (one launch per bucket) in the same region.  With a
-  ``fused=True`` optimizer this is the §Perf fast path; a non-fused
-  optimizer still runs correctly (its per-leaf update executes locally
-  inside the region).
+  update kernel (one launch per bucket) in the same region.  This is the
+  §Perf fast path and expects a ``fused=True`` optimizer (a non-fused one
+  still runs correctly inside the region, with a warning).
+
+``schedule="overlap"`` (fused path only) pipelines the exchange one step
+deep: the quantized buckets + row scales double-buffer in the optimizer
+state, so the ``ppermute``\\ s consume only carried state and drop off the
+grad->update critical path (one-step-stale neighbor mixing, fresh
+full-precision self term — see :mod:`repro.core.engine`; the dryrun's
+``exchange_schedule`` record proves the dependency structure per config).
 
 The fused path exposes the **exchange-precision knob**
 (``exchange="f32"|"bf16"|"int8"|"fp8"``): int8/fp8 quantize each packed
@@ -38,7 +46,7 @@ it returns last-position logits).
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -47,10 +55,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import consensus as consensus_lib
-from repro.core.optim import CommOps, DistributedOptimizer, OptState, stacked_comm_ops
+from repro.core import engine, flatbuf
+from repro.core.optim import CommOps, DistributedOptimizer, stacked_comm_ops
 from repro.core.topology import Topology, make_topology
 from repro.launch import sharding as shlib
-from repro.nn.param import shape_structs, stack_agent_axis
+from repro.nn.param import stack_agent_axis
 from repro.nn.transformer import decode_step, forward, loss_fn, model_template
 
 P = PartitionSpec
@@ -76,9 +85,13 @@ class TrainStepBundle:
     n_agents: int
     topology: Topology
     exchange: str = "f32"                 # neighbor-exchange wire precision
+    schedule: str = "sync"                # exchange schedule: sync | overlap
     # params + opt_state update in place every step: pass to jax.jit so the
     # fused kernels' input_output_aliases actually elide the output copies.
     donate_argnums: Tuple[int, ...] = (0, 1)
+    # StepProgram state initializer (fills the overlap wire double-buffer);
+    # falls back to optimizer.init when absent.
+    init_state: Optional[Callable] = None
 
     def param_structs(self, mesh: Mesh) -> PyTree:
         def leaf(pd, spec):
@@ -87,7 +100,8 @@ class TrainStepBundle:
                             is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"))
 
     def opt_state_structs(self, mesh: Mesh, optimizer) -> Any:
-        structs = jax.eval_shape(optimizer.init, self.param_structs(mesh))
+        init = self.init_state if self.init_state is not None else optimizer.init
+        structs = jax.eval_shape(init, self.param_structs(mesh))
         specs = self.opt_state_specs
         return jax.tree.map(
             lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
@@ -162,12 +176,14 @@ def make_mix_comm(
         lam2, lamn = topology.lambda2, topology.lambdan
         n_agents = topology.n_agents
 
+    # built once per bundle, not once per mean() invocation
+    ax = agent_axes if isinstance(agent_axes, tuple) else (agent_axes,)
+    local_mean = consensus_lib.make_sharded_mean_fn(ax)
+
     def mix(tree: PyTree) -> PyTree:
         return _shard_map(local_mix, mesh, (param_specs,), param_specs)(tree)
 
     def mean(tree: PyTree) -> PyTree:
-        ax = agent_axes if isinstance(agent_axes, tuple) else (agent_axes,)
-        local_mean = consensus_lib.make_sharded_mean_fn(ax)
         return _shard_map(local_mean, mesh, (param_specs,), param_specs)(tree)
 
     return CommOps(mix=mix, mean=mean, n_agents=n_agents, lambda2=lam2, lambdan=lamn)
@@ -186,6 +202,7 @@ def build_train_step(
     microbatches: int = 1,
     interpret: bool = True,       # Pallas interpret mode (fused path; False on TPU)
     exchange: str = "f32",        # ppermute wire precision (fused path only)
+    schedule: str = "sync",       # exchange schedule: sync | overlap
 ) -> TrainStepBundle:
     rules = shlib.rules_for_mode(mode, mesh)
     n_agents = shlib.agent_count(mesh, mode)
@@ -197,60 +214,77 @@ def build_train_step(
     opt_specs = optimizer.state_specs(pspecs)
     batch_specs = shlib.train_batch_specs(cfg, shape, mesh, mode)
     if mixing == "ppermute_fused":
-        # the whole optimizer update (neighbor exchange + fused kernel) runs
-        # inside one shard_map region; comm members are local fns.
+        # the whole update phase group (pack -> quantize -> exchange ->
+        # fused kernel) runs inside one shard_map region; comm members are
+        # local fns.
+        if not getattr(optimizer, "fused", False):
+            warnings.warn(
+                f"mixing='ppermute_fused' with {type(optimizer).__name__}"
+                "(fused=False): the update falls back to the per-leaf "
+                "reference path inside the shard_map region — pass "
+                "fused=True for the flat-buffer fast path", stacklevel=2)
         comm = make_local_fused_comm(topology, mesh, mode, interpret=interpret,
                                      exchange=exchange)
     else:
         if exchange != "f32":
-            import warnings
             warnings.warn(
                 f"exchange={exchange!r} only affects mixing='ppermute_fused'; "
                 f"mixing={mixing!r} moves native bytes", stacklevel=2)
         comm = make_mix_comm(topology, mesh, pspecs, mode, mixing)
+    init_wire = None
+    if schedule == "overlap":
+        if mixing != "ppermute_fused":
+            raise ValueError(
+                "schedule='overlap' requires mixing='ppermute_fused' (the "
+                "one-step-stale wire double-buffer lives on the flat-buffer "
+                f"path); got mixing={mixing!r}")
+        fl = engine.check_overlap_support(optimizer, comm)
+        # The wire double-buffer rides in the optimizer state: one
+        # (payload, row-scales) pair per flat bucket, agent axis leading.
+        # Buckets pack the *local* shard, so the rows dim shards over every
+        # non-agent mesh axis (a model-parallel device pair carries two
+        # different row blocks — the wire is never read as one global
+        # buffer, only round-tripped shard-to-shard between steps).
+        agent_axes = rules["agent"] if isinstance(rules["agent"], tuple) \
+            else (rules["agent"],)
+        other_axes = tuple(a for a in mesh.axis_names if a not in agent_axes)
+        n_buckets = flatbuf.make_flat_spec(
+            jax.tree.map(lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype),
+                         template,
+                         is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init")),
+            lead=1).n_buckets
+        wire_sp = P(rules["agent"], other_axes or None, None)
+        wire_specs = tuple((wire_sp, wire_sp) for _ in range(n_buckets))
+        opt_specs = opt_specs._replace(wire=wire_specs)
+        local_wire_init = engine.make_local_wire_init(fl)
 
-    def train_step(params, opt_state, batch):
-        gp = optimizer.grad_params(params, opt_state)
+        def init_wire(params):
+            return _shard_map(local_wire_init, mesh, (pspecs,),
+                              wire_specs)(params)
 
-        def agent_loss(p, b):
-            return loss_fn(cfg, p, b, remat=remat)
-
-        grad_fn = jax.vmap(jax.value_and_grad(agent_loss, has_aux=True))
-        if microbatches == 1:
-            (losses, metrics), grads = grad_fn(gp, batch)
-        else:
-            # gradient accumulation: (A, B, ...) -> scan over (M, A, B/M, ...)
-            def split(x):
-                a, b = x.shape[:2]
-                return jnp.moveaxis(
-                    x.reshape(a, microbatches, b // microbatches, *x.shape[2:]), 1, 0)
-
-            mb = jax.tree.map(split, batch)
-            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), gp)
-
-            def mb_step(acc, one):
-                (l, met), g = grad_fn(gp, one)
-                acc = jax.tree.map(lambda a, gi: a + gi.astype(jnp.float32), acc, g)
-                return acc, (l, met)
-
-            gsum, (losses, metrics) = jax.lax.scan(mb_step, zero, mb)
-            grads = jax.tree.map(lambda g: g / microbatches, gsum)
-        if mixing == "ppermute_fused":
-            def local_update(p, g, s):
-                return optimizer.update(p, g, s, comm)
-
-            new_params, new_opt = _shard_map(
-                local_update, mesh,
+    grad_phase = engine.make_grad_phase(
+        lambda p, b: loss_fn(cfg, p, b, remat=remat), microbatches)
+    update_local = engine.make_update_phase(optimizer, comm, schedule)
+    if mixing == "ppermute_fused":
+        def update_phase(params, grads, opt_state):
+            return _shard_map(
+                update_local, mesh,
                 (pspecs, pspecs, opt_specs), (pspecs, opt_specs),
             )(params, grads, opt_state)
-        else:
-            new_params, new_opt = optimizer.update(params, grads, opt_state, comm)
-        out = {"loss": jnp.mean(losses)}
-        out.update({k: jnp.mean(v) for k, v in metrics.items()})
-        return new_params, new_opt, out
+    else:
+        update_phase = update_local
+
+    program = engine.StepProgram(
+        optimizer=optimizer,
+        comm=comm,
+        grad_phase=grad_phase,
+        update_phase=update_phase,
+        schedule=schedule,
+        init_wire=init_wire,
+    )
 
     return TrainStepBundle(
-        step_fn=train_step,
+        step_fn=program.step_fn,
         param_template=template,
         param_specs=pspecs,
         opt_state_specs=opt_specs,
@@ -258,6 +292,8 @@ def build_train_step(
         n_agents=n_agents,
         topology=topology,
         exchange=exchange,
+        schedule=schedule,
+        init_state=program.init_state,
     )
 
 

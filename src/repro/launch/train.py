@@ -38,9 +38,16 @@ def main() -> None:
                     help="neighbor-exchange wire precision of the fused "
                          "path: int8/fp8 = stochastic-rounding quantization "
                          "before the exchange, ~4x fewer bytes per neighbor")
+    ap.add_argument("--schedule", default="sync", choices=["sync", "overlap"],
+                    help="exchange schedule: 'overlap' double-buffers the "
+                         "quantized wire payloads in the optimizer state "
+                         "(one-step-stale neighbor mixing, exchange off the "
+                         "grad->update critical path; implies --fused)")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation microbatches per step")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--momentum", type=float, default=0.9)
-    ap.add_argument("--schedule", default="fixed", choices=["fixed", "diminishing"])
+    ap.add_argument("--lr-schedule", default="fixed", choices=["fixed", "diminishing"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
@@ -64,7 +71,7 @@ def main() -> None:
     print(f"[train] {cfg.name}: {count_params(template):,} params, "
           f"{args.agents} agents over {args.topology}")
 
-    sched = (args.lr if args.schedule == "fixed"
+    sched = (args.lr if args.lr_schedule == "fixed"
              else schedules.diminishing(theta=args.lr * 10, eps=1.0, t=10.0))
     kw = {}
     if args.optimizer in ("cdmsgd", "cdmsgd_nesterov", "msgd", "fedavg"):
@@ -72,6 +79,10 @@ def main() -> None:
     if args.exchange != "f32" and not args.fused:
         # the exchange knob lives on the fused flat-buffer path
         print(f"[train] --exchange {args.exchange} implies --fused; enabling")
+        args.fused = True
+    if args.schedule == "overlap" and not args.fused:
+        # the overlap wire double-buffer lives on the fused flat-buffer path
+        print("[train] --schedule overlap implies --fused; enabling")
         args.fused = True
     if args.fused:
         kw["fused"] = True
@@ -87,7 +98,9 @@ def main() -> None:
         return loss_fn(cfg, p, {**batch, **extra})
 
     trainer = CollaborativeTrainer(lm_loss, params, topo, opt,
-                                   exchange=args.exchange)
+                                   exchange=args.exchange,
+                                   schedule=args.schedule,
+                                   microbatches=args.microbatch)
 
     from repro.core.consensus import describe_exchange_cost
     print("[train] " + describe_exchange_cost(trainer.state.params, topo,

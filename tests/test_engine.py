@@ -1,0 +1,265 @@
+"""StepProgram engine: phase assembly, schedules, and the critical-path proof.
+
+The engine is the single definition of the train step for BOTH execution
+modes, so these tests pin three contracts:
+
+* ``schedule="sync"`` assembles exactly the pre-engine monolithic closure
+  (same ops, same order — bitwise on this backend);
+* ``schedule="overlap"`` implements the one-step-stale mixing recurrence
+  ``x_{t+1} = diag(Pi) x_t + offdiag(Pi) q(x_{t-1}) - alpha g(x_t)`` with a
+  fresh full-precision self term, and converges next to the sync schedule
+  on the paper testbed at small lr (the PR 2 quantization caveat: momentum
+  at large lr amplifies ANY per-step perturbation chaotically, so
+  trajectory-level comparisons use small-lr CDSGD);
+* the shared grad phase's ``microbatches`` scan is exact gradient
+  accumulation (stacked parity here; sharded parity in test_sharded.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.consensus import consensus_error_pytree, initial_wire_state
+from repro.core.optim import CDSGD, CDMSGD, FedAvg, stacked_comm_ops
+from repro.core.topology import make_topology
+from repro.core.trainer import CollaborativeTrainer
+from repro.nn.paper_models import (
+    classifier_loss,
+    mlp_classifier_apply,
+    mlp_classifier_template,
+)
+from repro.nn.param import init_params
+
+N_AGENTS = 4
+LOSS = functools.partial(classifier_loss, mlp_classifier_apply)
+
+
+def _testbed(seed=0):
+    """The paper's MLP-classifier testbed, one batch shared by all tests."""
+    params = init_params(mlp_classifier_template(8, 4, width=16, depth=2),
+                         jax.random.PRNGKey(seed))
+    topo = make_topology("ring", N_AGENTS)
+    rng = np.random.default_rng(seed)
+    batch = {"x": jnp.asarray(rng.standard_normal((N_AGENTS, 8, 8)), jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 4, (N_AGENTS, 8)), jnp.int32)}
+    return params, topo, batch
+
+
+def _max_diff(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(jnp.max(jnp.abs(
+            x.astype(jnp.float32) - y.astype(jnp.float32)))), a, b)))
+
+
+# -------------------------------------------------------------------------
+# sync schedule == the pre-engine monolithic closure, bit-for-bit
+# -------------------------------------------------------------------------
+
+
+def test_sync_schedule_matches_legacy_closure_bitwise():
+    """The phase-assembled sync step must be the exact program the old
+    monolithic ``CollaborativeTrainer._make_step`` closure traced."""
+    params, topo, batch = _testbed()
+    opt = CDMSGD(0.05, mu=0.9, fused=True)
+    comm = stacked_comm_ops(topo)
+    tr = CollaborativeTrainer(LOSS, params, topo, opt, donate=False)
+
+    def legacy_step(p, s, b):
+        gp = opt.grad_params(p, s)
+        (losses, metrics), grads = jax.vmap(
+            jax.value_and_grad(lambda pp, bb: LOSS(pp, bb), has_aux=True))(gp, b)
+        new_params, new_state = opt.update(p, grads, s, comm)
+        out = {"loss": jnp.mean(losses),
+               "consensus_error": consensus_error_pytree(new_params)}
+        for k, v in metrics.items():
+            out[k] = jnp.mean(v)
+        return new_params, new_state, out
+
+    legacy = jax.jit(legacy_step)
+    p_l, s_l = tr.state.params, tr.state.opt_state
+    p_e, s_e = tr.state.params, tr.state.opt_state
+    for _ in range(3):
+        p_l, s_l, m_l = legacy(p_l, s_l, batch)
+        p_e, s_e, m_e = tr._step_fn(p_e, s_e, batch)
+    for a, b in zip(jax.tree.leaves(p_l), jax.tree.leaves(p_e)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(m_l["loss"]) == float(m_e["loss"])
+
+
+# -------------------------------------------------------------------------
+# overlap schedule semantics
+# -------------------------------------------------------------------------
+
+
+def test_overlap_matches_stale_mixing_recurrence():
+    """f32 overlap (deterministic wire) against the explicit recurrence
+    ``x_{t+1} = D x_t + O x_{t-1} - alpha x_t`` for loss 0.5||x||^2
+    (g = x), with ``x_{-1} := x_0``."""
+    A, D = 5, 300
+    topo = make_topology("ring", A)
+    comm = stacked_comm_ops(topo)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (A, D))}
+    opt = CDSGD(0.05, fused=True)
+
+    def loss(p, b):
+        return 0.5 * jnp.sum(p["w"] ** 2), {}
+
+    prog = engine.StepProgram(
+        optimizer=opt, comm=comm,
+        grad_phase=engine.make_grad_phase(loss),
+        update_phase=engine.make_update_phase(opt, comm, "overlap"),
+        schedule="overlap")
+    state = prog.init_state(params)
+    batch = {"x": jnp.zeros((A, 1))}
+    step = jax.jit(prog.step_fn)
+
+    pi = np.asarray(topo.pi, np.float32)
+    diag = np.diag(np.diag(pi))
+    off = pi - diag
+    x_prev = np.asarray(params["w"])
+    x = x_prev.copy()
+    p = params
+    for t in range(4):
+        p, state, _ = step(p, state, batch)
+        x_prev, x = x, diag @ x + off @ x_prev - 0.05 * x
+        np.testing.assert_allclose(np.asarray(p["w"]), x, rtol=0, atol=1e-5)
+
+
+def test_overlap_first_step_uses_initial_wire():
+    """Before step 0 the double-buffer holds q(x_0) (the ``x_{-1} := x_0``
+    convention), quantized with seed -1."""
+    params, topo, _ = _testbed()
+    comm = stacked_comm_ops(topo, exchange="int8")
+    opt = CDSGD(0.05, fused=True)
+    prog = engine.StepProgram(
+        optimizer=opt, comm=comm,
+        grad_phase=engine.make_grad_phase(LOSS),
+        update_phase=engine.make_update_phase(opt, comm, "overlap"),
+        schedule="overlap")
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (N_AGENTS,) + x.shape), params)
+    state = prog.init_state(stacked)
+    want = initial_wire_state(comm.flat, stacked)
+    assert len(state.wire) == len(want)
+    for (p_a, s_a), (p_b, s_b) in zip(state.wire, want):
+        assert p_a.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(p_a), np.asarray(p_b))
+        np.testing.assert_array_equal(np.asarray(s_a), np.asarray(s_b))
+
+
+# documented tolerance: the overlap neighbor term lags one step, so the
+# trajectories differ by O(alpha * offdiag(Pi) * ||x_t - x_{t-1}||) per
+# step (plus int8's unbiased <= row_amax/127 rounding per neighbor term).
+# Measured on 20 lr-5e-3 CDSGD steps of the MLP testbed: 8.6e-3 max param
+# diff (f32 wire) / 1.8e-2 (int8), loss gap 2.2e-2 while both descend from
+# 1.499 to ~1.43-1.45; asserted at 5e-2 each.
+OVERLAP_TRAJECTORY_TOL = 5e-2
+
+
+@pytest.mark.parametrize("exchange", ["f32", "int8"])
+def test_overlap_convergence_on_paper_testbed(exchange):
+    """20 small-lr CDSGD steps: the overlap schedule must track the sync
+    schedule's loss and parameters on the paper testbed (small-lr CDSGD per
+    the PR 2 quantization caveat — momentum at large lr is chaotic)."""
+    params, topo, batch = _testbed()
+    results = {}
+    for schedule in ("sync", "overlap"):
+        tr = CollaborativeTrainer(LOSS, params, topo, CDSGD(5e-3, fused=True),
+                                  schedule=schedule, exchange=exchange)
+        first = tr.step(batch)
+        for _ in range(19):
+            m = tr.step(batch)
+        results[schedule] = (tr.state.params, first["loss"], m["loss"])
+    p_s, first_s, last_s = results["sync"]
+    p_o, first_o, last_o = results["overlap"]
+    assert last_o < first_o, "overlap schedule must still descend"
+    assert abs(last_s - last_o) < OVERLAP_TRAJECTORY_TOL, (last_s, last_o)
+    assert _max_diff(p_s, p_o) < OVERLAP_TRAJECTORY_TOL
+
+
+@pytest.mark.parametrize("exchange", ["f32", "int8"])
+def test_overlap_wire_bytes_equal_sync_exchange_bytes(exchange):
+    """The carried double-buffer must put exactly the sync schedule's
+    bytes on the wire per neighbor (FlatSpec.exchange_bytes) — overlap
+    changes WHEN the payload moves, never how much.  For f32 wires the
+    carried unit scales never cross the wire (shift-invariant, synthesized
+    after the exchange), so they must not count."""
+    from repro.core import flatbuf
+    params, topo, _ = _testbed()
+    tr = CollaborativeTrainer(LOSS, params, topo, CDSGD(5e-3, fused=True),
+                              schedule="overlap", exchange=exchange)
+    spec = flatbuf.make_flat_spec(tr.state.params, lead=1)
+    assert engine.wire_bytes_per_neighbor(tr.state.opt_state.wire) == \
+        spec.exchange_bytes(exchange)
+
+
+def test_overlap_requires_fused_flat_path():
+    params, topo, _ = _testbed()
+    with pytest.raises(ValueError, match="fused"):
+        CollaborativeTrainer(LOSS, params, topo, CDSGD(0.05, fused=False),
+                             schedule="overlap")
+    with pytest.raises(ValueError, match="overlap"):
+        CollaborativeTrainer(LOSS, params, topo,
+                             FedAvg(0.05, local_steps=2, fused=True),
+                             schedule="overlap")
+    with pytest.raises(ValueError, match="schedule"):
+        CollaborativeTrainer(LOSS, params, topo, CDSGD(0.05, fused=True),
+                             schedule="async")
+
+
+# -------------------------------------------------------------------------
+# shared grad phase: microbatch gradient accumulation
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("opt_cls,kw", [(CDSGD, {}), (CDMSGD, {"mu": 0.9})])
+def test_microbatch_accumulation_parity_stacked(opt_cls, kw):
+    """microbatches=2 over the same data == microbatches=1, to fp-sum
+    reassociation (grads accumulate in f32)."""
+    params, topo, batch = _testbed()
+    trainers = [CollaborativeTrainer(LOSS, params, topo,
+                                     opt_cls(0.05, **kw), microbatches=m)
+                for m in (1, 2)]
+    for _ in range(3):
+        m1 = trainers[0].step(batch)
+        m2 = trainers[1].step(batch)
+    assert abs(m1["loss"] - m2["loss"]) < 1e-6
+    assert _max_diff(trainers[0].state.params, trainers[1].state.params) < 1e-6
+
+
+def test_grad_phase_microbatch_losses_keep_batch_mean():
+    """The scan's stacked (M, A) losses mean-reduce to the full-batch loss."""
+    params, topo, batch = _testbed()
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (N_AGENTS,) + x.shape), params)
+    g1 = engine.make_grad_phase(LOSS, 1)
+    g2 = engine.make_grad_phase(LOSS, 2)
+    (l1, _), grads1 = jax.jit(g1)(stacked, batch)
+    (l2, _), grads2 = jax.jit(g2)(stacked, batch)
+    assert l1.shape == (N_AGENTS,) and l2.shape == (2, N_AGENTS)
+    np.testing.assert_allclose(float(jnp.mean(l1)), float(jnp.mean(l2)),
+                               rtol=1e-6)
+    assert _max_diff(grads1, grads2) < 1e-6
+
+
+# -------------------------------------------------------------------------
+# critical-path analysis (stacked program: no collectives at all)
+# -------------------------------------------------------------------------
+
+
+def test_dependency_report_stacked_has_no_ppermutes():
+    params, topo, batch = _testbed()
+    tr = CollaborativeTrainer(LOSS, params, topo, CDSGD(5e-3, fused=True),
+                              schedule="overlap", exchange="int8")
+    rep = engine.exchange_dependency_report(
+        tr._program.step_fn, tr.state.params, tr.state.opt_state, batch)
+    assert rep["n_ppermutes"] == 0
+    assert not rep["off_grad_update_critical_path"]
+
+
+# (the build_train_step fused=False warning needs a >= 2-agent mesh, so it
+# lives in the test_sharded.py subprocess suite)
