@@ -258,6 +258,69 @@ def schedule_overlap(steps_timed: int = 3):
     return row, rec
 
 
+def multi_round(steps_timed: int = 3):
+    """k-round i-CDSGD (MixingProgram strategy layer) wire accounting.
+
+    Asserts, from the program-level accounting AND the carried buffers,
+    that (a) a k-round strategy puts exactly ``k x`` the single-round sync
+    bytes on the wire per step, and (b) error feedback adds ZERO wire
+    bytes — the EF-compressed payload has the sync payload's exact layout
+    (the residual is local f32 optimizer state that never moves)."""
+    from repro.core import consensus as C
+    from repro.core import engine
+    from repro.core.optim import CDSGD
+    from repro.core.trainer import CollaborativeTrainer
+
+    key = jax.random.PRNGKey(0)
+    topo = make_topology("ring", 4)
+    params = {"w": jax.random.normal(key, (256, 128), jnp.float32),
+              "b": jax.random.normal(key, (300,), jnp.float32)}
+
+    def loss(p, b):
+        return 0.5 * (jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)), {}
+
+    batch = {"x": jnp.zeros((4, 1), jnp.float32)}
+    k = 3
+    us, wire = {}, {}
+    for label, kw in (("k1", {}),
+                      (f"k{k}", {"consensus_rounds": k}),
+                      ("k1_ef", {"error_feedback": True})):
+        tr = CollaborativeTrainer(loss, params, topo, CDSGD(0.01, fused=True),
+                                  exchange="int8", donate=False, **kw)
+        us[label] = _time(tr._step_fn, tr.state.params, tr.state.opt_state,
+                          batch, reps=steps_timed)
+        wire[label] = tr.wire_bytes_per_step
+    assert wire[f"k{k}"] == k * wire["k1"], wire
+    assert wire["k1_ef"] == wire["k1"], wire
+
+    # EF payload layout == plain payload layout, from the actual buffers
+    comm = tr.comm                      # the EF trainer's comm
+    fl = comm.flat
+    spec = fl.spec(tr.state.params)
+    bufs = fl.pack(tr.state.params, spec)
+    plain = fl.quantize_stage(bufs, jnp.int32(0))
+    ef_wire, _res = fl.strategy.quantize_ef(
+        bufs, jnp.int32(0), fl.strategy.residual_init(bufs))
+    per_nbr = {"plain": engine.wire_bytes_per_neighbor(plain),
+               "ef": engine.wire_bytes_per_neighbor(ef_wire)}
+    assert per_nbr["ef"] == per_nbr["plain"] == spec.exchange_bytes("int8")
+
+    rec = {
+        "bench": "consensus/multi_round",
+        "model": "33k f32 params, ring deg 2, int8 wire",
+        "rounds": k,
+        "us_per_step_interp": {kk: round(v, 1) for kk, v in us.items()},
+        "wire_bytes_per_step": wire,
+        "ef_wire_bytes_per_neighbor": per_nbr,
+        "k_round_wire_is_k_x_sync": True,
+        "ef_extra_wire_bytes": 0,
+    }
+    row = ("kernel/multi_round", us[f"k{k}"],
+           f"k1_us={us['k1']:.0f};wire/step k1={wire['k1']} "
+           f"k{k}={wire[f'k{k}']} (={k}x);ef extra wire=0")
+    return row, rec
+
+
 def run(smoke: bool = False, json_out: str = None):
     key = jax.random.PRNGKey(0)
     rows = []
@@ -305,7 +368,8 @@ def run(smoke: bool = False, json_out: str = None):
 
     # bytes-on-wire per exchange precision + in-place aliasing accounting
     # + sync-vs-overlap schedule step time / wire-byte equality
-    for fn in (exchange_wire, alias_accounting, schedule_overlap):
+    # + k-round strategy wire accounting (k x sync; EF adds 0)
+    for fn in (exchange_wire, alias_accounting, schedule_overlap, multi_round):
         row, rec = fn()
         rows.append(row)
         records.append(rec)

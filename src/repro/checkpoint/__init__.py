@@ -1,5 +1,12 @@
 """Checkpointing: pytree <-> .npz with path-keyed entries."""
 
-from repro.checkpoint.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    restore_train_state,
+    save_checkpoint,
+    save_train_state,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "save_train_state", "restore_train_state"]

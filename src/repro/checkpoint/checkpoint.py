@@ -3,6 +3,14 @@
 Per-agent training state (stacked params, optimizer momenta, step counter)
 round-trips exactly; restore validates structure against a reference
 template so a config change can't silently load mismatched weights.
+
+:func:`save_train_state` / :func:`restore_train_state` checkpoint the FULL
+collaborative state — params plus the whole ``OptState``, including the
+``schedule="overlap"`` wire double-buffer (int8/fp8 payloads + row scales)
+and the error-feedback residuals — so a resumed run continues bit-exact.
+Saving params alone and re-initializing the optimizer state would silently
+reset the carried wire to the ``x_{-1} := x_0`` convention and the
+residuals to zero, changing the trajectory from the restore point on.
 """
 
 from __future__ import annotations
@@ -60,6 +68,29 @@ def latest_step(directory: str) -> Optional[int]:
         if m:
             steps.append(int(m.group(1)))
     return max(steps) if steps else None
+
+
+def save_train_state(directory: str, step: int, params: PyTree,
+                     opt_state: Any) -> str:
+    """Checkpoint params + the full optimizer state (momenta, step counter,
+    overlap wire buffers, error-feedback residuals) as one tree."""
+    return save_checkpoint(directory, step,
+                           {"params": params, "opt_state": opt_state})
+
+
+def restore_train_state(directory: str, params_like: PyTree, opt_state_like: Any,
+                        step: Optional[int] = None):
+    """Restore ``(params, opt_state)`` into the given reference structures.
+
+    ``opt_state_like`` must come from the SAME step-program configuration
+    (e.g. ``StepProgram.init_state``) so the wire/residual buffers exist in
+    the template; a checkpoint written without them (or with a different
+    schedule/strategy) fails loudly instead of silently resetting state.
+    """
+    tree = restore_checkpoint(directory,
+                              {"params": params_like, "opt_state": opt_state_like},
+                              step=step)
+    return tree["params"], tree["opt_state"]
 
 
 def restore_checkpoint(directory: str, like: PyTree, step: Optional[int] = None) -> PyTree:

@@ -25,6 +25,19 @@ Three execution paths, one semantics (paper eq. 5 / eq. 6):
 is our TPU-native extension for multi-pod meshes: a ring over the ``pod``
 axis (scarce DCN links) crossed with a denser graph over the in-pod ``data``
 axis (cheap ICI links).
+
+Mixing strategies (the MixingProgram layer)
+-------------------------------------------
+How the wire stages compose per optimizer step is a first-class
+**strategy** object (:class:`StaticMixing`, :class:`TimeVaryingMixing`,
+:class:`MultiRoundMixing`), configured by a :class:`MixingProgram` and
+carried inside :class:`FlatComm`.  Every strategy implements the same
+contract — ``quantize_stage`` / ``exchange_stage`` / ``gather`` plus the
+engine-facing ``continue_from_wire`` and the error-feedback
+``quantize_ef`` — so both execution modes, both exchange schedules
+(``sync`` / ``overlap``), the fused kernels, the wire-byte accounting, and
+the dryrun dependency proof apply to any of them unchanged (see
+ARCHITECTURE.md §mixing strategies).
 """
 
 from __future__ import annotations
@@ -38,11 +51,111 @@ import numpy as np
 from jax import lax
 
 from repro.core import flatbuf
-from repro.core.topology import Topology
+from repro.core.topology import Topology, TopologySchedule, fixed_schedule
 from repro.utils.tree import tree_weighted_sum
 
 PyTree = Any
 MixFn = Callable[[PyTree], PyTree]
+
+
+# --------------------------------------------------------------------------
+# MixingProgram: the configuration of the mixing-strategy layer
+# --------------------------------------------------------------------------
+
+MIXING_STRATEGIES = ("static", "time_varying", "multi_round")
+
+
+@dataclasses.dataclass(frozen=True)
+class MixingProgram:
+    """What the consensus exchange does each optimizer step.
+
+    * ``strategy="static"``      — one fixed ``Pi``, one round (the paper's
+      setting; bit-for-bit today's path);
+    * ``strategy="time_varying"``— ``Pi_t = schedule[t % period]`` selected
+      by the optimizer step (B-connected sequences, gossip pairs);
+    * ``strategy="multi_round"`` — ``rounds`` inner consensus rounds per
+      gradient step, re-quantizing between rounds: ``x' = Pi^k x - a g``
+      (i-CDSGD, Jiang et al. 1805.12120).  ``rounds`` also composes with
+      ``time_varying`` (``Pi_t`` applied ``k`` times).
+
+    ``error_feedback`` compresses ``residual + payload`` instead of the raw
+    payload and carries the compression error in ``OptState.residual`` —
+    the principled fix for quantization-noise accumulation (requires a
+    quantized ``exchange``; the residual never crosses the wire).
+
+    Built via :func:`make_mixing_program`, which validates everything at
+    config time — never inside a traced step.
+    """
+
+    schedule: TopologySchedule
+    strategy: str = "static"
+    rounds: int = 1
+    error_feedback: bool = False
+    exchange: str = "f32"
+
+    @property
+    def is_trivial(self) -> bool:
+        """True iff this is exactly the legacy single-round fixed-``Pi``
+        program (whose sync path must stay bit-for-bit unchanged)."""
+        return (self.strategy == "static" and self.rounds == 1
+                and not self.error_feedback)
+
+    def describe(self) -> dict:
+        return {
+            "strategy": self.strategy,
+            "schedule": self.schedule.name,
+            "period": self.schedule.period,
+            "rounds": self.rounds,
+            "error_feedback": self.error_feedback,
+            "exchange": self.exchange,
+        }
+
+
+def make_mixing_program(
+    topology_or_schedule,
+    *,
+    strategy: str = "static",
+    rounds: int = 1,
+    error_feedback: bool = False,
+    exchange: str = "f32",
+) -> MixingProgram:
+    """Validate + build a :class:`MixingProgram` at config time.
+
+    Accepts a :class:`Topology` (wrapped in a period-1 schedule) or a
+    :class:`TopologySchedule`.  ``strategy="static"`` with ``rounds > 1``
+    is promoted to ``"multi_round"`` (they are the same family; ``k = 1``
+    multi-round is literally the static strategy object).
+    """
+    _check_exchange(exchange)
+    if isinstance(topology_or_schedule, Topology):
+        schedule = fixed_schedule(topology_or_schedule)
+    elif isinstance(topology_or_schedule, TopologySchedule):
+        schedule = topology_or_schedule
+    else:
+        raise TypeError(f"expected Topology or TopologySchedule, got "
+                        f"{type(topology_or_schedule).__name__}")
+    if not isinstance(rounds, int) or rounds < 1:
+        raise ValueError(f"consensus rounds must be an int >= 1, got {rounds!r}")
+    if strategy not in MIXING_STRATEGIES:
+        raise ValueError(f"unknown mixing strategy {strategy!r}; expected one "
+                         f"of {MIXING_STRATEGIES}")
+    if strategy == "static" and rounds > 1:
+        strategy = "multi_round"
+    if strategy == "multi_round" and rounds == 1:
+        # k = 1 multi-round IS the static strategy — normalizing here makes
+        # the equivalence bit-for-bit by construction (same legacy gather)
+        strategy = "static"
+    if strategy in ("static", "multi_round") and schedule.period != 1:
+        raise ValueError(
+            f"strategy={strategy!r} takes a fixed topology but the schedule "
+            f"{schedule.name!r} has period {schedule.period}; use "
+            "strategy='time_varying'")
+    if error_feedback and exchange not in ("int8", "fp8"):
+        raise ValueError(
+            f"error_feedback=True needs a quantized exchange (int8|fp8): "
+            f"exchange={exchange!r} has no quantization error to feed back")
+    return MixingProgram(schedule=schedule, strategy=strategy, rounds=rounds,
+                         error_feedback=error_feedback, exchange=exchange)
 
 
 # --------------------------------------------------------------------------
@@ -80,8 +193,8 @@ class FlatComm:
 
     Phase stages (the StepProgram engine's pipeline, see
     :mod:`repro.core.engine`): ``gather`` is the one-shot sync form;
-    ``quantize_stage(bufs, seed)`` and ``exchange_stage(wire)`` expose the
-    same computation as two separately schedulable halves.
+    ``quantize_stage(bufs, seed)`` and ``exchange_stage(wire, step)``
+    expose the same computation as two separately schedulable halves.
     ``quantize_stage`` maps packed buckets to the **wire state** — one
     ``(payload, row_scales)`` pair per bucket, always carrying the leading
     agent axes so it can live inside the optimizer state under either
@@ -91,7 +204,13 @@ class FlatComm:
     first — in the sharded mode this is where the ``ppermute``\\ s happen,
     and because the wire state may come from the *previous* optimizer step
     the exchange has no data dependency on the current backward (the
-    ``schedule="overlap"`` one-step-stale pipeline).
+    ``schedule="overlap"`` one-step-stale pipeline).  ``step`` indexes the
+    schedule of a time-varying strategy (ignored by fixed topologies).
+
+    All three callables delegate to ``strategy`` — the
+    :class:`MixingStrategy` object configured by ``program`` — which also
+    carries the multi-round pipeline (``continue_from_wire``) and the
+    error-feedback quantizer (``quantize_ef``) the engine schedules.
     """
 
     lead: int                     # leading replica axes excluded from packing
@@ -102,7 +221,10 @@ class FlatComm:
     n_agents: int = 1
     # split phase stages (see class docstring); None on comms predating them
     quantize_stage: Optional[Callable] = None   # (bufs, seed) -> wire
-    exchange_stage: Optional[Callable] = None   # (wire) -> (nbrs, weights_q, scales)
+    exchange_stage: Optional[Callable] = None   # (wire, step) -> (nbrs, weights_q, scales)
+    # the mixing-strategy layer (None only on hand-rolled test comms)
+    strategy: Optional["MixingStrategy"] = None
+    program: Optional[MixingProgram] = None
 
     def spec(self, tree: PyTree) -> flatbuf.FlatSpec:
         return flatbuf.make_flat_spec(tree, lead=self.lead)
@@ -123,13 +245,15 @@ class FlatComm:
 
 
 # distinct odd strides decorrelate the stochastic-rounding streams across
-# steps, buckets, and agents while keeping stacked/sharded seeds identical
-# (without the step stride, step t+1 / bucket b would collide with step
-# t+1-7919k / bucket b+k; int32 wraparound at large steps is fine — the
-# seed only needs to be a well-spread hash input).
+# steps, buckets, agents, and inner consensus rounds while keeping
+# stacked/sharded seeds identical (without the step stride, step t+1 /
+# bucket b would collide with step t+1-7919k / bucket b+k; int32 wraparound
+# at large steps is fine — the seed only needs to be a well-spread hash
+# input).
 _SEED_STEP_STRIDE = 1000003
 _SEED_BUCKET_STRIDE = 7919
 _SEED_AGENT_STRIDE = 104729
+_SEED_ROUND_STRIDE = 611953
 
 
 def _check_exchange(exchange: str) -> str:
@@ -181,8 +305,199 @@ def _quantize_wire_stacked(bufs, seed, n: int, exchange: str, interpret: bool):
     return tuple(out)
 
 
+# --------------------------------------------------------------------------
+# MixingStrategy: how the wire stages compose per optimizer step
+# --------------------------------------------------------------------------
+
+
+class MixingStrategy:
+    """Base strategy: one consensus round of a (possibly step-indexed) Pi.
+
+    Subclasses select behavior via ``rounds`` and ``_entry``; the heavy
+    lifting lives in four execution-mode-specific primitives supplied by
+    :func:`stacked_flat_comm` / :func:`sharded_flat_comm`:
+
+    * ``quantize(bufs, seed) -> wire`` — packed buckets to wire state;
+    * ``exchange_t(wire, t) -> (nbrs, weights_q, scales)`` — one round of
+      neighbor exchange under schedule entry ``t`` (``None`` = entry 0,
+      statically); in the sharded mode this is where the ``ppermute``\\ s
+      (under ``lax.switch`` for time-varying schedules) happen;
+    * ``combine(nbrs, weights_q, scales, selfs) -> bufs`` — the mixing sum
+      in full precision, used *between* inner rounds (the final round is
+      fused into the update kernel);
+    * ``wire_to_bufs(wire) -> bufs_f32`` — local dequantization, used by
+      the error-feedback residual update.
+
+    The engine-facing entry points are :meth:`continue_from_wire` (rounds
+    1..k given the round-1 wire — carried state under ``schedule="overlap"``,
+    fresh under ``sync``) and :meth:`quantize_ef`.
+    """
+
+    name = "static"
+
+    def __init__(self, program: MixingProgram, *, quantize, exchange_t,
+                 combine, wire_to_bufs, legacy_gather=None,
+                 bufs_to_state=None, state_to_bufs=None):
+        self.program = program
+        self.rounds = program.rounds
+        self._quantize = quantize
+        self._exchange_t = exchange_t
+        self._combine = combine
+        self._wire_to_bufs = wire_to_bufs
+        self._legacy_gather = legacy_gather
+        # residual buffers live in the optimizer state with the leading
+        # agent axes kept (like the wire pairs) so sharded PartitionSpecs
+        # apply; the sharded mode's packed bufs are squeezed, so these two
+        # convert between the layouts (identity in the stacked mode).
+        ident = lambda bufs: list(bufs)
+        self._bufs_to_state = bufs_to_state or ident
+        self._state_to_bufs = state_to_bufs or ident
+
+    # -- schedule indexing --------------------------------------------------
+    def _entry(self, step):
+        """Schedule entry for optimizer step ``step`` (None = static 0)."""
+        return None
+
+    # -- the FlatComm stage contract ---------------------------------------
+    def quantize_stage(self, bufs, seed):
+        return self._quantize(bufs, seed)
+
+    def exchange_stage(self, wire, step=None):
+        return self._exchange_t(wire, self._entry(step))
+
+    def combine(self, nbrs, weights_q, scales, selfs):
+        return self._combine(nbrs, weights_q, scales, selfs)
+
+    def continue_from_wire(self, bufs, wire, step):
+        """Rounds 1..k of the per-step pipeline, round 1 from ``wire``.
+
+        ``wire`` is either the freshly quantized current params (sync) or
+        the carried one-step-stale buffer (overlap — only round 1 consumes
+        it; rounds 2..k re-quantize the partially mixed buffers and stay on
+        the grad->update critical path).  Returns the final round's kernel
+        operands ``(nbrs, weights, scales, selfs)`` where ``selfs`` is the
+        round-(k-1) mixed buffer (the fused kernel applies round k +
+        gradient in one launch).  Inner rounds run under ``lax.scan``.
+        """
+        nbrs, w, sc = self.exchange_stage(wire, step)
+        if self.rounds == 1:
+            return nbrs, w, sc, list(bufs)
+        b = self._combine(nbrs, w, sc, bufs)              # round 1
+        if self.rounds > 2:
+            step_i = jnp.asarray(step, jnp.int32)
+            seeds = step_i + _SEED_ROUND_STRIDE * jnp.arange(
+                1, self.rounds - 1, dtype=jnp.int32)
+
+            def round_body(carry, seed_r):
+                wire_r = self._quantize(list(carry), seed_r)
+                nb, wr, scr = self.exchange_stage(wire_r, step)
+                return tuple(self._combine(nb, wr, scr, list(carry))), None
+
+            b, _ = lax.scan(round_body, tuple(b), seeds)
+            b = list(b)
+        seed_k = jnp.asarray(step, jnp.int32) + \
+            _SEED_ROUND_STRIDE * (self.rounds - 1)
+        wire_k = self._quantize(b, seed_k)
+        nbrs, w, sc = self.exchange_stage(wire_k, step)
+        return nbrs, w, sc, list(b)
+
+    def gather(self, bufs, seed):
+        """One-shot sync form: quantize current params, run all rounds."""
+        if self._legacy_gather is not None and self.program.is_trivial:
+            # bit-for-bit the pre-strategy path (incl. the dense-weight
+            # unquantized stacked form)
+            return self._legacy_gather(bufs, seed)
+        wire = self._quantize(bufs, seed)
+        return self.continue_from_wire(bufs, wire, seed)
+
+    # -- error feedback -----------------------------------------------------
+    def quantize_ef(self, bufs, seed, residual):
+        """EF-compress the round-1 wire payload: ``Q(x + e)``.
+
+        Returns ``(wire, new_residual)`` with ``new_residual = (x + e) -
+        dequant(Q(x + e))`` — the compression error carried to the next
+        step so quantization noise telescopes instead of accumulating
+        (Seide et al. 2014 / Karimireddy et al. 2019).  The residual is
+        f32, never crosses the wire, and applies to the round-1 (raw
+        params) payload only; inner multi-round payloads are fresh each
+        step and use plain stochastic rounding.
+        """
+        res = self._state_to_bufs(residual)
+        carried = [b.astype(jnp.float32) + e for b, e in zip(bufs, res)]
+        wire = self._quantize(carried, seed)
+        deq = self._wire_to_bufs(wire)
+        new_residual = tuple(self._bufs_to_state(
+            [c - d for c, d in zip(carried, deq)]))
+        return wire, new_residual
+
+    def residual_init(self, bufs):
+        """Zero-initialized f32 residuals, one per packed bucket (leading
+        agent axes kept, matching the wire state's layout)."""
+        return tuple(self._bufs_to_state(
+            [jnp.zeros(b.shape, jnp.float32) for b in bufs]))
+
+
+class StaticMixing(MixingStrategy):
+    """The paper's fixed ``Pi``, one round — bit-for-bit the legacy path."""
+
+    name = "static"
+
+
+class TimeVaryingMixing(MixingStrategy):
+    """``Pi_t = schedule[t % period]`` selected by the optimizer step.
+
+    Stacked mode: the dense self-separated weights are indexed out of a
+    ``(T, A, A+1)`` stack.  Sharded mode: each entry's circulant shift set
+    is its own ``lax.switch`` branch of ``ppermute``\\ s (padded to the
+    union stencil with zero-weight slots), so a step only pays its own
+    entry's collectives.
+    """
+
+    name = "time_varying"
+
+    def __init__(self, program, **kw):
+        super().__init__(program, **kw)
+        self._period = program.schedule.period
+
+    def _entry(self, step):
+        if step is None:
+            raise ValueError("TimeVaryingMixing needs the optimizer step to "
+                             "select Pi_t; exchange_stage(wire, step)")
+        return jnp.mod(jnp.asarray(step, jnp.int32), self._period)
+
+
+class MultiRoundMixing(MixingStrategy):
+    """``rounds`` inner consensus rounds per gradient step (i-CDSGD).
+
+    ``x' = Pi^k x - alpha g``: rounds 1..k-1 mix in full precision between
+    re-quantizations (``lax.scan``), round k is fused into the update
+    kernel.  Wire cost is exactly ``k x`` the single-round bytes.
+    ``MultiRoundMixing`` with ``rounds=1`` is never constructed — the
+    factories return :class:`StaticMixing` (identical by definition).
+    """
+
+    name = "multi_round"
+
+
+def _make_strategy(program: MixingProgram, **prims) -> MixingStrategy:
+    if program.strategy == "time_varying":
+        return TimeVaryingMixing(program, **prims)
+    if program.strategy == "multi_round" and program.rounds > 1:
+        return MultiRoundMixing(program, **prims)
+    return StaticMixing(program, **prims)
+
+
+def _self_separated_weights(pi: np.ndarray) -> np.ndarray:
+    """``[diag(Pi) | zero-diag Pi]`` — the quantized-form (A, A+1) weights."""
+    n = pi.shape[0]
+    pi = np.asarray(pi, np.float64)
+    return np.concatenate([np.diag(pi)[:, None],
+                           pi * (1.0 - np.eye(n))], axis=1)
+
+
 def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
-                      exchange: str = "f32") -> FlatComm:
+                      exchange: str = "f32",
+                      program: Optional[MixingProgram] = None) -> FlatComm:
     """FlatComm for agent-stacked pytrees (dense ``Pi``, any topology).
 
     Quantized exchanges quantize the agent stack once (per-agent seeds
@@ -192,38 +507,76 @@ def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
     wire payloads of everyone else (``weights[j, 1:] = Pi[j, :]`` with the
     diagonal zeroed) — exactly what the sharded exchange delivers, where
     the self buffer never crosses the wire.
-    """
-    _check_exchange(exchange)
-    pi = jnp.asarray(topology.pi, dtype=jnp.float32)
-    n = topology.n_agents
-    # quantized-form weights: [diag | off-diagonal rows], (A, A+1)
-    pi_q = jnp.concatenate(
-        [jnp.diag(pi)[:, None], pi * (1.0 - jnp.eye(n, dtype=pi.dtype))], axis=1)
 
-    def quantize_stage(bufs, seed):
+    ``program`` selects the mixing strategy (default: the trivial static
+    program over ``topology``); its schedule entries supply the per-step
+    ``Pi_t`` of a time-varying strategy.
+    """
+    if program is None:
+        program = make_mixing_program(topology, exchange=exchange)
+    exchange = _check_exchange(program.exchange)
+    schedule = program.schedule
+    pi = jnp.asarray(schedule.topologies[0].pi, dtype=jnp.float32)
+    n = schedule.n_agents
+    # quantized-form weights per schedule entry: [diag | off-diag], (T, A, A+1)
+    pi_q_stack = jnp.asarray(
+        np.stack([_self_separated_weights(t.pi) for t in schedule.topologies]),
+        jnp.float32)
+    period = schedule.period
+
+    def quantize(bufs, seed):
         return _quantize_wire_stacked(bufs, seed, n, exchange, interpret)
 
-    def exchange_stage(wire):
+    def exchange_t(wire, t):
         # stacked simulation: every agent already sees the full stack — the
         # "exchange" is handing the wire payloads to the kernels with the
-        # self-separated [diag(Pi) | zero-diag Pi] weights.
-        return ([p for p, _ in wire], pi_q, [sc for _, sc in wire])
+        # self-separated [diag(Pi_t) | zero-diag Pi_t] weights.
+        if t is None or period == 1:
+            w = pi_q_stack[0]
+        else:
+            w = jnp.take(pi_q_stack, t, axis=0)
+        return ([p for p, _ in wire], w, [sc for _, sc in wire])
 
-    def gather(bufs, seed):
+    def wire_to_bufs(wire):
+        return [p.astype(jnp.float32) * sc for p, sc in wire]
+
+    def combine(nbrs, weights_q, scales, selfs):
+        """Full-precision one-round mix of the agent stack (inner rounds).
+
+        ``mixed_j = w[j,0] self_j + sum_l w[j,1+l] dequant(payload_l)`` —
+        the same sum the fused kernels evaluate, materialized because the
+        next round re-quantizes it.
+        """
+        out = []
+        for p, sc, sf in zip(nbrs, scales, selfs):
+            deq = p.astype(jnp.float32) * sc              # (A, rows, 128)
+            mixed = jnp.einsum("jl,lrc->jrc", weights_q[:, 1:], deq)
+            mixed = mixed + weights_q[:, :1, None] * sf.astype(jnp.float32)
+            out.append(mixed.astype(sf.dtype))
+        return out
+
+    def legacy_gather(bufs, seed):
         if exchange in ("f32", "bf16"):
             return ([_wire_payload(b, None, exchange, interpret)[0] for b in bufs],
                     pi, [None] * len(bufs), [None] * len(bufs))
-        nbrs, w, scales = exchange_stage(quantize_stage(bufs, seed))
+        nbrs, w, scales = exchange_t(quantize(bufs, seed), None)
         return nbrs, w, scales, list(bufs)
 
-    return FlatComm(lead=1, batched=True, gather=gather, interpret=interpret,
-                    exchange=exchange, n_agents=n,
-                    quantize_stage=quantize_stage, exchange_stage=exchange_stage)
+    strategy = _make_strategy(program, quantize=quantize, exchange_t=exchange_t,
+                              combine=combine, wire_to_bufs=wire_to_bufs,
+                              legacy_gather=legacy_gather)
+
+    return FlatComm(lead=1, batched=True, gather=strategy.gather,
+                    interpret=interpret, exchange=exchange, n_agents=n,
+                    quantize_stage=strategy.quantize_stage,
+                    exchange_stage=strategy.exchange_stage,
+                    strategy=strategy, program=program)
 
 
 def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
                       lead: int = 1, interpret: bool = True,
-                      exchange: str = "f32") -> FlatComm:
+                      exchange: str = "f32",
+                      program: Optional[MixingProgram] = None) -> FlatComm:
     """FlatComm for use inside ``shard_map``; circulant topologies only.
 
     ``factors`` is ``[(axis_name, Topology), ...]`` — one entry for the
@@ -236,59 +589,112 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
     ``(rows, 1)`` row scales — ~3.9x fewer bytes per shift than the f32
     wire; the self term (the identity shift) stays in native precision
     since it moves no data.
+
+    A time-varying ``program`` (single agent axis only) compiles one
+    ``lax.switch`` branch per schedule entry: branch ``t`` issues only
+    entry ``t``'s circulant ``ppermute``\\ s, padding the neighbor stack to
+    the union stencil with zero slots (whose weights are zero in that
+    entry's weight row).
     """
     import itertools
 
+    if program is not None:
+        exchange = program.exchange
     _check_exchange(exchange)
 
-    per_axis = []
-    for axis_name, topo in factors:
-        if topo.n_agents == 1:
-            continue
-        shifts = topo.shift_weights()
-        if shifts is None:
-            raise ValueError(
-                f"topology {topo.name!r} on axis {axis_name!r} is not "
-                "circulant; use mixing='ppermute' or 'dense' instead")
-        per_axis.append((axis_name, topo.n_agents, sorted(shifts.items())))
+    def _axis_data(per_factor):
+        """[(axis, n, sorted shift items)] for one schedule entry."""
+        out = []
+        for axis_name, topo in per_factor:
+            if topo.n_agents == 1:
+                continue
+            shifts = topo.shift_weights()
+            if shifts is None:
+                raise ValueError(
+                    f"topology {topo.name!r} on axis {axis_name!r} is not "
+                    "circulant; use mixing='ppermute' or 'dense' instead")
+            out.append((axis_name, topo.n_agents, sorted(shifts.items())))
+        return out
 
-    combos = list(itertools.product(*[s for _, _, s in per_axis])) or [()]
+    time_varying = program is not None and program.strategy == "time_varying"
+    if time_varying:
+        live = [(a, t) for a, t in factors if t.n_agents > 1]
+        if len(live) != 1:
+            raise ValueError(
+                "time-varying mixing supports a single agent mesh axis "
+                f"(got {[a for a, _ in factors]}); factored multi-axis "
+                "meshes need per-axis schedules, which are not implemented")
+        axis_name = live[0][0]
+        entries = [_axis_data([(axis_name, t)])
+                   for t in program.schedule.topologies]
+    else:
+        entries = [_axis_data(factors)]
+
+    # per-entry shift combinations; the wire stencil is their union so every
+    # schedule entry returns identically shaped operands (lax.switch).
+    def _combos(per_axis):
+        return list(itertools.product(*[s for _, _, s in per_axis])) or [()]
 
     def _combo_weight(combo):
         return float(np.prod([w for _, w in combo]) if combo else 1.0)
 
-    def _is_identity(combo):
-        return all(s % n == 0 for (_, n, _), (s, _w) in zip(per_axis, combo))
+    def _is_identity(per_axis, combo):
+        return all(s % nn == 0 for (_, nn, _), (s, _w) in zip(per_axis, combo))
 
-    weights = jnp.asarray([_combo_weight(c) for c in combos], jnp.float32)
-    # quantized form: self (identity shift, native precision) first, then
-    # one entry per wire-crossing shift combination.
-    wire_combos = [c for c in combos if not _is_identity(c)]
-    self_weight = sum(_combo_weight(c) for c in combos if _is_identity(c))
-    weights_q = jnp.asarray([self_weight] + [_combo_weight(c) for c in wire_combos],
-                            jnp.float32)
+    def _combo_key(per_axis, combo):
+        return tuple((ax, s % nn) for (ax, nn, _), (s, _w)
+                     in zip(per_axis, combo))
+
+    # union stencil over entries, keyed by (axis, shift mod n)
+    union_keys: list = []
+    entry_wire: list = []      # per entry: {key: (per_axis_index->shift, weight)}
+    entry_selfw: list = []
+    for per_axis in entries:
+        wire_map = {}
+        selfw = 0.0
+        for c in _combos(per_axis):
+            if _is_identity(per_axis, c):
+                selfw += _combo_weight(c)
+            else:
+                k = _combo_key(per_axis, c)
+                wire_map[k] = (per_axis, c, _combo_weight(c))
+                if k not in union_keys:
+                    union_keys.append(k)
+        entry_wire.append(wire_map)
+        entry_selfw.append(selfw)
+    union_keys = sorted(union_keys)
+
+    # (T, 1 + U) self-separated weights; zero where an entry lacks a shift
+    weights_q_stack = jnp.asarray(
+        [[sw] + [wm[k][2] if k in wm else 0.0 for k in union_keys]
+         for sw, wm in zip(entry_selfw, entry_wire)], jnp.float32)
+
+    # legacy single-entry views (static path keeps today's exact layout)
+    per_axis0 = entries[0]
+    combos0 = _combos(per_axis0)
+    weights = jnp.asarray([_combo_weight(c) for c in combos0], jnp.float32)
+    wire_combos0 = [c for c in combos0 if not _is_identity(per_axis0, c)]
+    weights_q = weights_q_stack[0]
 
     def _agent_index():
         """Linearized agent index — matches the stacked topology order."""
         idx = jnp.int32(0)
-        for axis_name, n, _ in per_axis:
-            idx = idx * n + lax.axis_index(axis_name).astype(jnp.int32)
+        for axis_name, nn, _ in per_axis0:
+            idx = idx * nn + lax.axis_index(axis_name).astype(jnp.int32)
         return idx
 
-    def _shift_all(x, combo):
-        for (axis_name, n, _), (s, _w) in zip(per_axis, combo):
-            if s % n:
+    def _shift_all(x, per_axis, combo):
+        for (axis_name, nn, _), (s, _w) in zip(per_axis, combo):
+            if s % nn:
                 # agent j receives from agent (j + s) mod n
-                perm = [((j + s) % n, j) for j in range(n)]
+                perm = [((j + s) % nn, j) for j in range(nn)]
                 x = lax.ppermute(x, axis_name, perm=perm)
         return x
 
-    quantized = exchange in ("int8", "fp8") and wire_combos
-    n_total = 1
-    for _, n, _ in per_axis:
-        n_total *= n
+    quantized = exchange in ("int8", "fp8") and union_keys
+    n_total = int(np.prod([t.n_agents for _, t in factors])) if factors else 1
 
-    def quantize_stage(bufs, seed):
+    def quantize(bufs, seed):
         """Local squeezed buckets -> wire state (lead axes restored).
 
         Runs inside ``shard_map``: the returned pairs carry the size-1
@@ -310,7 +716,35 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
                         sc.reshape((1,) * lead + sc.shape)))
         return tuple(out)
 
-    def exchange_stage(wire):
+    def _entry_branch(entry_idx: int):
+        """Exchange branch for one schedule entry: its own ppermutes only,
+        padded to the union stencil with zero slots."""
+        wm = entry_wire[entry_idx]
+
+        def branch(wire):
+            nbrs, scs = [], []
+            for p, sc in wire:
+                p = p.reshape(p.shape[lead:])
+                sc = sc.reshape(sc.shape[lead:])
+                stack, sstack = [], []
+                for k in union_keys:
+                    if k in wm:
+                        per_axis, combo, _w = wm[k]
+                        stack.append(_shift_all(p, per_axis, combo))
+                        sstack.append(_shift_all(sc, per_axis, combo)
+                                      if quantized else sc)
+                    else:
+                        stack.append(jnp.zeros_like(p))
+                        sstack.append(jnp.zeros_like(sc) if quantized else sc)
+                nbrs.append(jnp.stack(stack))
+                scs.append(jnp.stack(sstack))
+            return tuple(nbrs), tuple(scs)
+
+        return branch
+
+    branches = [_entry_branch(i) for i in range(len(entries))]
+
+    def exchange_t(wire, t):
         """Wire state -> (neighbor stacks, weights_q, scale stacks).
 
         One ``lax.ppermute`` per non-identity shift combination for the
@@ -319,36 +753,75 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
         kernels' dequant operand is synthesized locally, no collective);
         the self term never moves.  The wire may be one optimizer step
         stale (``schedule="overlap"``) — nothing here reads the current
-        params or gradients.
+        params or gradients.  ``t`` (traced) switches between the schedule
+        entries' shift sets; ``None`` / period 1 runs entry 0 directly.
         """
-        if not wire_combos:
+        if not union_keys:
             raise ValueError("exchange_stage needs at least one wire-crossing "
                              "shift (topology has no neighbors)")
-        nbrs, scs = [], []
-        for p, sc in wire:
-            p = p.reshape(p.shape[lead:])
-            sc = sc.reshape(sc.shape[lead:])
-            nbrs.append(jnp.stack([_shift_all(p, c) for c in wire_combos]))
-            if exchange in ("int8", "fp8"):
-                scs.append(jnp.stack([_shift_all(sc, c) for c in wire_combos]))
-            else:
-                scs.append(jnp.broadcast_to(sc, (len(wire_combos),) + sc.shape))
-        return nbrs, weights_q, scs
+        if t is None or len(entries) == 1:
+            nbrs, scs = branches[0](wire)
+            return list(nbrs), weights_q, list(scs)
+        t = jnp.asarray(t, jnp.int32)
+        nbrs, scs = lax.switch(t, branches, wire)
+        return list(nbrs), jnp.take(weights_q_stack, t, axis=0), list(scs)
 
-    def gather(bufs, seed):
-        if not quantized:
+    def wire_to_bufs(wire):
+        return [p.reshape(p.shape[lead:]).astype(jnp.float32)
+                * sc.reshape(sc.shape[lead:]) for p, sc in wire]
+
+    def bufs_to_state(bufs):
+        return [b.reshape((1,) * lead + b.shape) for b in bufs]
+
+    def state_to_bufs(state):
+        return [b.reshape(b.shape[lead:]) for b in state]
+
+    def combine(nbrs, w, scs, selfs):
+        """Full-precision one-round mix of the local shard (inner rounds)."""
+        out = []
+        for p, sc, sf in zip(nbrs, scs, selfs):
+            deq = p.astype(jnp.float32) * sc              # (U, rows, 128)
+            mixed = jnp.tensordot(w[1:], deq, axes=1)
+            mixed = mixed + w[0] * sf.astype(jnp.float32)
+            out.append(mixed.astype(sf.dtype))
+        return out
+
+    def legacy_gather(bufs, seed):
+        if not (quantized and wire_combos0):
             stacked = []
             for b in bufs:
                 payload, _ = _wire_payload(b, None, exchange if exchange == "bf16"
                                            else "f32", interpret)
-                stacked.append(jnp.stack([_shift_all(payload, c) for c in combos]))
+                stacked.append(jnp.stack(
+                    [_shift_all(payload, per_axis0, c) for c in combos0]))
             return stacked, weights, [None] * len(bufs), [None] * len(bufs)
-        nbrs, w, scs = exchange_stage(quantize_stage(bufs, seed))
+        nbrs, w, scs = exchange_t(quantize(bufs, seed), None)
         return nbrs, w, scs, list(bufs)
 
-    return FlatComm(lead=lead, batched=False, gather=gather,
+    if program is None:
+        program = make_mixing_program(
+            factors[0][1] if len(factors) == 1 else
+            Topology(name="factored", pi=_factored_pi(factors)),
+            exchange=exchange)
+
+    strategy = _make_strategy(program, quantize=quantize, exchange_t=exchange_t,
+                              combine=combine, wire_to_bufs=wire_to_bufs,
+                              legacy_gather=legacy_gather,
+                              bufs_to_state=bufs_to_state,
+                              state_to_bufs=state_to_bufs)
+
+    return FlatComm(lead=lead, batched=False, gather=strategy.gather,
                     interpret=interpret, exchange=exchange, n_agents=n_total,
-                    quantize_stage=quantize_stage, exchange_stage=exchange_stage)
+                    quantize_stage=strategy.quantize_stage,
+                    exchange_stage=strategy.exchange_stage,
+                    strategy=strategy, program=program)
+
+
+def _factored_pi(factors) -> np.ndarray:
+    pi = np.array([[1.0]])
+    for _, t in factors:
+        pi = np.kron(pi, t.pi)
+    return pi
 
 
 def initial_wire_state(fl: FlatComm, params: PyTree) -> tuple:
@@ -380,6 +853,22 @@ def initial_wire_state(fl: FlatComm, params: PyTree) -> tuple:
         return fl.quantize_stage(bufs, seed)
     return _quantize_wire_stacked(bufs, seed, fl.n_agents, fl.exchange,
                                   fl.interpret)
+
+
+def initial_residual_state(fl: FlatComm, params: PyTree) -> tuple:
+    """Zero error-feedback residuals for the global agent-stacked view.
+
+    One f32 buffer per flat bucket, shaped like the packed params (leading
+    agent axis kept).  The sharded trainer initializes per shard instead
+    (:func:`repro.core.engine.make_local_residual_init`) because the local
+    flat layout differs whenever params shard over non-agent axes — for
+    zeros only the shapes differ, but the shapes are exactly what the
+    optimizer-state PartitionSpecs must match.  Both paths build the
+    buffers through the same ``MixingStrategy.residual_init``.
+    """
+    spec = flatbuf.make_flat_spec(params, lead=fl.lead)
+    bufs = flatbuf.pack(params, spec)
+    return fl.strategy.residual_init(bufs)
 
 
 # --------------------------------------------------------------------------
@@ -524,35 +1013,47 @@ class FactoredMix:
 # --------------------------------------------------------------------------
 
 
-def exchange_bytes_per_step(spec: "flatbuf.FlatSpec", topology: Topology,
-                            exchange: str = "f32") -> dict:
+def exchange_bytes_per_step(spec: "flatbuf.FlatSpec", topology,
+                            exchange: str = "f32", rounds: int = 1) -> dict:
     """Per-step bytes-on-wire estimate for the fused consensus exchange.
 
     The paper's fixed-topology cost model (eq. 5/6): each agent sends/
     receives ``degree`` whole-model transfers per step.  ``per_neighbor``
     comes from :meth:`repro.core.flatbuf.FlatSpec.exchange_bytes` for the
     chosen wire precision (int8/fp8 add one f32 scale per 128-lane row).
+    ``topology`` may be a :class:`repro.core.topology.TopologySchedule`
+    (degree = period average) and ``rounds`` inner consensus rounds
+    multiply every transfer (k-round i-CDSGD moves exactly ``k x`` the
+    single-round bytes; error feedback moves zero extra — the residual is
+    local state).
     """
     per_neighbor = spec.exchange_bytes(exchange)
-    degree = topology.degree()
+    if isinstance(topology, TopologySchedule):
+        degree = topology.mean_degree()
+    else:
+        degree = topology.degree()
+    per_step = int(per_neighbor * degree * rounds)
     return {
         "exchange": exchange,
         "degree": degree,
+        "rounds": rounds,
         "per_neighbor_bytes": per_neighbor,
-        "per_step_bytes": per_neighbor * degree,
-        "native_per_step_bytes": spec.exchange_bytes("f32") * degree,
+        "per_step_bytes": per_step,
+        "native_per_step_bytes": int(spec.exchange_bytes("f32") * degree * rounds),
     }
 
 
-def describe_exchange_cost(params: PyTree, topology: Topology,
-                           exchange: str = "f32", *, lead: int = 1) -> str:
+def describe_exchange_cost(params: PyTree, topology,
+                           exchange: str = "f32", *, lead: int = 1,
+                           rounds: int = 1) -> str:
     """One-line human-readable :func:`exchange_bytes_per_step` report
     (shared by the train/dryrun CLIs and the examples)."""
     wire = exchange_bytes_per_step(
-        flatbuf.make_flat_spec(params, lead=lead), topology, exchange)
+        flatbuf.make_flat_spec(params, lead=lead), topology, exchange, rounds)
+    per_round = "" if rounds == 1 else f" x {rounds} rounds"
     return (f"exchange={exchange}: {wire['per_step_bytes']:,} bytes/agent/step "
-            f"on the wire ({wire['degree']} neighbors x "
-            f"{wire['per_neighbor_bytes']:,} B; native "
+            f"on the wire ({wire['degree']:g} neighbors x "
+            f"{wire['per_neighbor_bytes']:,} B{per_round}; native "
             f"{wire['native_per_step_bytes']:,} B)")
 
 

@@ -43,6 +43,17 @@ The payoff is structural: the ``ppermute``\\ s consume only carried
 optimizer state, so the collective is off the grad->update critical path —
 :func:`exchange_dependency_report` proves it from the jaxpr and the dryrun
 records it.
+
+Mixing strategies
+-----------------
+What one "exchange" means per step is owned by the comm's
+:class:`repro.core.consensus.MixingStrategy` (configured by a
+``MixingProgram``): fixed ``Pi``, step-indexed time-varying ``Pi_t``, or
+``k`` inner consensus rounds.  The engine only decides *which wire feeds
+round 1* — fresh (sync) or carried (overlap; rounds ``2..k`` always stay
+on the critical path) — and threads the error-feedback residual state
+(``OptState.residual``) through the round-1 quantizer when the program
+asks for it.
 """
 
 from __future__ import annotations
@@ -112,23 +123,48 @@ def make_grad_phase(agent_loss: Callable, microbatches: int = 1) -> Callable:
 # --------------------------------------------------------------------------
 
 
-def check_overlap_support(optimizer: DistributedOptimizer,
-                          comm: CommOps) -> consensus.FlatComm:
-    """Overlap needs the staged flat-buffer path; fail with the reason."""
+def _check_fused_flat(optimizer: DistributedOptimizer, comm: CommOps,
+                      what: str) -> consensus.FlatComm:
+    """``what`` needs the staged flat-buffer path; fail with the reason."""
     fl = comm.flat
-    if fl is None or fl.exchange_stage is None:
+    if fl is None or fl.exchange_stage is None or fl.strategy is None:
         raise ValueError(
-            "schedule='overlap' needs a flat-buffer comm with split "
+            f"{what} needs a flat-buffer comm with split "
             "quantize/exchange stages (stacked_comm_ops / "
             "make_local_fused_comm with mixing='ppermute_fused')")
     has_fused = type(optimizer).apply_fused is not DistributedOptimizer.apply_fused
     if not (getattr(optimizer, "fused", False) and has_fused):
         raise ValueError(
-            f"schedule='overlap' needs a fused=True consensus optimizer; "
+            f"{what} needs a fused=True consensus optimizer; "
             f"{type(optimizer).__name__}(fused="
             f"{getattr(optimizer, 'fused', False)}) has no fused update to "
-            "feed the stale exchange into")
+            "feed the staged exchange into")
     return fl
+
+
+def check_overlap_support(optimizer: DistributedOptimizer,
+                          comm: CommOps) -> consensus.FlatComm:
+    """Overlap needs the staged flat-buffer path; fail with the reason."""
+    return _check_fused_flat(optimizer, comm, "schedule='overlap'")
+
+
+def check_program_support(optimizer: DistributedOptimizer,
+                          comm: CommOps) -> Optional[consensus.FlatComm]:
+    """A non-trivial MixingProgram needs the staged flat-buffer path.
+
+    Time-varying / multi-round / error-feedback mixing all live on the
+    flat-buffer strategy layer; a non-fused optimizer's reference path
+    would silently mix a fixed dense ``Pi`` instead, so this fails loudly
+    at config time.  Trivial (or absent) programs return ``comm.flat``
+    unchecked — every optimizer supports them.
+    """
+    fl = comm.flat
+    if fl is None or fl.program is None or fl.program.is_trivial:
+        return fl
+    p = fl.program
+    what = (f"mixing strategy {p.strategy!r} (rounds={p.rounds}, "
+            f"error_feedback={p.error_feedback})")
+    return _check_fused_flat(optimizer, comm, what)
 
 
 def make_local_wire_init(fl: consensus.FlatComm) -> Callable:
@@ -148,38 +184,102 @@ def make_local_wire_init(fl: consensus.FlatComm) -> Callable:
     return local_init
 
 
+def make_local_residual_init(fl: consensus.FlatComm) -> Callable:
+    """Per-shard error-feedback residual initializer (inside ``shard_map``).
+
+    Zeros, shaped like the *local* packed buckets — the analog of
+    :func:`make_local_wire_init` for ``OptState.residual``.
+    """
+
+    def local_init(params):
+        spec = fl.spec(params)
+        bufs = fl.pack(params, spec)
+        return fl.strategy.residual_init(bufs)
+
+    return local_init
+
+
 def make_update_phase(optimizer: DistributedOptimizer, comm: CommOps,
                       schedule: str = "sync") -> Callable:
     """The update phase group: ``(params, grads, state) -> (params', state')``.
 
-    ``sync``: the optimizer gathers synchronously on the current params
-    (bit-for-bit today's behavior).  ``overlap``: exchange the carried
-    one-step-stale wire state, update against it with the fresh self
-    buffers, then quantize the *current* params as the next step's wire.
-    In the sharded mode the returned callable is the function the caller
-    wraps in ``shard_map``; in the stacked mode it is called directly —
-    the same phase code serves both.
+    ``sync``: the optimizer gathers synchronously on the current params —
+    bit-for-bit today's behavior for the trivial static program; the
+    gather internally runs whatever :class:`repro.core.consensus.
+    MixingProgram` the comm carries (time-varying ``Pi_t`` selected by the
+    step, ``k`` inner consensus rounds), so non-trivial strategies need no
+    special casing here.  With ``error_feedback`` the sync path is staged
+    explicitly instead, because the EF quantizer must thread
+    ``OptState.residual`` through the round-1 compression.
+
+    ``overlap``: exchange the carried one-step-stale wire state (round 1 —
+    the only round off the critical path), run rounds ``2..k`` on the
+    partially mixed buffers, update against the final round's operands,
+    then quantize the *current* params as the next step's round-1 wire
+    (EF-compressed when the program asks).  In the sharded mode the
+    returned callable is the function the caller wraps in ``shard_map``;
+    in the stacked mode it is called directly — the same phase code serves
+    both.
     """
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}; expected one of "
                          f"{SCHEDULES}")
-    if schedule == "sync":
+    fl = comm.flat
+    program = fl.program if fl is not None else None
+    error_feedback = program is not None and program.error_feedback
+    # a non-trivial program needs the fused staged path under EVERY
+    # schedule — without this, a hand-assembled StepProgram with a
+    # non-fused optimizer would silently mix the fixed dense Pi instead
+    # of the configured strategy (no-op for trivial/absent programs)
+    check_program_support(optimizer, comm)
+
+    if schedule == "sync" and not error_feedback:
         def update_sync(params, grads, state):
             return optimizer.update(params, grads, state, comm)
         return update_sync
 
+    if schedule == "sync":
+        # sync + error feedback: the engine stages the pipeline so the
+        # residual state can ride through the round-1 quantizer (the
+        # check above already validated the fused flat path exists).
+        strategy = fl.strategy
+
+        def update_sync_ef(params, grads, state):
+            spec = fl.spec(params)
+            bufs = fl.pack(params, spec)
+            wire, new_res = strategy.quantize_ef(bufs, state.step,
+                                                 state.residual)
+            nbrs, w, scales, selfs = strategy.continue_from_wire(
+                bufs, wire, state.step)
+            ex = ExchangeResult(spec=spec, neighbors=nbrs, weights=w,
+                                scales=scales, selfs=selfs)
+            new_params, new_state = optimizer.update(params, grads, state,
+                                                     comm, exchanged=ex)
+            return new_params, new_state._replace(residual=new_res)
+
+        return update_sync_ef
+
     fl = check_overlap_support(optimizer, comm)
+    strategy = fl.strategy
 
     def update_overlap(params, grads, state):
         spec = fl.spec(params)
         bufs = fl.pack(params, spec)                      # pack (fresh self)
-        nbrs, w, scales = fl.exchange_stage(state.wire)   # exchange (stale)
+        # round 1 exchanges the stale carried wire; rounds 2..k (if any)
+        # re-quantize the partially mixed buffers on the critical path
+        nbrs, w, scales, selfs = strategy.continue_from_wire(
+            bufs, state.wire, state.step)
         ex = ExchangeResult(spec=spec, neighbors=nbrs, weights=w,
-                            scales=scales, selfs=bufs)
+                            scales=scales, selfs=selfs)
         new_params, new_state = optimizer.update(params, grads, state, comm,
                                                  exchanged=ex)
         # quantize x_t as the wire step t+1 exchanges (one step stale there)
-        new_wire = fl.quantize_stage(bufs, state.step)
+        if error_feedback:
+            new_wire, new_res = strategy.quantize_ef(bufs, state.step,
+                                                     state.residual)
+            return new_params, new_state._replace(wire=new_wire,
+                                                  residual=new_res)
+        new_wire = strategy.quantize_stage(bufs, state.step)
         return new_params, new_state._replace(wire=new_wire)
 
     return update_overlap
@@ -212,6 +312,8 @@ class StepProgram:
     # one whenever params also shard over non-agent mesh axes); None uses
     # the global agent-stacked path (the stacked trainer).
     init_wire: Optional[Callable[[PyTree], Any]] = None
+    # same override for the error-feedback residual buffers
+    init_residual: Optional[Callable[[PyTree], Any]] = None
 
     def init_state(self, params: PyTree) -> OptState:
         state = self.optimizer.init(params)
@@ -222,6 +324,15 @@ class StepProgram:
             else:
                 state = state._replace(
                     wire=consensus.initial_wire_state(fl, params))
+        fl = self.comm.flat
+        if fl is not None and fl.program is not None \
+                and fl.program.error_feedback:
+            check_program_support(self.optimizer, self.comm)
+            if self.init_residual is not None:
+                state = state._replace(residual=self.init_residual(params))
+            else:
+                state = state._replace(
+                    residual=consensus.initial_residual_state(fl, params))
         return state
 
     def step_fn(self, params: PyTree, opt_state: OptState, batch):
@@ -287,7 +398,10 @@ def _taint_walk(jaxpr, in_taints, hits, prims):
         ins = [read(v) for v in eqn.invars]
         merged = frozenset().union(*ins) if ins else frozenset()
         if any(p in eqn.primitive.name for p in prims):
-            hits.append((eqn.primitive.name, merged))
+            # keyed by eqn identity: loop-carried sub-jaxprs are re-walked
+            # to a fixpoint, so the same collective may be visited several
+            # times — the report merges the taints and counts it once
+            hits.append((id(eqn), eqn.primitive.name, merged))
         out_ts = None
         subs = list(_sub_jaxprs(eqn.params))
         if subs:
@@ -339,17 +453,25 @@ def exchange_dependency_report(step_fn, params, opt_state, batch) -> dict:
 
     Labels every flat input of ``step_fn(params, opt_state, batch)`` as
     ``params`` / ``state`` / ``wire`` (the overlap double-buffer inside the
-    optimizer state) / ``batch`` and taints them through the traced step.
-    The returned record is the dryrun's critical-path proof:
+    optimizer state) / ``residual`` (error-feedback buffers) / ``batch``
+    and taints them through the traced step.  The returned record is the
+    dryrun's critical-path proof:
 
     * ``sync``    — the ``ppermute`` payload is quantized from the current
       params, so ``depends_on_params`` is True: the exchange can only start
       once the previous step's update has produced those params.
-    * ``overlap`` — the payload is the carried wire state:
-      ``depends_on_params`` and ``depends_on_batch`` are both False, i.e.
-      the collective needs neither the current params (previous update) nor
-      the current batch (backward) and is off the grad->update critical
-      path (``off_grad_update_critical_path``).
+    * ``overlap`` — the round-1 payload is the carried wire state: those
+      ``ppermute``\\ s taint only carried optimizer state
+      (``n_ppermutes_carried_only``), i.e. they need neither the current
+      params (previous update) nor the current batch (backward) —
+      ``round1_off_critical_path``.  With a multi-round program the inner
+      rounds ``2..k`` re-quantize partially mixed *current* buffers, so
+      those collectives stay on the critical path
+      (``n_ppermutes_fresh``) and the all-hits summary
+      ``off_grad_update_critical_path`` is True only for ``k = 1``.
+
+    Collectives are counted per jaxpr equation: a ``ppermute`` inside the
+    multi-round ``lax.scan`` counts once regardless of trip count.
 
     Works on concrete arrays or ShapeDtypeStructs.  Programs whose mixing
     has no ``ppermute`` (stacked dense ``Pi``) report ``n_ppermutes == 0``.
@@ -358,7 +480,9 @@ def exchange_dependency_report(step_fn, params, opt_state, batch) -> dict:
         jax.tree.map(lambda _: "params", params),
         OptState(step="state",
                  inner=jax.tree.map(lambda _: "state", opt_state.inner),
-                 wire=jax.tree.map(lambda _: "wire", opt_state.wire)),
+                 wire=jax.tree.map(lambda _: "wire", opt_state.wire),
+                 residual=jax.tree.map(lambda _: "residual",
+                                       opt_state.residual)),
         jax.tree.map(lambda _: "batch", batch),
     )
     labels = [frozenset([l]) for l in jax.tree.leaves(label_tree)]
@@ -367,12 +491,20 @@ def exchange_dependency_report(step_fn, params, opt_state, batch) -> dict:
         (len(closed.jaxpr.invars), len(labels))
     hits: list = []
     _taint_walk(closed.jaxpr, labels, hits, prims=("ppermute",))
-    union = frozenset().union(*(t for _, t in hits)) if hits else frozenset()
+    by_eqn: dict = {}
+    for key, _name, taint in hits:
+        by_eqn[key] = by_eqn.get(key, frozenset()) | taint
+    taints = list(by_eqn.values())
+    union = frozenset().union(*taints) if taints else frozenset()
+    carried = [t for t in taints if not (t & frozenset(("params", "batch")))]
     return {
-        "n_ppermutes": len(hits),
+        "n_ppermutes": len(taints),
+        "n_ppermutes_carried_only": len(carried),
+        "n_ppermutes_fresh": len(taints) - len(carried),
         "depends_on_params": "params" in union,
         "depends_on_batch": "batch" in union,
         "depends_on_wire_state": "wire" in union,
-        "off_grad_update_critical_path": bool(hits)
+        "off_grad_update_critical_path": bool(taints)
             and "params" not in union and "batch" not in union,
+        "round1_off_critical_path": len(carried) > 0,
     }

@@ -119,3 +119,55 @@ def theorem1_envelope(v1_minus_vstar: float, const: TheoryConstants, steps: int)
         acc = rho * acc + noise
         out[k] = acc
     return out
+
+
+# --------------------------------------------------------------------------
+# Time-varying / multi-round extensions (Jiang et al. 1805.12120)
+# --------------------------------------------------------------------------
+
+
+def schedule_consensus_bound(alpha: float, grad_norm_bound: float,
+                             schedule, rounds: int = 1) -> float:
+    """Proposition 1 generalized to a mixing schedule with k inner rounds.
+
+    For time-varying B-connected ``Pi_t`` (and/or ``k`` consensus rounds
+    per gradient step) the per-step disagreement contraction is the
+    schedule's *effective* ``lambda_2`` — the period-geometric-mean
+    disagreement norm of ``prod_t Pi_t^k``
+    (:meth:`repro.core.topology.TopologySchedule.effective_lambda2`) —
+    so the steady-state consensus radius is
+
+        a L / (1 - lambda_eff(schedule, k))
+
+    which reduces to ``a L / (1 - lambda_2(Pi))`` for the static
+    single-round case and is monotonically non-increasing in ``k``
+    (more rounds -> smaller lambda_eff -> tighter consensus), the
+    consensus side of the consensus-optimality trade-off: each extra round
+    costs one more full exchange of wire bytes per step.
+    """
+    lam = schedule.effective_lambda2(rounds)
+    gap = 1.0 - lam
+    if gap <= 0:
+        return float("inf")
+    return alpha * grad_norm_bound / gap
+
+
+def schedule_theory_constants(alpha: float, gamma_m: float, h_m: float,
+                              schedule, rounds: int = 1,
+                              **kw) -> TheoryConstants:
+    """Theorem-1 constants with the schedule's effective spectrum.
+
+    Substitutes ``lambda_2 -> lambda_eff`` and, for the smoothness side,
+    ``lambda_N -> lambda_N(prod)^(1/period)`` lower-bounded at
+    ``min_t lambda_N(Pi_t)^rounds`` (the product of symmetric PSD factors
+    need not be symmetric; the conservative bound keeps ``gamma_hat`` an
+    upper bound).
+    """
+    lam2 = schedule.effective_lambda2(rounds)
+    # eigenvalues of Pi^k are the k-th powers of Pi's, so the floor is the
+    # min over POWERED eigenvalues — min(lambda)^k alone is wrong for
+    # indefinite Pi at even k ((-0.8)^2 > 0.25^1 etc.)
+    lamn = min(float(np.min(np.linalg.eigvalsh(t.pi) ** rounds))
+               for t in schedule.topologies)
+    return TheoryConstants(gamma_m=gamma_m, h_m=h_m, alpha=alpha,
+                           lambda2=lam2, lambdan=lamn, **kw)

@@ -62,11 +62,15 @@ def identity_comm_ops() -> CommOps:
 
 
 def stacked_comm_ops(topology, *, interpret: bool = True,
-                     exchange: str = "f32") -> CommOps:
+                     exchange: str = "f32",
+                     program: Optional[consensus.MixingProgram] = None) -> CommOps:
     """CommOps for agent-stacked pytrees (leading axis = agent).
 
     ``exchange`` sets the fused path's simulated wire precision
-    (f32 | bf16 | int8 | fp8 — see :class:`repro.core.consensus.FlatComm`).
+    (f32 | bf16 | int8 | fp8 — see :class:`repro.core.consensus.FlatComm`);
+    ``program`` selects the mixing strategy of the fused path (time-varying
+    ``Pi_t``, multi-round i-CDSGD, error feedback — see
+    :class:`repro.core.consensus.MixingProgram`).
     """
     pi = jnp.asarray(topology.pi, dtype=jnp.float32)
 
@@ -79,7 +83,8 @@ def stacked_comm_ops(topology, *, interpret: bool = True,
     return CommOps(mix=mix, mean=mean, n_agents=topology.n_agents,
                    lambda2=topology.lambda2, lambdan=topology.lambdan,
                    flat=consensus.stacked_flat_comm(topology, interpret=interpret,
-                                                    exchange=exchange))
+                                                    exchange=exchange,
+                                                    program=program))
 
 
 def sharded_comm_ops(topology, axis_name: str) -> CommOps:
@@ -110,6 +115,11 @@ class OptState(NamedTuple):
     # at the *previous* step (see repro.core.engine).  () under
     # schedule="sync" — the StepProgram engine owns filling/refreshing it.
     wire: Any = ()
+    # error-feedback residuals (MixingProgram(error_feedback=True)): one
+    # f32 buffer per flat bucket carrying the compression error of the
+    # last quantized wire payload; local state, never crosses the wire.
+    # () when error feedback is off — the engine owns filling/refreshing.
+    residual: Any = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,8 +173,8 @@ class DistributedOptimizer:
         ``exchanged`` carries pre-computed mixing operands from the
         StepProgram engine's pack/quantize/exchange phases (the overlap
         schedule's one-step-stale wire); when None the fused path gathers
-        synchronously via ``comm.flat``.  The wire field of the state is
-        passed through untouched — the engine refreshes it.
+        synchronously via ``comm.flat``.  The wire and residual fields of
+        the state are passed through untouched — the engine refreshes them.
         """
         alpha = self.schedule(state.step)
         # fused is a perf hint: optimizers without a fused implementation
@@ -181,7 +191,7 @@ class DistributedOptimizer:
         else:
             new_params, new_inner = self.apply(params, grads, state.inner, alpha, comm, state.step)
         return new_params, OptState(step=state.step + 1, inner=new_inner,
-                                    wire=state.wire)
+                                    wire=state.wire, residual=state.residual)
 
     def state_specs(self, param_specs: PyTree) -> "OptState":
         """PartitionSpec tree mirroring init() (for pjit in_shardings)."""

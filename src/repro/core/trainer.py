@@ -23,9 +23,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, flatbuf
-from repro.core.consensus import consensus_error_pytree, exchange_bytes_per_step
+from repro.core.consensus import (
+    MixingProgram,
+    consensus_error_pytree,
+    exchange_bytes_per_step,
+    make_mixing_program,
+)
 from repro.core.optim import CommOps, DistributedOptimizer, stacked_comm_ops
-from repro.core.topology import Topology
+from repro.core.topology import Topology, TopologySchedule, make_topology_schedule
 from repro.utils.metrics import MetricHistory
 
 PyTree = Any
@@ -73,6 +78,17 @@ class CollaborativeTrainer:
     ``schedule="overlap"`` double-buffers the quantized wire payloads in
     the optimizer state (one-step-stale neighbor mixing, fresh self term);
     ``microbatches`` enables the shared gradient-accumulation scan.
+
+    The **mixing strategy** of the fused path is configurable
+    (:class:`repro.core.consensus.MixingProgram`): ``mixing_strategy``
+    selects ``static`` / ``time_varying`` / ``multi_round``,
+    ``consensus_rounds`` sets the inner i-CDSGD round count,
+    ``topology_schedule`` supplies the time-varying ``Pi_t`` sequence (a
+    :class:`repro.core.topology.TopologySchedule` or a factory spec like
+    ``"alternating:ring:torus"`` / ``"gossip:8"``), and
+    ``error_feedback=True`` carries quantization residuals in the
+    optimizer state.  Everything validates at construction; non-trivial
+    programs require a ``fused=True`` consensus optimizer.
     """
 
     def __init__(
@@ -88,6 +104,10 @@ class CollaborativeTrainer:
         exchange: str = "f32",
         schedule: str = "sync",
         microbatches: int = 1,
+        mixing_strategy: str = "static",
+        consensus_rounds: int = 1,
+        topology_schedule=None,           # TopologySchedule | factory spec str
+        error_feedback: bool = False,
     ):
         self.loss_fn = loss_fn
         self.topology = topology
@@ -100,8 +120,24 @@ class CollaborativeTrainer:
                 f"exchange={exchange!r} only affects fused optimizers; "
                 f"{type(optimizer).__name__}(fused=False) will mix in native "
                 "precision", stacklevel=2)
+        if isinstance(topology_schedule, str):
+            topology_schedule = make_topology_schedule(
+                topology_schedule, topology.n_agents)
+        if topology_schedule is not None and \
+                topology_schedule.n_agents != topology.n_agents:
+            raise ValueError(
+                f"topology_schedule spans {topology_schedule.n_agents} agents "
+                f"but the topology has {topology.n_agents}")
+        self.program: MixingProgram = make_mixing_program(
+            topology_schedule if topology_schedule is not None else topology,
+            strategy=mixing_strategy, rounds=consensus_rounds,
+            error_feedback=error_feedback, exchange=exchange)
         self.comm: CommOps = stacked_comm_ops(topology, interpret=interpret,
-                                              exchange=exchange)
+                                              exchange=exchange,
+                                              program=self.program)
+        # non-trivial strategies live on the fused flat-buffer path only —
+        # fail here, at config time, not deep inside the first traced step
+        engine.check_program_support(optimizer, self.comm)
         stacked = broadcast_to_agents(params, topology.n_agents) if stack else params
         self._program = engine.StepProgram(
             optimizer=optimizer,
@@ -118,12 +154,16 @@ class CollaborativeTrainer:
                                 donate_argnums=(0, 1) if donate else ())
         self._eval_fn = jax.jit(self._make_eval())
         # per-step neighbor-exchange cost of the fused flat path (estimate;
-        # train_loop reports the cumulative figure alongside steps/sec)
+        # train_loop reports the cumulative figure alongside steps/sec).
+        # k consensus rounds move exactly k x the single-round bytes; a
+        # time-varying schedule amortizes its period-mean degree.
         self.wire_bytes_per_step = 0
         if optimizer.uses_consensus:
             self.wire_bytes_per_step = exchange_bytes_per_step(
-                flatbuf.make_flat_spec(stacked, lead=1), topology,
-                exchange)["per_step_bytes"]
+                flatbuf.make_flat_spec(stacked, lead=1),
+                self.program.schedule if not self.program.schedule.is_static
+                else topology,
+                exchange, rounds=self.program.rounds)["per_step_bytes"]
 
     def _make_eval(self):
         loss_fn = self.loss_fn

@@ -33,7 +33,9 @@ import traceback
 def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
            mixing: str, optimizer_name: str, topology: str, microbatches: int = 1,
            context_parallel: bool = False, fused: bool = False,
-           exchange: str = "f32", schedule: str = "sync"):
+           exchange: str = "f32", schedule: str = "sync",
+           mixing_strategy: str = "static", consensus_rounds: int = 1,
+           topology_schedule=None, error_feedback: bool = False):
     import jax
     from repro.configs import get_config, INPUT_SHAPES
     from repro.core.optim import make_optimizer
@@ -54,7 +56,9 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
         opt = make_optimizer(optimizer_name, 0.01, **kw)
         bundle = steps_lib.build_train_step(
             cfg, shape, mesh, opt, mode=mode, topology_name=topology, mixing=mixing,
-            microbatches=microbatches, exchange=exchange, schedule=schedule)
+            microbatches=microbatches, exchange=exchange, schedule=schedule,
+            mixing_strategy=mixing_strategy, consensus_rounds=consensus_rounds,
+            topology_schedule=topology_schedule, error_feedback=error_feedback)
         params = bundle.param_structs(mesh)
         opt_state = bundle.opt_state_structs(mesh, opt)
         args = (params, opt_state, bundle.batch_specs)
@@ -79,7 +83,9 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
              out_dir: str = "results/dryrun", tag: str = "",
              analyze: bool = True, verbose: bool = True, microbatches: int = 1,
              context_parallel: bool = False, fused: bool = False,
-             exchange: str = "f32", schedule: str = "sync"):
+             exchange: str = "f32", schedule: str = "sync",
+             mixing_strategy: str = "static", consensus_rounds: int = 1,
+             topology_schedule=None, error_feedback: bool = False):
     import jax
     from repro.analysis.hlo import analyze_hlo
     from repro.analysis.roofline import model_flops, roofline_from_stats
@@ -90,7 +96,11 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     built, skip = _build(arch, shape_name, multi_pod=multi_pod, mode=mode,
                          mixing=mixing, optimizer_name=optimizer_name, topology=topology,
                          microbatches=microbatches, context_parallel=context_parallel,
-                         fused=fused, exchange=exchange, schedule=schedule)
+                         fused=fused, exchange=exchange, schedule=schedule,
+                         mixing_strategy=mixing_strategy,
+                         consensus_rounds=consensus_rounds,
+                         topology_schedule=topology_schedule,
+                         error_feedback=error_feedback)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
               "mixing": mixing, "topology": topology, "optimizer": optimizer_name,
               "microbatches": microbatches, "exchange": exchange,
@@ -114,11 +124,21 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         if live != exchange and verbose:
             print(f"[dryrun] {label}: --exchange {exchange} has no effect on "
                   f"mixing={mixing!r} fused={fused} — reporting native bytes")
+        program = bundle.mixing_program
+        rounds = program.rounds if program is not None else 1
+        wire_topo = bundle.topology
+        if program is not None and not program.schedule.is_static:
+            wire_topo = program.schedule
+            record["topology_schedule"] = program.schedule.diagnostics(rounds)
+        if program is not None:
+            # k rounds => k x exchange_bytes; error feedback adds 0 wire
+            # bytes (the residual is local optimizer state)
+            record["mixing_program"] = program.describe()
         record["exchange_bytes_per_step"] = consensus_lib.exchange_bytes_per_step(
-            flatbuf.make_flat_spec(args[0], lead=1), bundle.topology, live)
+            flatbuf.make_flat_spec(args[0], lead=1), wire_topo, live, rounds)
         if verbose:
             print(f"[dryrun] {label} " + consensus_lib.describe_exchange_cost(
-                args[0], bundle.topology, live))
+                args[0], wire_topo, live, rounds=rounds))
         # which step inputs reach the collective exchange (the overlap
         # schedule's proof: ppermutes consume only carried wire state, so
         # they are off the grad->update critical path)
@@ -215,6 +235,20 @@ def main() -> int:
                          "exchange_schedule field proves the dependency "
                          "structure")
     ap.add_argument("--topology", default="ring")
+    ap.add_argument("--mixing-strategy", default="static",
+                    choices=["static", "time_varying", "multi_round"],
+                    help="mixing strategy of the fused path (pairs with "
+                         "--mixing ppermute_fused --fused)")
+    ap.add_argument("--consensus-rounds", type=int, default=1,
+                    help="inner i-CDSGD rounds per step; the record's "
+                         "exchange_bytes_per_step scales by k")
+    ap.add_argument("--topology-schedule", default=None,
+                    help="time-varying Pi_t spec (e.g. "
+                         "'alternating:ring:torus', 'gossip:8'); diagnostics "
+                         "recorded as topology_schedule")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="EF residuals for quantized exchanges (0 extra "
+                         "wire bytes; residual state rides the opt state)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     ap.add_argument("--no-analyze", action="store_true")
@@ -239,7 +273,11 @@ def main() -> int:
                        topology=args.topology, out_dir=args.out, tag=args.tag,
                        analyze=not args.no_analyze, microbatches=args.microbatch,
                        context_parallel=args.context_parallel, fused=args.fused,
-                       exchange=args.exchange, schedule=args.schedule)
+                       exchange=args.exchange, schedule=args.schedule,
+                       mixing_strategy=args.mixing_strategy,
+                       consensus_rounds=args.consensus_rounds,
+                       topology_schedule=args.topology_schedule,
+                       error_feedback=args.error_feedback)
         if str(rec.get("status", "")).startswith("FAIL"):
             failures += 1
     print(f"[dryrun] done: {len(pairs)} pairs, {failures} failures")

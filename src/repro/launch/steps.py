@@ -32,7 +32,14 @@ The fused path exposes the **exchange-precision knob**
 (``exchange="f32"|"bf16"|"int8"|"fp8"``): int8/fp8 quantize each packed
 bucket (stochastic rounding, one f32 scale per 128-lane row) before the
 circulant ``ppermute`` so every shift moves ~3.9x fewer bytes, and the
-fused kernels dequantize in-register.  The fused kernels also alias their
+fused kernels dequantize in-register.  It also carries the **mixing
+strategy** (:class:`repro.core.consensus.MixingProgram`, see
+ARCHITECTURE.md §mixing strategies): ``mixing_strategy`` /
+``topology_schedule`` select time-varying ``Pi_t`` (one ``lax.switch``
+branch of ppermutes per schedule entry), ``consensus_rounds`` the inner
+i-CDSGD round count (k x the wire bytes), and ``error_feedback`` the
+quantization-residual state riding ``OptState.residual`` (sharded like
+the wire buffers, initialized inside ``shard_map``).  The fused kernels also alias their
 gradient/state inputs to their outputs (``input_output_aliases``); jit the
 returned ``step_fn`` with ``donate_argnums=TrainStepBundle.donate_argnums``
 to let params, momentum, and Adam moments update in place (saving roughly
@@ -57,7 +64,7 @@ from repro.configs.base import ArchConfig, InputShape
 from repro.core import consensus as consensus_lib
 from repro.core import engine, flatbuf
 from repro.core.optim import CommOps, DistributedOptimizer, stacked_comm_ops
-from repro.core.topology import Topology, make_topology
+from repro.core.topology import Topology, make_topology, make_topology_schedule
 from repro.launch import sharding as shlib
 from repro.nn.param import stack_agent_axis
 from repro.nn.transformer import decode_step, forward, loss_fn, model_template
@@ -86,6 +93,9 @@ class TrainStepBundle:
     topology: Topology
     exchange: str = "f32"                 # neighbor-exchange wire precision
     schedule: str = "sync"                # exchange schedule: sync | overlap
+    # the mixing-strategy configuration of the fused path (None only when
+    # the comm carries no flat support, e.g. mixing="dense")
+    mixing_program: Optional[consensus_lib.MixingProgram] = None
     # params + opt_state update in place every step: pass to jax.jit so the
     # fused kernels' input_output_aliases actually elide the output copies.
     donate_argnums: Tuple[int, ...] = (0, 1)
@@ -121,6 +131,7 @@ def _agent_factors(mesh: Mesh, agent_axes) -> consensus_lib.FactoredMix:
 def make_local_fused_comm(
     topology: Topology, mesh: Mesh, mode: str, *, interpret: bool = True,
     exchange: str = "f32",
+    program: Optional[consensus_lib.MixingProgram] = None,
 ) -> CommOps:
     """CommOps whose every member runs *inside* a shard_map region.
 
@@ -128,7 +139,9 @@ def make_local_fused_comm(
     optimizers run the flat-buffer ppermute + Pallas-kernel fast path; the
     ``mix``/``mean`` members are the local (non-shard_map-wrapped) circulant
     fns so non-fused optimizers work in the same region.  ``exchange``
-    selects the ppermute wire precision (f32 | bf16 | int8 | fp8).
+    selects the ppermute wire precision (f32 | bf16 | int8 | fp8);
+    ``program`` the mixing strategy (time-varying schedules compile one
+    ``lax.switch`` branch of ppermutes per entry — single agent axis only).
     """
     rules = shlib.rules_for_mode(mode, mesh)
     agent_axes = rules["agent"]
@@ -136,13 +149,15 @@ def make_local_fused_comm(
     if len(axes) > 1:
         fm = _agent_factors(mesh, axes)
         flat = consensus_lib.sharded_flat_comm(fm.factors, interpret=interpret,
-                                               exchange=exchange)
+                                               exchange=exchange,
+                                               program=program)
         local_mix = fm.make_mix_fn()
         lam2, lamn, n_agents = fm.lambda2, fm.lambdan, fm.n_agents
     else:
         flat = consensus_lib.sharded_flat_comm([(axes[0], topology)],
                                                interpret=interpret,
-                                               exchange=exchange)
+                                               exchange=exchange,
+                                               program=program)
         local_mix = consensus_lib.make_sharded_mix_fn(topology, axes[0])
         lam2, lamn, n_agents = topology.lambda2, topology.lambdan, topology.n_agents
     local_mean = consensus_lib.make_sharded_mean_fn(axes)
@@ -203,10 +218,27 @@ def build_train_step(
     interpret: bool = True,       # Pallas interpret mode (fused path; False on TPU)
     exchange: str = "f32",        # ppermute wire precision (fused path only)
     schedule: str = "sync",       # exchange schedule: sync | overlap
+    mixing_strategy: str = "static",   # static | time_varying | multi_round
+    consensus_rounds: int = 1,    # inner i-CDSGD rounds per step (fused path)
+    topology_schedule: Optional[str] = None,  # TopologySchedule factory spec
+    error_feedback: bool = False,  # EF residuals for quantized exchanges
 ) -> TrainStepBundle:
     rules = shlib.rules_for_mode(mode, mesh)
     n_agents = shlib.agent_count(mesh, mode)
     topology = make_topology(topology_name, n_agents)
+    sched_obj = None
+    if topology_schedule is not None:
+        sched_obj = make_topology_schedule(topology_schedule, n_agents)
+    program = consensus_lib.make_mixing_program(
+        sched_obj if sched_obj is not None else topology,
+        strategy=mixing_strategy, rounds=consensus_rounds,
+        error_feedback=error_feedback, exchange=exchange)
+    if not program.is_trivial and mixing != "ppermute_fused":
+        raise ValueError(
+            f"mixing strategy {program.strategy!r} (rounds={program.rounds}, "
+            f"error_feedback={program.error_feedback}) lives on the "
+            f"flat-buffer path: requires mixing='ppermute_fused', got "
+            f"mixing={mixing!r}")
 
     base_t = model_template(cfg)
     template = stack_agent_axis(base_t, n_agents)
@@ -224,7 +256,10 @@ def build_train_step(
                 "reference path inside the shard_map region — pass "
                 "fused=True for the flat-buffer fast path", stacklevel=2)
         comm = make_local_fused_comm(topology, mesh, mode, interpret=interpret,
-                                     exchange=exchange)
+                                     exchange=exchange, program=program)
+        # non-trivial strategies additionally need the fused optimizer —
+        # validate here, not deep inside the first traced step
+        engine.check_program_support(optimizer, comm)
     else:
         if exchange != "f32":
             warnings.warn(
@@ -232,6 +267,31 @@ def build_train_step(
                 f"mixing={mixing!r} moves native bytes", stacklevel=2)
         comm = make_mix_comm(topology, mesh, pspecs, mode, mixing)
     init_wire = None
+    init_residual = None
+    agent_axes_t = rules["agent"] if isinstance(rules["agent"], tuple) \
+        else (rules["agent"],)
+    other_axes = tuple(a for a in mesh.axis_names if a not in agent_axes_t)
+    state_sp = P(rules["agent"], other_axes or None, None)
+
+    def _n_buckets():
+        return flatbuf.make_flat_spec(
+            jax.tree.map(lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype),
+                         template,
+                         is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init")),
+            lead=1).n_buckets
+
+    if program.error_feedback:
+        # EF residuals ride the optimizer state like the wire buffers do:
+        # one f32 buffer per flat bucket, rows sharded over the non-agent
+        # mesh axes (shard-local flat layout), initialized inside shard_map.
+        residual_specs = tuple(state_sp for _ in range(_n_buckets()))
+        opt_specs = opt_specs._replace(residual=residual_specs)
+        local_residual_init = engine.make_local_residual_init(comm.flat)
+
+        def init_residual(params):
+            return _shard_map(local_residual_init, mesh, (pspecs,),
+                              residual_specs)(params)
+
     if schedule == "overlap":
         if mixing != "ppermute_fused":
             raise ValueError(
@@ -245,16 +305,7 @@ def build_train_step(
         # non-agent mesh axis (a model-parallel device pair carries two
         # different row blocks — the wire is never read as one global
         # buffer, only round-tripped shard-to-shard between steps).
-        agent_axes = rules["agent"] if isinstance(rules["agent"], tuple) \
-            else (rules["agent"],)
-        other_axes = tuple(a for a in mesh.axis_names if a not in agent_axes)
-        n_buckets = flatbuf.make_flat_spec(
-            jax.tree.map(lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype),
-                         template,
-                         is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init")),
-            lead=1).n_buckets
-        wire_sp = P(rules["agent"], other_axes or None, None)
-        wire_specs = tuple((wire_sp, wire_sp) for _ in range(n_buckets))
+        wire_specs = tuple((state_sp, state_sp) for _ in range(_n_buckets()))
         opt_specs = opt_specs._replace(wire=wire_specs)
         local_wire_init = engine.make_local_wire_init(fl)
 
@@ -274,17 +325,18 @@ def build_train_step(
     else:
         update_phase = update_local
 
-    program = engine.StepProgram(
+    step_program = engine.StepProgram(
         optimizer=optimizer,
         comm=comm,
         grad_phase=grad_phase,
         update_phase=update_phase,
         schedule=schedule,
         init_wire=init_wire,
+        init_residual=init_residual,
     )
 
     return TrainStepBundle(
-        step_fn=program.step_fn,
+        step_fn=step_program.step_fn,
         param_template=template,
         param_specs=pspecs,
         opt_state_specs=opt_specs,
@@ -293,7 +345,8 @@ def build_train_step(
         topology=topology,
         exchange=exchange,
         schedule=schedule,
-        init_state=program.init_state,
+        mixing_program=program if mixing == "ppermute_fused" else None,
+        init_state=step_program.init_state,
     )
 
 

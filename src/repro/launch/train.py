@@ -43,6 +43,23 @@ def main() -> None:
                          "quantized wire payloads in the optimizer state "
                          "(one-step-stale neighbor mixing, exchange off the "
                          "grad->update critical path; implies --fused)")
+    ap.add_argument("--mixing-strategy", default="static",
+                    choices=["static", "time_varying", "multi_round"],
+                    help="mixing strategy of the fused consensus path: "
+                         "'time_varying' cycles --topology-schedule's Pi_t, "
+                         "'multi_round' runs --consensus-rounds inner "
+                         "i-CDSGD rounds per step (implies --fused)")
+    ap.add_argument("--consensus-rounds", type=int, default=1,
+                    help="inner consensus rounds per gradient step (k-round "
+                         "i-CDSGD: x' = Pi^k x - a g; k x the wire bytes)")
+    ap.add_argument("--topology-schedule", default=None,
+                    help="time-varying Pi_t schedule spec, e.g. "
+                         "'alternating:ring:torus' or 'gossip:8' "
+                         "(see repro.core.topology.make_topology_schedule)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry quantization residuals in the optimizer "
+                         "state and compress residual+payload (int8/fp8 "
+                         "exchanges only; adds 0 wire bytes)")
     ap.add_argument("--microbatch", type=int, default=1,
                     help="gradient-accumulation microbatches per step")
     ap.add_argument("--lr", type=float, default=0.01)
@@ -52,6 +69,10 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore params AND the full optimizer state "
+                         "(incl. overlap wire buffers / error-feedback "
+                         "residuals) from --checkpoint-dir before training")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -60,7 +81,7 @@ def main() -> None:
     from repro.core.trainer import CollaborativeTrainer, train_loop
     from repro.data import make_lm_tokens, lm_agent_batches
     from repro.nn import model_template, init_params, loss_fn, count_params
-    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint import restore_train_state, save_train_state
 
     cfg = get_config(args.arch)
     if args.preset == "tiny":
@@ -84,6 +105,12 @@ def main() -> None:
         # the overlap wire double-buffer lives on the fused flat-buffer path
         print("[train] --schedule overlap implies --fused; enabling")
         args.fused = True
+    nontrivial_mixing = (args.mixing_strategy != "static"
+                         or args.consensus_rounds > 1 or args.error_feedback)
+    if nontrivial_mixing and not args.fused:
+        # the strategy layer lives on the fused flat-buffer path
+        print("[train] non-static mixing strategy implies --fused; enabling")
+        args.fused = True
     if args.fused:
         kw["fused"] = True
     opt = make_optimizer(args.optimizer, sched, **kw)
@@ -100,21 +127,54 @@ def main() -> None:
     trainer = CollaborativeTrainer(lm_loss, params, topo, opt,
                                    exchange=args.exchange,
                                    schedule=args.schedule,
-                                   microbatches=args.microbatch)
+                                   microbatches=args.microbatch,
+                                   mixing_strategy=args.mixing_strategy,
+                                   consensus_rounds=args.consensus_rounds,
+                                   topology_schedule=args.topology_schedule,
+                                   error_feedback=args.error_feedback)
 
     from repro.core.consensus import describe_exchange_cost
-    print("[train] " + describe_exchange_cost(trainer.state.params, topo,
-                                              args.exchange))
+    program = trainer.program
+    if not program.is_trivial:
+        print(f"[train] mixing program: {program.describe()}")
+        if not program.schedule.is_static:
+            d = program.schedule.diagnostics(program.rounds)
+            print(f"[train] schedule effective gap "
+                  f"{d['effective_gap']:.4f} (per-matrix "
+                  f"{['%.4f' % g for g in d['per_matrix_gap']]})")
+    print("[train] " + describe_exchange_cost(
+        trainer.state.params,
+        program.schedule if not program.schedule.is_static else topo,
+        args.exchange, rounds=program.rounds))
     tokens = make_lm_tokens(1 << 15, vocab=cfg.vocab_size, seed=args.seed)
     batches = lm_agent_batches(tokens, args.agents, args.batch, args.seq, seed=args.seed)
+
+    if args.resume:
+        if not args.checkpoint_dir:
+            ap.error("--resume needs --checkpoint-dir")
+        from repro.core.trainer import TrainState
+        p0, o0 = restore_train_state(args.checkpoint_dir,
+                                     trainer.state.params,
+                                     trainer.state.opt_state)
+        trainer.state = TrainState(params=p0, opt_state=o0,
+                                   step=int(o0.step))
+        # fast-forward the (deterministic, seed-keyed) batch stream past the
+        # steps the checkpointed run already consumed — otherwise the
+        # resumed run re-trains on batches 0..step and the trajectory
+        # silently diverges from an uninterrupted run
+        for _ in range(trainer.state.step):
+            next(batches)
+        print(f"[train] resumed at step {trainer.state.step} (full opt "
+              "state incl. wire/residual buffers; batch stream "
+              "fast-forwarded)")
 
     train_loop(trainer, batches, args.steps, log_every=args.log_every, printer=print)
     final = trainer.history.rows[-1]
     print(f"[train] done: loss={final['loss']:.4f} "
           f"consensus_error={final['consensus_error']:.3e}")
     if args.checkpoint_dir:
-        p = save_checkpoint(args.checkpoint_dir, trainer.state.step,
-                            {"params": trainer.state.params})
+        p = save_train_state(args.checkpoint_dir, trainer.state.step,
+                             trainer.state.params, trainer.state.opt_state)
         print(f"[train] checkpoint: {p}")
 
 

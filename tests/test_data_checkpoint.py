@@ -101,3 +101,73 @@ def test_checkpoint_missing_key_raises(tmp_path):
     save_checkpoint(d, 1, {"w": jnp.zeros((2, 2))})
     with pytest.raises(KeyError):
         restore_checkpoint(d, {"w": jnp.zeros((2, 2)), "extra": jnp.zeros(1)})
+
+
+def test_train_state_roundtrip_resumes_bit_exact(tmp_path):
+    """save -> restore -> step == continuous run, bit-for-bit, INCLUDING the
+    overlap wire double-buffer and the error-feedback residuals (before
+    this, checkpointing params alone silently reset the carried wire to
+    x_{-1} := x_0 and the residuals to zero on restore)."""
+    import functools
+    from repro.checkpoint import restore_train_state, save_train_state
+    from repro.core.optim import CDSGD
+    from repro.core.topology import make_topology
+    from repro.core.trainer import CollaborativeTrainer, TrainState
+    from repro.nn.paper_models import (classifier_loss, mlp_classifier_apply,
+                                       mlp_classifier_template)
+    from repro.nn.param import init_params
+
+    loss = functools.partial(classifier_loss, mlp_classifier_apply)
+    params = init_params(mlp_classifier_template(8, 4, width=16, depth=2),
+                         jax.random.PRNGKey(0))
+    topo = make_topology("ring", 4)
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.standard_normal((4, 8, 8)), jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 4, (4, 8)), jnp.int32)}
+
+    def make_trainer():
+        return CollaborativeTrainer(
+            loss, params, topo, CDSGD(5e-3, fused=True), schedule="overlap",
+            exchange="int8", error_feedback=True, donate=False)
+
+    tr = make_trainer()
+    for _ in range(3):
+        tr.step(batch)
+    d = str(tmp_path / "ckpt")
+    save_train_state(d, tr.state.step, tr.state.params, tr.state.opt_state)
+
+    tr2 = make_trainer()                    # fresh wire/residual state ...
+    p0, o0 = restore_train_state(d, tr2.state.params, tr2.state.opt_state)
+    # ... replaced by the checkpointed one (incl. int8 wire payloads)
+    tr2.state = TrainState(params=p0, opt_state=o0, step=int(o0.step))
+    assert tr2.state.step == 3
+    for a, b in zip(jax.tree.leaves(tr.state.opt_state.wire),
+                    jax.tree.leaves(tr2.state.opt_state.wire)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    m1 = tr.step(batch)
+    m2 = tr2.step(batch)
+    assert m1["loss"] == m2["loss"]
+    for a, b in zip(jax.tree.leaves(tr.state.params),
+                    jax.tree.leaves(tr2.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(tr.state.opt_state.residual),
+                    jax.tree.leaves(tr2.state.opt_state.residual)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_state_restore_rejects_missing_wire(tmp_path):
+    """A params-only checkpoint cannot silently restore into a stateful
+    trainer: the wire/residual keys are missing and restore fails loudly."""
+    from repro.checkpoint import restore_train_state, save_checkpoint
+    from repro.core.optim import CDSGD, OptState
+    d = str(tmp_path / "ckpt")
+    params = {"w": jnp.zeros((4, 2))}
+    opt = CDSGD(0.01)
+    save_checkpoint(d, 0, {"params": params,
+                           "opt_state": opt.init(params)})
+    stateful = OptState(step=jnp.int32(0), inner=(),
+                        wire=((jnp.zeros((4, 1, 128), jnp.int8),
+                               jnp.ones((4, 1, 1), jnp.float32)),))
+    with pytest.raises(KeyError):
+        restore_train_state(d, params, stateful)

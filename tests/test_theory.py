@@ -137,3 +137,65 @@ def test_noise_radius_scales_with_alpha():
                                          lambda2=0.8, lambdan=0.2, q=1.0)
         radii.append(const.noise_radius)
     assert radii[0] > radii[1] > radii[2]
+
+
+# -------------------------------------------------------------------------
+# Schedule-aware Lyapunov bounds (time-varying Pi / multi-round i-CDSGD)
+# -------------------------------------------------------------------------
+
+
+def test_schedule_consensus_bound_reduces_to_prop1_when_static():
+    from repro.core.lyapunov import consensus_bound, schedule_consensus_bound
+    from repro.core.topology import fixed_schedule, make_topology
+    t = make_topology("ring", 8)
+    assert schedule_consensus_bound(0.01, 2.0, fixed_schedule(t)) == \
+        pytest.approx(consensus_bound(0.01, 2.0, t), rel=1e-9)
+
+
+def test_schedule_bound_monotone_in_rounds():
+    """More inner consensus rounds -> tighter (never looser) consensus
+    radius: the k-round product contracts the disagreement subspace at
+    lambda2^k, so the Prop-1 radius a L / (1 - lambda_eff) is
+    non-increasing in k (strictly decreasing off the trivial cases)."""
+    from repro.core.lyapunov import schedule_consensus_bound
+    from repro.core.topology import make_topology_schedule
+    for spec in ("ring", "alternating:ring:torus"):
+        s = make_topology_schedule(spec, 8)
+        bounds = [schedule_consensus_bound(0.05, 1.0, s, k) for k in (1, 2, 4)]
+        assert bounds[0] > bounds[1] > bounds[2]
+    # a gossip-pair matrix is an idempotent projection (W^2 = W: averaging
+    # the pair twice is averaging it once), so extra rounds buy exactly
+    # nothing — the bound must be flat in k, not looser
+    g = make_topology_schedule("gossip:8", 8)
+    gb = [schedule_consensus_bound(0.05, 1.0, g, k) for k in (1, 2, 4)]
+    assert gb[0] == pytest.approx(gb[1], rel=1e-9) == pytest.approx(gb[2], rel=1e-9)
+
+
+def test_product_contraction_bounded_by_per_matrix_lambda2():
+    """Time-varying Pi: the period product's disagreement contraction is
+    bounded by the product of per-matrix contraction factors (so a
+    schedule mixes at least as fast as its slowest telescoped factor).
+    Gossip pairs show why the product view is necessary at all: each
+    per-matrix lambda2 is exactly 1 (disconnected step) yet the product
+    still contracts."""
+    import numpy as np
+    from repro.core.topology import make_topology_schedule
+    s = make_topology_schedule("alternating:ring:fully_connected", 8)
+    period_contraction = s.effective_lambda2() ** s.period
+    assert period_contraction <= np.prod(
+        [t.lambda2 for t in s.topologies]) + 1e-12
+    g = make_topology_schedule("gossip:8", 6, seed=1)
+    assert all(t.lambda2 == pytest.approx(1.0, abs=1e-9) for t in g.topologies)
+    assert g.effective_lambda2() < 1.0
+
+
+def test_schedule_theory_constants_contract():
+    from repro.core.lyapunov import schedule_theory_constants
+    from repro.core.topology import make_topology_schedule
+    s = make_topology_schedule("ring", 8)
+    c1 = schedule_theory_constants(0.05, gamma_m=2.0, h_m=0.5, schedule=s)
+    c2 = schedule_theory_constants(0.05, gamma_m=2.0, h_m=0.5, schedule=s,
+                                   rounds=2)
+    # more rounds: stronger strong-convexity of V, faster contraction
+    assert c2.h_hat > c1.h_hat
+    assert c2.contraction < c1.contraction < 1.0

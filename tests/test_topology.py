@@ -98,3 +98,91 @@ def test_neighbor_lists_match_pi():
     nbrs = t.neighbor_lists()
     for j, lst in enumerate(nbrs):
         assert set(l for l, _ in lst) == {(j - 1) % 6, j, (j + 1) % 6}
+
+
+# -------------------------------------------------------------------------
+# TopologySchedule (time-varying Pi_t, B-connectivity)
+# -------------------------------------------------------------------------
+
+
+def test_fixed_schedule_matches_topology():
+    from repro.core.topology import fixed_schedule
+    t = make_topology("ring", 8)
+    s = fixed_schedule(t)
+    assert s.period == 1 and s.is_static
+    assert s.effective_lambda2() == pytest.approx(t.lambda2, abs=1e-9)
+    assert s.effective_spectral_gap() == pytest.approx(t.spectral_gap, abs=1e-9)
+    assert s.max_degree() == s.mean_degree() == t.degree()
+
+
+def test_alternating_schedule_product_beats_either_factor():
+    """Submultiplicativity on the disagreement subspace: the full-period
+    product contraction is bounded by the product of the per-matrix
+    lambda2's (hence by the slowest single factor), so the per-step
+    effective lambda2 never exceeds the factors' geometric mean."""
+    from repro.core.topology import make_topology_schedule
+    s = make_topology_schedule("alternating:ring:torus", 8)
+    assert s.period == 2
+    lams = [t.lambda2 for t in s.topologies]
+    period_contraction = s.effective_lambda2() ** s.period
+    assert period_contraction <= np.prod(lams) + 1e-12
+    assert period_contraction <= min(lams) + 1e-12
+    assert s.effective_lambda2() <= float(np.prod(lams)) ** (1 / 2) + 1e-12
+    assert 0.0 < s.effective_spectral_gap() < 1.0
+
+
+def test_gossip_schedule_b_connected_and_doubly_stochastic():
+    from repro.core.topology import make_topology_schedule
+    s = make_topology_schedule("gossip:8", 6, seed=0)
+    assert s.period == 8
+    for t in s.topologies:
+        assert np.allclose(t.pi.sum(0), 1.0) and np.allclose(t.pi, t.pi.T)
+        # a single pair is NOT connected for n > 2 ...
+        assert t.lambda2 == pytest.approx(1.0, abs=1e-9)
+    # ... but the union over the period mixes (B-connectivity)
+    assert s.effective_lambda2() < 1.0 - 1e-6
+    assert s.mean_degree() == 1.0
+    # deterministic: same seed -> same schedule
+    s2 = make_topology_schedule("gossip:8", 6, seed=0)
+    for a, b in zip(s.pi_stack(), s2.pi_stack()):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_schedule_rounds_sharpen_effective_gap():
+    """More inner rounds -> smaller effective lambda2 (never larger; equal
+    only at the fp floor, e.g. uniform Pi already projects to the mean)."""
+    from repro.core.topology import make_topology_schedule
+    for spec_name in ("ring", "alternating:ring:torus"):
+        s = make_topology_schedule(spec_name, 8)
+        lams = [s.effective_lambda2(k) for k in (1, 2, 3)]
+        assert lams[0] > lams[1] > lams[2] > 0.0
+    # uniform fully-connected: one round already hits exact averaging
+    fc = make_topology_schedule("fully_connected", 8)
+    assert fc.effective_lambda2(1) == pytest.approx(0.0, abs=1e-7)
+    assert fc.effective_lambda2(3) == pytest.approx(0.0, abs=1e-7)
+
+
+def test_schedule_validate_rejects_disconnected_union():
+    from repro.core.topology import Topology, TopologySchedule
+    bad = TopologySchedule(
+        name="bad", topologies=(Topology("i1", np.eye(4)),
+                                Topology("i2", np.eye(4))))
+    with pytest.raises(ValueError, match="B-connected"):
+        bad.validate()
+
+
+def test_schedule_entries_must_share_n_agents():
+    from repro.core.topology import TopologySchedule
+    with pytest.raises(ValueError, match="n_agents"):
+        TopologySchedule(name="bad",
+                         topologies=(make_topology("ring", 4),
+                                     make_topology("ring", 6)))
+
+
+def test_schedule_diagnostics_record():
+    from repro.core.topology import make_topology_schedule
+    d = make_topology_schedule("alternating", 8).diagnostics(rounds=2)
+    assert d["period"] == 2 and d["rounds"] == 2
+    assert len(d["per_matrix_gap"]) == 2
+    assert d["transfers_per_step"] == d["mean_degree"] * 2
+    assert 0 < d["effective_gap"] < 1
