@@ -321,6 +321,70 @@ def multi_round(steps_timed: int = 3):
     return row, rec
 
 
+def momentum_mix(steps_timed: int = 3):
+    """Momentum-consensus mixing (MixingProgram momentum_mixing="mixed")
+    wire accounting.
+
+    Asserts, from the program-level accounting AND the actual carried
+    overlap buffers, that (a) putting the momentum buffer on the wire
+    moves exactly **2x** the params-only bytes at equal precision (two
+    payload trees, same quantization layout each), and (b) error feedback
+    on top still adds ZERO wire bytes (one residual per bucket per
+    payload, all local f32 state)."""
+    from repro.core import engine
+    from repro.core.optim import CDMSGD
+    from repro.core.trainer import CollaborativeTrainer
+
+    key = jax.random.PRNGKey(0)
+    topo = make_topology("ring", 4)
+    params = {"w": jax.random.normal(key, (256, 128), jnp.float32),
+              "b": jax.random.normal(key, (300,), jnp.float32)}
+
+    def loss(p, b):
+        return 0.5 * (jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)), {}
+
+    batch = {"x": jnp.zeros((4, 1), jnp.float32)}
+    us, wire = {}, {}
+    for label, kw in (("plain", {}),
+                      ("mixed", {"momentum_mixing": "mixed"}),
+                      ("mixed_ef", {"momentum_mixing": "mixed",
+                                    "error_feedback": True})):
+        tr = CollaborativeTrainer(loss, params, topo,
+                                  CDMSGD(0.01, mu=0.9, fused=True),
+                                  exchange="int8", donate=False, **kw)
+        us[label] = _time(tr._step_fn, tr.state.params, tr.state.opt_state,
+                          batch, reps=steps_timed)
+        wire[label] = tr.wire_bytes_per_step
+    assert wire["mixed"] == 2 * wire["plain"], wire
+    assert wire["mixed_ef"] == wire["mixed"], wire
+
+    # from the actual carried buffers: the overlap double-buffer holds the
+    # momentum payload too, at exactly 2x the params-only sync bytes
+    tr_o = CollaborativeTrainer(loss, params, topo,
+                                CDMSGD(0.01, mu=0.9, fused=True),
+                                exchange="int8", schedule="overlap",
+                                momentum_mixing="mixed", donate=False)
+    spec = flatbuf.make_flat_spec(tr_o.state.params, lead=1)
+    per_nbr = engine.wire_bytes_per_neighbor(tr_o.state.opt_state.wire)
+    assert per_nbr == 2 * spec.exchange_bytes("int8"), \
+        (per_nbr, spec.exchange_bytes("int8"))
+
+    rec = {
+        "bench": "consensus/momentum_mix",
+        "model": "33k f32 params, ring deg 2, int8 wire, CDMSGD mu=0.9",
+        "us_per_step_interp": {k: round(v, 1) for k, v in us.items()},
+        "wire_bytes_per_step": wire,
+        "wire_bytes_per_neighbor_from_buffers": {
+            "params_only": spec.exchange_bytes("int8"), "mixed": per_nbr},
+        "mixed_wire_is_2x_params_only": True,
+        "ef_extra_wire_bytes": 0,
+    }
+    row = ("kernel/momentum_mix", us["mixed"],
+           f"plain_us={us['plain']:.0f};wire/step plain={wire['plain']} "
+           f"mixed={wire['mixed']} (=2x);ef extra wire=0")
+    return row, rec
+
+
 def run(smoke: bool = False, json_out: str = None):
     key = jax.random.PRNGKey(0)
     rows = []
@@ -369,7 +433,9 @@ def run(smoke: bool = False, json_out: str = None):
     # bytes-on-wire per exchange precision + in-place aliasing accounting
     # + sync-vs-overlap schedule step time / wire-byte equality
     # + k-round strategy wire accounting (k x sync; EF adds 0)
-    for fn in (exchange_wire, alias_accounting, schedule_overlap, multi_round):
+    # + momentum-mixing wire accounting (2x params-only; EF still +0)
+    for fn in (exchange_wire, alias_accounting, schedule_overlap, multi_round,
+               momentum_mix):
         row, rec = fn()
         rows.append(row)
         records.append(rec)

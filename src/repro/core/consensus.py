@@ -63,6 +63,7 @@ MixFn = Callable[[PyTree], PyTree]
 # --------------------------------------------------------------------------
 
 MIXING_STRATEGIES = ("static", "time_varying", "multi_round")
+MOMENTUM_MIXINGS = ("none", "mixed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +84,19 @@ class MixingProgram:
     the principled fix for quantization-noise accumulation (requires a
     quantized ``exchange``; the residual never crosses the wire).
 
+    ``momentum_mixing="mixed"`` widens the wire to TWO payload trees: the
+    momentum buffer rides alongside the params and is mixed with the same
+    agent-interaction matrix — ``v' = mu (Pi v) - a g`` instead of
+    ``v' = mu v - a g`` (Gao & Huang, 2010.11166).  With an unmixed
+    momentum the disagreement dynamics of the joint ``(x, v)`` system
+    contract at ``max(|lambda_2|, mu)`` through a non-normal coupling, so
+    any per-step wire noise persists for ``~1/(1-mu)`` steps — the PR 2
+    large-lr momentum/quantization instability; mixing ``v`` over the wire
+    makes both dynamics contract together at ``|lambda_2|`` (see
+    :func:`repro.core.lyapunov.momentum_consensus_contraction`).  Doubles
+    the wire bytes at equal precision; momentum-capable fused optimizers
+    only (CDMSGD family / CDAdam's first moment).
+
     Built via :func:`make_mixing_program`, which validates everything at
     config time — never inside a traced step.
     """
@@ -92,13 +106,20 @@ class MixingProgram:
     rounds: int = 1
     error_feedback: bool = False
     exchange: str = "f32"
+    momentum_mixing: str = "none"
 
     @property
     def is_trivial(self) -> bool:
         """True iff this is exactly the legacy single-round fixed-``Pi``
         program (whose sync path must stay bit-for-bit unchanged)."""
         return (self.strategy == "static" and self.rounds == 1
-                and not self.error_feedback)
+                and not self.error_feedback
+                and self.momentum_mixing == "none")
+
+    @property
+    def n_payloads(self) -> int:
+        """Payload trees on the wire: params, plus the mixed momentum."""
+        return 2 if self.momentum_mixing == "mixed" else 1
 
     def describe(self) -> dict:
         return {
@@ -108,6 +129,7 @@ class MixingProgram:
             "rounds": self.rounds,
             "error_feedback": self.error_feedback,
             "exchange": self.exchange,
+            "momentum_mixing": self.momentum_mixing,
         }
 
 
@@ -118,6 +140,7 @@ def make_mixing_program(
     rounds: int = 1,
     error_feedback: bool = False,
     exchange: str = "f32",
+    momentum_mixing: str = "none",
 ) -> MixingProgram:
     """Validate + build a :class:`MixingProgram` at config time.
 
@@ -154,8 +177,12 @@ def make_mixing_program(
         raise ValueError(
             f"error_feedback=True needs a quantized exchange (int8|fp8): "
             f"exchange={exchange!r} has no quantization error to feed back")
+    if momentum_mixing not in MOMENTUM_MIXINGS:
+        raise ValueError(f"unknown momentum_mixing {momentum_mixing!r}; "
+                         f"expected one of {MOMENTUM_MIXINGS}")
     return MixingProgram(schedule=schedule, strategy=strategy, rounds=rounds,
-                         error_feedback=error_feedback, exchange=exchange)
+                         error_feedback=error_feedback, exchange=exchange,
+                         momentum_mixing=momentum_mixing)
 
 
 # --------------------------------------------------------------------------
@@ -245,15 +272,44 @@ class FlatComm:
 
 
 # distinct odd strides decorrelate the stochastic-rounding streams across
-# steps, buckets, agents, and inner consensus rounds while keeping
-# stacked/sharded seeds identical (without the step stride, step t+1 /
-# bucket b would collide with step t+1-7919k / bucket b+k; int32 wraparound
-# at large steps is fine — the seed only needs to be a well-spread hash
-# input).
+# steps, buckets, agents, inner consensus rounds, and wire payloads
+# (params vs mixed momentum) while keeping stacked/sharded seeds identical
+# (without the step stride, step t+1 / bucket b would collide with step
+# t+1-7919k / bucket b+k; int32 wraparound at large steps is fine — the
+# seed only needs to be a well-spread hash input).  The composition is
+# documented by :func:`wire_seed` and pinned collision-free over the
+# realistic index ranges in tests/test_mixing.py.
 _SEED_STEP_STRIDE = 1000003
 _SEED_BUCKET_STRIDE = 7919
 _SEED_AGENT_STRIDE = 104729
 _SEED_ROUND_STRIDE = 611953
+_SEED_PAYLOAD_STRIDE = 2750161
+
+
+def wire_seed(step, agent: int = 0, bucket: int = 0, rnd: int = 0,
+              payload: int = 0) -> int:
+    """The SR-stream seed of one quantized wire payload, as a host int.
+
+    This is THE seed composition both execution modes implement (the
+    stacked mode vectorizes the agent term, the sharded mode derives it
+    from ``lax.axis_index``):
+
+        seed = STEP * (step + ROUND * rnd) + AGENT * agent
+             + BUCKET * bucket + PAYLOAD * payload      (mod 2^32)
+
+    ``rnd`` is the inner consensus round (0 = the round-1 wire, whose seed
+    is the bare optimizer step); ``payload`` is 0 for params and 1 for the
+    mixed momentum buffer.  Returns the signed int32 value the stages feed
+    the quantizer (the traced arithmetic wraps identically).  Exposed so
+    tests can assert the strides stay collision-free over the realistic
+    index ranges by construction.
+    """
+    s = np.int64(step) + np.int64(_SEED_ROUND_STRIDE) * np.int64(rnd)
+    seed = (np.int64(_SEED_STEP_STRIDE) * s
+            + np.int64(_SEED_AGENT_STRIDE) * np.int64(agent)
+            + np.int64(_SEED_BUCKET_STRIDE) * np.int64(bucket)
+            + np.int64(_SEED_PAYLOAD_STRIDE) * np.int64(payload))
+    return int(np.int64(seed).astype(np.int32))
 
 
 def _check_exchange(exchange: str) -> str:
@@ -280,7 +336,8 @@ def _wire_payload(buf, seed, exchange: str, interpret: bool):
     return sr_quantize_2d(buf, seed, exchange=exchange, interpret=interpret)
 
 
-def _quantize_wire_stacked(bufs, seed, n: int, exchange: str, interpret: bool):
+def _quantize_wire_stacked(bufs, seed, n: int, exchange: str, interpret: bool,
+                           payload: int = 0):
     """Quantize agent-stacked ``(A, rows, 128)`` buckets for the wire.
 
     Returns the wire state: one ``(payload, (A, rows, 1) f32 scales)`` pair
@@ -289,12 +346,15 @@ def _quantize_wire_stacked(bufs, seed, n: int, exchange: str, interpret: bool):
     wire bits from the same parameters.  f32/bf16 wires cast and carry
     unit scales (the fused kernels' in-register dequant multiply is then
     the identity), so every exchange precision shares one wire layout.
+    ``payload`` decorrelates the SR streams of the second payload tree
+    (the mixed momentum buffer) from the params' — see :func:`wire_seed`.
     """
     if exchange in ("f32", "bf16"):
         return tuple(
             (_wire_payload(b, None, exchange, interpret)[0],
              jnp.ones(b.shape[:-1] + (1,), jnp.float32)) for b in bufs)
-    base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
+    base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32) \
+        + jnp.int32(_SEED_PAYLOAD_STRIDE * payload)
     agent_seeds = _SEED_AGENT_STRIDE * jnp.arange(n, dtype=jnp.int32)
     out = []
     for bi, b in enumerate(bufs):
@@ -340,6 +400,7 @@ class MixingStrategy:
                  bufs_to_state=None, state_to_bufs=None):
         self.program = program
         self.rounds = program.rounds
+        self.mixed_momentum = program.momentum_mixing == "mixed"
         self._quantize = quantize
         self._exchange_t = exchange_t
         self._combine = combine
@@ -358,9 +419,26 @@ class MixingStrategy:
         """Schedule entry for optimizer step ``step`` (None = static 0)."""
         return None
 
+    # -- payload splitting (momentum_mixing="mixed") ------------------------
+    def _quantize_payloads(self, bufs, seed):
+        """Quantize the wire payload(s): params, plus the mixed momentum.
+
+        With ``momentum_mixing="mixed"`` every bucket list the strategy
+        sees is the concatenation ``params_bufs + momentum_bufs`` (equal
+        halves — momentum mirrors the param spec); the momentum half draws
+        its SR streams with the payload seed stride so the two payloads'
+        rounding noise stays independent (see :func:`wire_seed`).
+        """
+        if not self.mixed_momentum:
+            return tuple(self._quantize(bufs, seed))
+        b = len(bufs) // 2
+        assert len(bufs) == 2 * b, len(bufs)
+        return (tuple(self._quantize(bufs[:b], seed))
+                + tuple(self._quantize(bufs[b:], seed, payload=1)))
+
     # -- the FlatComm stage contract ---------------------------------------
     def quantize_stage(self, bufs, seed):
-        return self._quantize(bufs, seed)
+        return self._quantize_payloads(bufs, seed)
 
     def exchange_stage(self, wire, step=None):
         return self._exchange_t(wire, self._entry(step))
@@ -389,7 +467,7 @@ class MixingStrategy:
                 1, self.rounds - 1, dtype=jnp.int32)
 
             def round_body(carry, seed_r):
-                wire_r = self._quantize(list(carry), seed_r)
+                wire_r = self._quantize_payloads(list(carry), seed_r)
                 nb, wr, scr = self.exchange_stage(wire_r, step)
                 return tuple(self._combine(nb, wr, scr, list(carry))), None
 
@@ -397,7 +475,7 @@ class MixingStrategy:
             b = list(b)
         seed_k = jnp.asarray(step, jnp.int32) + \
             _SEED_ROUND_STRIDE * (self.rounds - 1)
-        wire_k = self._quantize(b, seed_k)
+        wire_k = self._quantize_payloads(b, seed_k)
         nbrs, w, sc = self.exchange_stage(wire_k, step)
         return nbrs, w, sc, list(b)
 
@@ -407,7 +485,7 @@ class MixingStrategy:
             # bit-for-bit the pre-strategy path (incl. the dense-weight
             # unquantized stacked form)
             return self._legacy_gather(bufs, seed)
-        wire = self._quantize(bufs, seed)
+        wire = self._quantize_payloads(bufs, seed)
         return self.continue_from_wire(bufs, wire, seed)
 
     # -- error feedback -----------------------------------------------------
@@ -418,13 +496,16 @@ class MixingStrategy:
         dequant(Q(x + e))`` — the compression error carried to the next
         step so quantization noise telescopes instead of accumulating
         (Seide et al. 2014 / Karimireddy et al. 2019).  The residual is
-        f32, never crosses the wire, and applies to the round-1 (raw
-        params) payload only; inner multi-round payloads are fresh each
-        step and use plain stochastic rounding.
+        f32, never crosses the wire, and applies to the round-1 payload(s)
+        only; inner multi-round payloads are fresh each step and use plain
+        stochastic rounding.  With ``momentum_mixing="mixed"`` the
+        residual list has one buffer per bucket per payload (params first,
+        momentum second) and each payload's compression error telescopes
+        independently.
         """
         res = self._state_to_bufs(residual)
         carried = [b.astype(jnp.float32) + e for b, e in zip(bufs, res)]
-        wire = self._quantize(carried, seed)
+        wire = self._quantize_payloads(carried, seed)
         deq = self._wire_to_bufs(wire)
         new_residual = tuple(self._bufs_to_state(
             [c - d for c, d in zip(carried, deq)]))
@@ -524,8 +605,9 @@ def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
         jnp.float32)
     period = schedule.period
 
-    def quantize(bufs, seed):
-        return _quantize_wire_stacked(bufs, seed, n, exchange, interpret)
+    def quantize(bufs, seed, payload=0):
+        return _quantize_wire_stacked(bufs, seed, n, exchange, interpret,
+                                      payload=payload)
 
     def exchange_t(wire, t):
         # stacked simulation: every agent already sees the full stack — the
@@ -694,14 +776,16 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
     quantized = exchange in ("int8", "fp8") and union_keys
     n_total = int(np.prod([t.n_agents for _, t in factors])) if factors else 1
 
-    def quantize(bufs, seed):
+    def quantize(bufs, seed, payload=0):
         """Local squeezed buckets -> wire state (lead axes restored).
 
         Runs inside ``shard_map``: the returned pairs carry the size-1
         local agent axes so the wire state round-trips through sharded
-        optimizer-state PartitionSpecs unchanged.
+        optimizer-state PartitionSpecs unchanged.  ``payload`` selects the
+        SR stream of the second (mixed momentum) payload tree.
         """
-        base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
+        base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32) \
+            + jnp.int32(_SEED_PAYLOAD_STRIDE * payload)
         if exchange in ("int8", "fp8"):
             base = base + _SEED_AGENT_STRIDE * _agent_index()
         out = []
@@ -824,6 +908,24 @@ def _factored_pi(factors) -> np.ndarray:
     return pi
 
 
+def widen_with_momentum(fl: FlatComm, bufs, momentum_bufs=None):
+    """THE wire-widening convention of ``momentum_mixing="mixed"``, in one
+    place: the strategy-facing bucket list is ``params_bufs +
+    momentum_bufs`` — equal halves, the momentum half mirroring the param
+    buckets one-for-one against the same :class:`FlatSpec`.
+    ``momentum_bufs=None`` appends zeros (the initializer convention:
+    ``v_{-1} := v_0 = 0`` — the optimizers zero-init their momentum /
+    first-moment buffers).  No-op for programs that don't mix momentum.
+    """
+    if fl.program is None or fl.program.momentum_mixing != "mixed":
+        assert momentum_bufs is None, "momentum payload without a mixed program"
+        return list(bufs)
+    if momentum_bufs is None:
+        momentum_bufs = [jnp.zeros_like(b) for b in bufs]
+    assert len(momentum_bufs) == len(bufs), (len(momentum_bufs), len(bufs))
+    return list(bufs) + list(momentum_bufs)
+
+
 def initial_wire_state(fl: FlatComm, params: PyTree) -> tuple:
     """Wire state priming the ``schedule="overlap"`` double-buffer.
 
@@ -847,12 +949,21 @@ def initial_wire_state(fl: FlatComm, params: PyTree) -> tuple:
     if fl.lead != 1:
         raise ValueError("overlap wire state assumes one leading agent axis")
     spec = flatbuf.make_flat_spec(params, lead=fl.lead)
-    bufs = flatbuf.pack(params, spec)           # global view, lead kept
+    bufs = widen_with_momentum(fl, flatbuf.pack(params, spec))
     seed = jnp.int32(-1)
     if fl.batched:
         return fl.quantize_stage(bufs, seed)
-    return _quantize_wire_stacked(bufs, seed, fl.n_agents, fl.exchange,
+    # sharded comm, global agent-stacked view: the strategy's quantize is
+    # the shard-local one, so replay _quantize_payloads' split on the
+    # global quantizer (payload 1 = the momentum half's seed stride)
+    mixed = fl.program is not None and fl.program.momentum_mixing == "mixed"
+    b = len(bufs) // 2 if mixed else len(bufs)
+    wire = _quantize_wire_stacked(bufs[:b], seed, fl.n_agents, fl.exchange,
                                   fl.interpret)
+    if mixed:
+        wire = tuple(wire) + tuple(_quantize_wire_stacked(
+            bufs[b:], seed, fl.n_agents, fl.exchange, fl.interpret, payload=1))
+    return wire
 
 
 def initial_residual_state(fl: FlatComm, params: PyTree) -> tuple:
@@ -867,7 +978,7 @@ def initial_residual_state(fl: FlatComm, params: PyTree) -> tuple:
     buffers through the same ``MixingStrategy.residual_init``.
     """
     spec = flatbuf.make_flat_spec(params, lead=fl.lead)
-    bufs = flatbuf.pack(params, spec)
+    bufs = widen_with_momentum(fl, flatbuf.pack(params, spec))
     return fl.strategy.residual_init(bufs)
 
 
@@ -1014,7 +1125,8 @@ class FactoredMix:
 
 
 def exchange_bytes_per_step(spec: "flatbuf.FlatSpec", topology,
-                            exchange: str = "f32", rounds: int = 1) -> dict:
+                            exchange: str = "f32", rounds: int = 1,
+                            payloads: int = 1) -> dict:
     """Per-step bytes-on-wire estimate for the fused consensus exchange.
 
     The paper's fixed-topology cost model (eq. 5/6): each agent sends/
@@ -1022,12 +1134,13 @@ def exchange_bytes_per_step(spec: "flatbuf.FlatSpec", topology,
     comes from :meth:`repro.core.flatbuf.FlatSpec.exchange_bytes` for the
     chosen wire precision (int8/fp8 add one f32 scale per 128-lane row).
     ``topology`` may be a :class:`repro.core.topology.TopologySchedule`
-    (degree = period average) and ``rounds`` inner consensus rounds
-    multiply every transfer (k-round i-CDSGD moves exactly ``k x`` the
-    single-round bytes; error feedback moves zero extra — the residual is
-    local state).
+    (degree = period average), ``rounds`` inner consensus rounds multiply
+    every transfer (k-round i-CDSGD moves exactly ``k x`` the single-round
+    bytes; error feedback moves zero extra — the residual is local state),
+    and ``payloads`` counts the trees on the wire per transfer
+    (``momentum_mixing="mixed"`` moves params + momentum = 2).
     """
-    per_neighbor = spec.exchange_bytes(exchange)
+    per_neighbor = spec.exchange_bytes(exchange) * payloads
     if isinstance(topology, TopologySchedule):
         degree = topology.mean_degree()
     else:
@@ -1037,23 +1150,50 @@ def exchange_bytes_per_step(spec: "flatbuf.FlatSpec", topology,
         "exchange": exchange,
         "degree": degree,
         "rounds": rounds,
+        "payloads": payloads,
         "per_neighbor_bytes": per_neighbor,
         "per_step_bytes": per_step,
-        "native_per_step_bytes": int(spec.exchange_bytes("f32") * degree * rounds),
+        "native_per_step_bytes": int(spec.exchange_bytes("f32") * payloads
+                                     * degree * rounds),
+    }
+
+
+def mean_exchange_bytes_per_step(spec: "flatbuf.FlatSpec", n_agents: int,
+                                 period: int = 1, payloads: int = 1) -> dict:
+    """Per-step bytes-on-wire estimate for a *global-mean* optimizer.
+
+    FedAvg's sync step is a brute-force all-reduce of the whole model
+    (ring all-reduce: ``2 (N-1)/N`` native-precision model transfers per
+    agent), amortized over the ``period = local_steps`` between syncs —
+    the collective now being gated on the sync step, an agent pays
+    ``bytes / E`` per step instead of the full all-reduce every step.
+    ``payloads`` counts the averaged trees (2 when the momentum buffer is
+    averaged at sync too, i.e. ``mu != 0``).
+    """
+    native = spec.exchange_bytes("f32") * payloads
+    per_sync = 2.0 * (n_agents - 1) / max(n_agents, 1) * native
+    return {
+        "exchange": "f32",
+        "local_steps": period,
+        "payloads": payloads,
+        "per_sync_bytes": int(per_sync),
+        "per_step_bytes": int(per_sync / max(period, 1)),
     }
 
 
 def describe_exchange_cost(params: PyTree, topology,
                            exchange: str = "f32", *, lead: int = 1,
-                           rounds: int = 1) -> str:
+                           rounds: int = 1, payloads: int = 1) -> str:
     """One-line human-readable :func:`exchange_bytes_per_step` report
     (shared by the train/dryrun CLIs and the examples)."""
     wire = exchange_bytes_per_step(
-        flatbuf.make_flat_spec(params, lead=lead), topology, exchange, rounds)
+        flatbuf.make_flat_spec(params, lead=lead), topology, exchange, rounds,
+        payloads)
     per_round = "" if rounds == 1 else f" x {rounds} rounds"
+    per_payload = "" if payloads == 1 else f" ({payloads} payload trees)"
     return (f"exchange={exchange}: {wire['per_step_bytes']:,} bytes/agent/step "
             f"on the wire ({wire['degree']:g} neighbors x "
-            f"{wire['per_neighbor_bytes']:,} B{per_round}; native "
+            f"{wire['per_neighbor_bytes']:,} B{per_round}{per_payload}; native "
             f"{wire['native_per_step_bytes']:,} B)")
 
 

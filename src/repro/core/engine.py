@@ -53,7 +53,11 @@ What one "exchange" means per step is owned by the comm's
 round 1* — fresh (sync) or carried (overlap; rounds ``2..k`` always stay
 on the critical path) — and threads the error-feedback residual state
 (``OptState.residual``) through the round-1 quantizer when the program
-asks for it.
+asks for it.  With ``momentum_mixing="mixed"`` the engine also packs the
+optimizer's momentum buffer (``DistributedOptimizer.momentum_tree``) as
+a second wire payload next to the params — the strategy exchanges both
+with the same weights and the engine splits the operands back into the
+:class:`ExchangeResult` payload groups the fused kernels consume.
 """
 
 from __future__ import annotations
@@ -152,19 +156,67 @@ def check_program_support(optimizer: DistributedOptimizer,
                           comm: CommOps) -> Optional[consensus.FlatComm]:
     """A non-trivial MixingProgram needs the staged flat-buffer path.
 
-    Time-varying / multi-round / error-feedback mixing all live on the
-    flat-buffer strategy layer; a non-fused optimizer's reference path
-    would silently mix a fixed dense ``Pi`` instead, so this fails loudly
-    at config time.  Trivial (or absent) programs return ``comm.flat``
-    unchecked — every optimizer supports them.
+    Time-varying / multi-round / error-feedback / momentum mixing all live
+    on the flat-buffer strategy layer; a non-fused optimizer's reference
+    path would silently mix a fixed dense ``Pi`` instead, so this fails
+    loudly at config time.  ``momentum_mixing="mixed"`` additionally needs
+    an optimizer that *has* a mixable momentum buffer (CDMSGD family /
+    CDAdam's first moment).  Trivial (or absent) programs return
+    ``comm.flat`` unchecked — every optimizer supports them.
     """
     fl = comm.flat
     if fl is None or fl.program is None or fl.program.is_trivial:
         return fl
     p = fl.program
     what = (f"mixing strategy {p.strategy!r} (rounds={p.rounds}, "
-            f"error_feedback={p.error_feedback})")
-    return _check_fused_flat(optimizer, comm, what)
+            f"error_feedback={p.error_feedback}, "
+            f"momentum_mixing={p.momentum_mixing})")
+    fl = _check_fused_flat(optimizer, comm, what)
+    if p.momentum_mixing == "mixed" and not optimizer.has_mixable_momentum:
+        raise ValueError(
+            f"momentum_mixing='mixed' puts the momentum buffer on the wire, "
+            f"but {type(optimizer).__name__} has no mixable momentum state "
+            "(use CDMSGD, CDMSGDNesterov, or CDAdam)")
+    return fl
+
+
+def _mixed_momentum(fl: Optional[consensus.FlatComm]) -> bool:
+    return (fl is not None and fl.program is not None
+            and fl.program.momentum_mixing == "mixed")
+
+
+def _pack_wire_bufs(fl: consensus.FlatComm, params, momentum=None):
+    """Pack the wire payload bucket list: params, then the mixed momentum.
+
+    ``momentum=None`` with a momentum-mixing program packs zeros via
+    :func:`repro.core.consensus.widen_with_momentum` (the
+    state-initializer convention, ``v_{-1} := v_0 = 0``); a momentum tree
+    packs against the SAME spec, so the second half of the list mirrors
+    the first bucket-for-bucket.
+    """
+    spec = fl.spec(params)
+    bufs = fl.pack(params, spec)
+    mom_bufs = None
+    if _mixed_momentum(fl) and momentum is not None:
+        mom_bufs = fl.pack(momentum, spec)
+    return spec, consensus.widen_with_momentum(fl, bufs, mom_bufs)
+
+
+def _momentum_payload(optimizer: DistributedOptimizer, state: OptState):
+    """The momentum tree a mixed-momentum step puts on the wire.
+
+    Fails loudly if the optimizer claims a mixable momentum but its
+    ``momentum_tree`` returns nothing for this state shape — silently
+    packing zeros here would degrade the wire to ``v' = -a g`` neighbor
+    terms with no error.
+    """
+    mom = optimizer.momentum_tree(state.inner)
+    if mom is None:
+        raise ValueError(
+            f"momentum_mixing='mixed': {type(optimizer).__name__}."
+            "momentum_tree returned None for the current optimizer state — "
+            "no momentum payload to put on the wire")
+    return mom
 
 
 def make_local_wire_init(fl: consensus.FlatComm) -> Callable:
@@ -174,11 +226,12 @@ def make_local_wire_init(fl: consensus.FlatComm) -> Callable:
     ``x_{-1} := x_0`` convention as :func:`repro.core.consensus.
     initial_wire_state`, but with the local flat layout, which differs from
     the global one whenever params also shard over non-agent mesh axes.
+    With momentum mixing the wire also carries the momentum payload
+    (``v_{-1} := v_0 = 0``).
     """
 
     def local_init(params):
-        spec = fl.spec(params)
-        bufs = fl.pack(params, spec)
+        _, bufs = _pack_wire_bufs(fl, params)
         return fl.quantize_stage(bufs, jnp.int32(-1))
 
     return local_init
@@ -187,16 +240,29 @@ def make_local_wire_init(fl: consensus.FlatComm) -> Callable:
 def make_local_residual_init(fl: consensus.FlatComm) -> Callable:
     """Per-shard error-feedback residual initializer (inside ``shard_map``).
 
-    Zeros, shaped like the *local* packed buckets — the analog of
-    :func:`make_local_wire_init` for ``OptState.residual``.
+    Zeros, shaped like the *local* packed buckets (one per bucket per wire
+    payload) — the analog of :func:`make_local_wire_init` for
+    ``OptState.residual``.
     """
 
     def local_init(params):
-        spec = fl.spec(params)
-        bufs = fl.pack(params, spec)
+        _, bufs = _pack_wire_bufs(fl, params)
         return fl.strategy.residual_init(bufs)
 
     return local_init
+
+
+def _exchange_result(spec, nbrs, w, scales, selfs, mixed: bool):
+    """Split the strategy's flat per-bucket operand lists into the
+    :class:`ExchangeResult` payload groups (params / mixed momentum)."""
+    if not mixed:
+        return ExchangeResult(spec=spec, neighbors=nbrs, weights=w,
+                              scales=scales, selfs=selfs)
+    b = len(nbrs) // 2
+    return ExchangeResult(spec=spec, neighbors=nbrs[:b], weights=w,
+                          scales=scales[:b], selfs=selfs[:b],
+                          mom_neighbors=nbrs[b:], mom_scales=scales[b:],
+                          mom_selfs=selfs[b:])
 
 
 def make_update_phase(optimizer: DistributedOptimizer, comm: CommOps,
@@ -227,53 +293,63 @@ def make_update_phase(optimizer: DistributedOptimizer, comm: CommOps,
     fl = comm.flat
     program = fl.program if fl is not None else None
     error_feedback = program is not None and program.error_feedback
+    mixed = _mixed_momentum(fl)
     # a non-trivial program needs the fused staged path under EVERY
     # schedule — without this, a hand-assembled StepProgram with a
     # non-fused optimizer would silently mix the fixed dense Pi instead
     # of the configured strategy (no-op for trivial/absent programs)
     check_program_support(optimizer, comm)
 
-    if schedule == "sync" and not error_feedback:
+    if schedule == "sync" and not error_feedback and not mixed:
         def update_sync(params, grads, state):
             return optimizer.update(params, grads, state, comm)
         return update_sync
 
     if schedule == "sync":
-        # sync + error feedback: the engine stages the pipeline so the
-        # residual state can ride through the round-1 quantizer (the
+        # sync + error feedback and/or momentum mixing: the engine stages
+        # the pipeline explicitly, because the EF quantizer must thread
+        # ``OptState.residual`` through the round-1 compression and the
+        # momentum payload must be packed from the optimizer state (the
         # check above already validated the fused flat path exists).
         strategy = fl.strategy
 
-        def update_sync_ef(params, grads, state):
-            spec = fl.spec(params)
-            bufs = fl.pack(params, spec)
-            wire, new_res = strategy.quantize_ef(bufs, state.step,
-                                                 state.residual)
+        def update_sync_staged(params, grads, state):
+            spec, bufs = _pack_wire_bufs(
+                fl, params,
+                _momentum_payload(optimizer, state) if mixed else None)
+            if error_feedback:
+                wire, new_res = strategy.quantize_ef(bufs, state.step,
+                                                     state.residual)
+            else:
+                wire = strategy.quantize_stage(bufs, state.step)
             nbrs, w, scales, selfs = strategy.continue_from_wire(
                 bufs, wire, state.step)
-            ex = ExchangeResult(spec=spec, neighbors=nbrs, weights=w,
-                                scales=scales, selfs=selfs)
+            ex = _exchange_result(spec, nbrs, w, scales, selfs, mixed)
             new_params, new_state = optimizer.update(params, grads, state,
                                                      comm, exchanged=ex)
-            return new_params, new_state._replace(residual=new_res)
+            if error_feedback:
+                new_state = new_state._replace(residual=new_res)
+            return new_params, new_state
 
-        return update_sync_ef
+        return update_sync_staged
 
     fl = check_overlap_support(optimizer, comm)
     strategy = fl.strategy
 
     def update_overlap(params, grads, state):
-        spec = fl.spec(params)
-        bufs = fl.pack(params, spec)                      # pack (fresh self)
+        # pack (fresh selfs): params, plus the momentum payload when mixed
+        spec, bufs = _pack_wire_bufs(
+            fl, params,
+            _momentum_payload(optimizer, state) if mixed else None)
         # round 1 exchanges the stale carried wire; rounds 2..k (if any)
         # re-quantize the partially mixed buffers on the critical path
         nbrs, w, scales, selfs = strategy.continue_from_wire(
             bufs, state.wire, state.step)
-        ex = ExchangeResult(spec=spec, neighbors=nbrs, weights=w,
-                            scales=scales, selfs=selfs)
+        ex = _exchange_result(spec, nbrs, w, scales, selfs, mixed)
         new_params, new_state = optimizer.update(params, grads, state, comm,
                                                  exchanged=ex)
-        # quantize x_t as the wire step t+1 exchanges (one step stale there)
+        # quantize (x_t, v_t) as the wire step t+1 exchanges (one step
+        # stale there)
         if error_feedback:
             new_wire, new_res = strategy.quantize_ef(bufs, state.step,
                                                      state.residual)

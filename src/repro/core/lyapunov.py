@@ -171,3 +171,82 @@ def schedule_theory_constants(alpha: float, gamma_m: float, h_m: float,
                for t in schedule.topologies)
     return TheoryConstants(gamma_m=gamma_m, h_m=h_m, alpha=alpha,
                            lambda2=lam2, lambdan=lamn, **kw)
+
+
+# --------------------------------------------------------------------------
+# Momentum-consensus mixing (Gao & Huang 2010.11166)
+# --------------------------------------------------------------------------
+
+
+def _disagreement_radius(topology_or_schedule, rounds: int = 1) -> float:
+    """Modulus of the largest non-principal ``Pi``-mode: the per-step
+    disagreement contraction of plain (momentum-free) consensus.
+
+    A :class:`repro.core.topology.TopologySchedule` contributes its
+    effective disagreement norm (a spectral-norm upper bound on the
+    radius); a fixed :class:`Topology` the exact
+    ``max(|lambda_2|, |lambda_N|)`` — ``lambda_N`` can be negative with
+    ``|lambda_N| > lambda_2`` (e.g. short rings), and the momentum
+    coupling amplifies whichever mode decays slowest.
+    """
+    if isinstance(topology_or_schedule, Topology):
+        lams = np.linalg.eigvalsh(np.asarray(topology_or_schedule.pi,
+                                             np.float64))
+        return float(np.max(np.abs(lams[:-1])) ** rounds)
+    return float(topology_or_schedule.effective_lambda2(rounds))
+
+
+def momentum_consensus_contraction(topology_or_schedule, mu: float,
+                                   momentum_mixing: str = "none",
+                                   rounds: int = 1) -> float:
+    """Per-step disagreement contraction of the joint ``(x, v)`` dynamics.
+
+    CDMSGD's disagreement subsystem (gradients exogenous) is, per
+    ``Pi``-eigenmode ``lam``:
+
+        unmixed (``v' = mu v - a g``):      [[lam, mu ], [0, mu ]]
+        mixed   (``v' = mu Pi v - a g``):   [[lam, mu lam], [0, mu lam]]
+
+    both upper triangular, so the spectral radii are ``max(|lam|, mu)``
+    and ``max(|lam|, mu |lam|) = |lam|``.  Over the disagreement modes:
+
+    * ``momentum_mixing="none"``  -> ``max(rho_Pi, mu)`` — at large
+      momentum (``mu > rho_Pi``) the *momentum* mode gates the rate, and
+      the ``mu I`` coupling is non-normal: per-step wire noise injected
+      into ``v`` persists ``~1/(1-mu)`` steps while leaking into ``x`` —
+      the documented large-lr momentum/quantization instability;
+    * ``momentum_mixing="mixed"`` -> ``rho_Pi`` — the momentum buffer
+      contracts WITH the consensus (2010.11166), restoring the
+      momentum-free CDSGD rate and damping injected noise geometrically
+      at the topology's own gap.
+
+    ``rho_Pi`` is :func:`_disagreement_radius` (schedule-aware; ``rounds``
+    inner consensus rounds power it).
+    """
+    if momentum_mixing not in ("none", "mixed"):
+        raise ValueError(f"unknown momentum_mixing {momentum_mixing!r}")
+    if not 0.0 <= mu < 1.0:
+        raise ValueError(f"momentum mu must be in [0, 1), got {mu}")
+    rho = _disagreement_radius(topology_or_schedule, rounds)
+    if momentum_mixing == "mixed":
+        return rho
+    return max(rho, float(mu))
+
+
+def momentum_consensus_bound(alpha: float, grad_norm_bound: float,
+                             topology_or_schedule, mu: float,
+                             momentum_mixing: str = "none",
+                             rounds: int = 1) -> float:
+    """Proposition-1-style steady-state consensus radius for CDMSGD:
+    ``a L / (1 - rho)`` with the joint-dynamics contraction ``rho`` of
+    :func:`momentum_consensus_contraction` — the gap-vs-rate framing of
+    1805.12120 extended to the momentum state.  Mixing the momentum can
+    only tighten it (``rho_mixed <= rho_unmixed``), strictly whenever
+    ``mu > rho_Pi``.
+    """
+    rho = momentum_consensus_contraction(topology_or_schedule, mu,
+                                         momentum_mixing, rounds)
+    gap = 1.0 - rho
+    if gap <= 0:
+        return float("inf")
+    return alpha * grad_norm_bound / gap

@@ -32,6 +32,7 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import consensus
 from repro.core.schedules import Schedule, fixed
@@ -132,6 +133,15 @@ class ExchangeResult:
     against one-step-stale wire state) and hands the fused kernels their
     operands.  ``selfs`` is always the *fresh* native-precision packed
     params — the self term never crosses the wire and never goes stale.
+
+    With ``momentum_mixing="mixed"`` the wire carried a second payload
+    tree: ``mom_neighbors`` / ``mom_scales`` / ``mom_selfs`` are the
+    momentum buffer's exchanged operands (same weights as the params —
+    one agent-interaction matrix mixes both), ``None`` otherwise.
+    ``mom_selfs`` is the momentum buffer the fused kernels mix the self
+    weight against — the freshly packed momentum (single round) or the
+    round-``k-1`` partially mixed buffer (multi-round), exactly mirroring
+    ``selfs``.
     """
 
     spec: Any                     # flatbuf.FlatSpec of the param pytree
@@ -139,6 +149,14 @@ class ExchangeResult:
     weights: jnp.ndarray          # self-separated weights (self first)
     scales: Sequence              # per-bucket row-scale stacks
     selfs: Sequence               # per-bucket fresh native self buffers
+    # the mixed-momentum payload's operands (momentum_mixing="mixed" only)
+    mom_neighbors: Optional[Sequence] = None
+    mom_scales: Optional[Sequence] = None
+    mom_selfs: Optional[Sequence] = None
+
+    @property
+    def momentum_mixed(self) -> bool:
+        return self.mom_neighbors is not None
 
 
 class DistributedOptimizer:
@@ -217,6 +235,20 @@ class DistributedOptimizer:
     def uses_consensus(self) -> bool:
         return True
 
+    # -- momentum-consensus mixing (MixingProgram momentum_mixing="mixed") --
+    @property
+    def has_mixable_momentum(self) -> bool:
+        """True when the optimizer carries a momentum-like buffer the wire
+        can mix alongside the params (CDMSGD family's ``v``, CDAdam's first
+        moment).  Optimizers without one reject ``momentum_mixing``."""
+        return False
+
+    def momentum_tree(self, inner) -> Optional[PyTree]:
+        """The momentum pytree to put on the wire (param-structured), or
+        ``None``.  The engine packs it next to the params when the comm's
+        program mixes momentum."""
+        return None
+
 
 # --------------------------------------------------------------------------
 # The paper's algorithms
@@ -236,6 +268,14 @@ def _flat_setup(fl, params, step, *trees, exchanged=None):
         others = [fl.pack(t, exchanged.spec) for t in trees]
         return (exchanged.spec, exchanged.neighbors, exchanged.weights,
                 exchanged.scales, exchanged.selfs, others)
+    if fl.program is not None and fl.program.momentum_mixing == "mixed":
+        # the momentum payload lives on the engine's staged pipeline (the
+        # engine packs params + momentum and splits the exchanged operands);
+        # a bare gather here would see the params-only bucket list
+        raise ValueError(
+            "momentum_mixing='mixed' needs the StepProgram engine's staged "
+            "exchange (CollaborativeTrainer / build_train_step); the "
+            "optimizer cannot gather the momentum payload itself")
     spec = fl.spec(params)
     bufs = fl.pack(params, spec)
     others = [fl.pack(t, spec) for t in trees]
@@ -268,7 +308,14 @@ class CDSGD(DistributedOptimizer):
 
 class CDMSGD(DistributedOptimizer):
     """Algorithm 2 (Polyak momentum):
-    ``v' = mu v - alpha g(x); x' = Pi x + v'``."""
+    ``v' = mu v - alpha g(x); x' = Pi x + v'``.
+
+    With ``momentum_mixing="mixed"`` the momentum buffer rides the wire and
+    is mixed with the same ``Pi``: ``v' = mu (Pi v) - alpha g`` (momentum-
+    accelerated consensus, 2010.11166) — the consensus and momentum
+    dynamics then contract together instead of fighting, which is what
+    stabilizes quantized exchanges at large step sizes.
+    """
 
     def __init__(self, schedule, mu: float = 0.9, **kw):
         super().__init__(schedule, **kw)
@@ -279,6 +326,13 @@ class CDMSGD(DistributedOptimizer):
 
     def inner_specs(self, param_specs):
         return param_specs
+
+    @property
+    def has_mixable_momentum(self):
+        return True
+
+    def momentum_tree(self, inner):
+        return inner
 
     def apply(self, params, grads, v, alpha, comm, step):
         mixed = comm.mix(params)
@@ -292,6 +346,24 @@ class CDMSGD(DistributedOptimizer):
                     exchanged=None):
         from repro.kernels.consensus_update import ops as kops
         fl = comm.flat
+        if exchanged is not None and exchanged.momentum_mixed:
+            # mixed-momentum operand form: the momentum self buffer is the
+            # engine's mom_selfs (= packed v, or the round-(k-1) partially
+            # mixed v under a multi-round program), not a fresh pack of v
+            spec = exchanged.spec
+            g = fl.pack(grads, spec)
+            pairs = [kops.cdmsgd_update_flat(nb, exchanged.weights, gb, vi,
+                                             alpha, self.mu, scales=sc,
+                                             self_buf=sf, mom_neighbors=mnb,
+                                             mom_scales=msc,
+                                             interpret=fl.interpret)
+                     for nb, sc, sf, gb, vi, mnb, msc in zip(
+                         exchanged.neighbors, exchanged.scales,
+                         exchanged.selfs, g, exchanged.mom_selfs,
+                         exchanged.mom_neighbors, exchanged.mom_scales)]
+            new_params = fl.unpack([p for p, _ in pairs], spec)
+            new_v = fl.unpack([nv for _, nv in pairs], spec)
+            return new_params, new_v
         spec, nbrs, w, scs, sfs, (g, vb) = _flat_setup(fl, params, step, grads,
                                                        v, exchanged=exchanged)
         pairs = [kops.cdmsgd_update_flat(nb, w, gb, vi, alpha, self.mu,
@@ -328,6 +400,9 @@ class CDMSGDNesterov(CDMSGD):
             return state.inner[1]
         return tree_axpy(self.mu, state.inner, params)
 
+    def momentum_tree(self, inner):
+        return inner[0] if self.fused else inner
+
     def apply(self, params, grads, inner, alpha, comm, step):
         # reference path for fused-shaped state (comm without flat support)
         if self.fused:
@@ -342,13 +417,25 @@ class CDMSGDNesterov(CDMSGD):
         from repro.kernels.consensus_update import ops as kops
         fl = comm.flat
         v, _ = inner
-        spec, nbrs, w, scs, sfs, (g, vb) = _flat_setup(fl, params, step, grads,
-                                                       v, exchanged=exchanged)
-        triples = [kops.cdmsgd_nesterov_update_flat(nb, w, gb, vi, alpha,
-                                                    self.mu, scales=sc,
-                                                    self_buf=sf,
-                                                    interpret=fl.interpret)
-                   for nb, sc, sf, gb, vi in zip(nbrs, scs, sfs, g, vb)]
+        if exchanged is not None and exchanged.momentum_mixed:
+            spec = exchanged.spec
+            g = fl.pack(grads, spec)
+            triples = [kops.cdmsgd_nesterov_update_flat(
+                           nb, exchanged.weights, gb, vi, alpha, self.mu,
+                           scales=sc, self_buf=sf, mom_neighbors=mnb,
+                           mom_scales=msc, interpret=fl.interpret)
+                       for nb, sc, sf, gb, vi, mnb, msc in zip(
+                           exchanged.neighbors, exchanged.scales,
+                           exchanged.selfs, g, exchanged.mom_selfs,
+                           exchanged.mom_neighbors, exchanged.mom_scales)]
+        else:
+            spec, nbrs, w, scs, sfs, (g, vb) = _flat_setup(
+                fl, params, step, grads, v, exchanged=exchanged)
+            triples = [kops.cdmsgd_nesterov_update_flat(nb, w, gb, vi, alpha,
+                                                        self.mu, scales=sc,
+                                                        self_buf=sf,
+                                                        interpret=fl.interpret)
+                       for nb, sc, sf, gb, vi in zip(nbrs, scs, sfs, g, vb)]
         new_params = fl.unpack([t[0] for t in triples], spec)
         new_v = fl.unpack([t[1] for t in triples], spec)
         look = fl.unpack([t[2] for t in triples], spec)
@@ -359,6 +446,12 @@ class CDAdam(DistributedOptimizer):
     """Beyond-paper extension: consensus mixing of parameters with local
     Adam moments (``x' = Pi x - alpha * adam_dir(g)``).  Moments stay local
     (they are statistics of the *local* data distribution); parameters mix.
+
+    ``momentum_mixing="mixed"`` mixes the FIRST moment over the wire
+    (``m' = b1 (Pi m) + (1-b1) g``, the Adam analog of 2010.11166's
+    momentum-accelerated consensus); the second moment stays local — it is
+    a positive per-coordinate scale, not a direction, and mixing it would
+    skew the bias correction.
     """
 
     def __init__(self, schedule, b1=0.9, b2=0.999, eps=1e-8, **kw):
@@ -370,6 +463,13 @@ class CDAdam(DistributedOptimizer):
 
     def inner_specs(self, param_specs):
         return (param_specs, param_specs)
+
+    @property
+    def has_mixable_momentum(self):
+        return True
+
+    def momentum_tree(self, inner):
+        return inner[0]
 
     def apply(self, params, grads, inner, alpha, comm, step):
         m, v = inner
@@ -392,13 +492,29 @@ class CDAdam(DistributedOptimizer):
         t = (step + 1).astype(jnp.float32)
         bc1 = 1.0 - self.b1**t
         bc2 = 1.0 - self.b2**t
-        spec, nbrs, w, scs, sfs, (g, mb, vb) = _flat_setup(
-            fl, params, step, grads, m, v, exchanged=exchanged)
-        triples = [kops.cdadam_update_flat(nb, w, gb, mi, vi, alpha, self.b1,
-                                           self.b2, self.eps, bc1, bc2,
-                                           scales=sc, self_buf=sf,
-                                           interpret=fl.interpret)
-                   for nb, sc, sf, gb, mi, vi in zip(nbrs, scs, sfs, g, mb, vb)]
+        if exchanged is not None and exchanged.momentum_mixed:
+            spec = exchanged.spec
+            g = fl.pack(grads, spec)
+            vb = fl.pack(v, spec)
+            triples = [kops.cdadam_update_flat(
+                           nb, exchanged.weights, gb, mi, vi, alpha, self.b1,
+                           self.b2, self.eps, bc1, bc2, scales=sc,
+                           self_buf=sf, mom_neighbors=mnb, mom_scales=msc,
+                           interpret=fl.interpret)
+                       for nb, sc, sf, gb, mi, vi, mnb, msc in zip(
+                           exchanged.neighbors, exchanged.scales,
+                           exchanged.selfs, g, exchanged.mom_selfs, vb,
+                           exchanged.mom_neighbors, exchanged.mom_scales)]
+        else:
+            spec, nbrs, w, scs, sfs, (g, mb, vb) = _flat_setup(
+                fl, params, step, grads, m, v, exchanged=exchanged)
+            triples = [kops.cdadam_update_flat(nb, w, gb, mi, vi, alpha,
+                                               self.b1, self.b2, self.eps,
+                                               bc1, bc2, scales=sc,
+                                               self_buf=sf,
+                                               interpret=fl.interpret)
+                       for nb, sc, sf, gb, mi, vi in zip(nbrs, scs, sfs, g,
+                                                         mb, vb)]
         new_params = fl.unpack([t_[0] for t_ in triples], spec)
         new_m = fl.unpack([t_[1] for t_ in triples], spec)
         new_v = fl.unpack([t_[2] for t_ in triples], spec)
@@ -452,9 +568,18 @@ class CentralizedMSGD(DistributedOptimizer):
 class FedAvg(DistributedOptimizer):
     """Federated Averaging [McMahan et al. 2016] with C=1 (all clients).
 
-    Each agent takes local SGD(+momentum) steps; every ``local_steps`` steps
-    the parameters are replaced by their global average — a brute-force
-    consensus through a central parameter server (paper §5.1 discussion).
+    Each agent takes local SGD(+momentum) steps; every ``local_steps``
+    steps the parameters AND the momentum buffer are replaced by their
+    global averages — a brute-force consensus through a central parameter
+    server (paper §5.1 discussion).  The averaging collective runs under
+    ``lax.cond`` gated on the sync step, so ``local_steps = E > 1`` pays
+    the all-reduce once per E steps instead of every step (it used to run
+    unconditionally with the result discarded on non-sync steps), and the
+    momentum average keeps the local ``v`` buffers from silently diverging
+    across agents between syncs — without it each agent's momentum keeps
+    pulling toward its own shard after every sync, which is NOT the E-step
+    server-side FedAvg recurrence (asserted against the hand-rolled
+    reference in tests/test_optim.py).
     """
 
     def __init__(self, schedule, local_steps: int = 1, mu: float = 0.0, **kw):
@@ -473,10 +598,17 @@ class FedAvg(DistributedOptimizer):
             lambda vi, g: (self.mu * vi - alpha * g.astype(vi.dtype)).astype(vi.dtype),
             v, grads)
         local = jax.tree.map(lambda x, nv: (x + nv).astype(x.dtype), params, new_v)
+
+        def sync(args):
+            p, vv = args
+            # mu == 0: v is identically -alpha g, already consumed — skip
+            # the second collective
+            return comm.mean(p), (comm.mean(vv) if self.mu else vv)
+
+        if self.local_steps <= 1:
+            return sync((local, new_v))
         do_avg = (step + 1) % self.local_steps == 0
-        avg = comm.mean(local)
-        new_params = jax.tree.map(lambda a, b: jnp.where(do_avg, a, b), avg, local)
-        return new_params, new_v
+        return lax.cond(do_avg, sync, lambda args: args, (local, new_v))
 
     @property
     def uses_consensus(self):

@@ -28,8 +28,14 @@ from repro.core.consensus import (
     consensus_error_pytree,
     exchange_bytes_per_step,
     make_mixing_program,
+    mean_exchange_bytes_per_step,
 )
-from repro.core.optim import CommOps, DistributedOptimizer, stacked_comm_ops
+from repro.core.optim import (
+    CommOps,
+    DistributedOptimizer,
+    FedAvg,
+    stacked_comm_ops,
+)
 from repro.core.topology import Topology, TopologySchedule, make_topology_schedule
 from repro.utils.metrics import MetricHistory
 
@@ -87,8 +93,12 @@ class CollaborativeTrainer:
     :class:`repro.core.topology.TopologySchedule` or a factory spec like
     ``"alternating:ring:torus"`` / ``"gossip:8"``), and
     ``error_feedback=True`` carries quantization residuals in the
-    optimizer state.  Everything validates at construction; non-trivial
-    programs require a ``fused=True`` consensus optimizer.
+    optimizer state, and ``momentum_mixing="mixed"`` puts the momentum
+    buffer on the wire next to the params (``v' = mu (Pi v) - a g``,
+    2010.11166 — the principled fix for the momentum/quantization
+    large-lr instability; 2x the wire bytes, momentum-capable optimizers
+    only).  Everything validates at construction; non-trivial programs
+    require a ``fused=True`` consensus optimizer.
     """
 
     def __init__(
@@ -108,6 +118,7 @@ class CollaborativeTrainer:
         consensus_rounds: int = 1,
         topology_schedule=None,           # TopologySchedule | factory spec str
         error_feedback: bool = False,
+        momentum_mixing: str = "none",
     ):
         self.loss_fn = loss_fn
         self.topology = topology
@@ -131,7 +142,8 @@ class CollaborativeTrainer:
         self.program: MixingProgram = make_mixing_program(
             topology_schedule if topology_schedule is not None else topology,
             strategy=mixing_strategy, rounds=consensus_rounds,
-            error_feedback=error_feedback, exchange=exchange)
+            error_feedback=error_feedback, exchange=exchange,
+            momentum_mixing=momentum_mixing)
         self.comm: CommOps = stacked_comm_ops(topology, interpret=interpret,
                                               exchange=exchange,
                                               program=self.program)
@@ -156,14 +168,23 @@ class CollaborativeTrainer:
         # per-step neighbor-exchange cost of the fused flat path (estimate;
         # train_loop reports the cumulative figure alongside steps/sec).
         # k consensus rounds move exactly k x the single-round bytes; a
-        # time-varying schedule amortizes its period-mean degree.
+        # time-varying schedule amortizes its period-mean degree; momentum
+        # mixing doubles the payload trees per transfer.  FedAvg pays a
+        # whole-model all-reduce once per local_steps (the collective is
+        # gated on the sync step), amortized here as bytes/E per step.
         self.wire_bytes_per_step = 0
         if optimizer.uses_consensus:
             self.wire_bytes_per_step = exchange_bytes_per_step(
                 flatbuf.make_flat_spec(stacked, lead=1),
                 self.program.schedule if not self.program.schedule.is_static
                 else topology,
-                exchange, rounds=self.program.rounds)["per_step_bytes"]
+                exchange, rounds=self.program.rounds,
+                payloads=self.program.n_payloads)["per_step_bytes"]
+        elif isinstance(optimizer, FedAvg):
+            self.wire_bytes_per_step = mean_exchange_bytes_per_step(
+                flatbuf.make_flat_spec(stacked, lead=1), topology.n_agents,
+                period=optimizer.local_steps,
+                payloads=2 if optimizer.mu else 1)["per_step_bytes"]
 
     def _make_eval(self):
         loss_fn = self.loss_fn

@@ -230,6 +230,22 @@ def _cdmsgd_kernel_q(w, a, m, slf, nbrs, scales, grad, mom, out, nmom,
                  n_stencil=n_stencil)
 
 
+def _cdmsgd_kernel_qm(w, a, m, slf, nbrs, scales, vnbrs, vscales, grad, mom,
+                      out, nmom, *, n_stencil):
+    """Mixed-momentum CDMSGD: ``v' = mu (Pi v) - a g ; x' = Pi x + v'``.
+
+    The momentum buffer rode the wire next to the params, so both mixing
+    sums share the same self-separated weights; the local momentum operand
+    ``mom`` is the momentum SELF tile (fresh, full precision — it never
+    crossed the wire), mixed at ``weights[0]`` exactly like the params.
+    """
+    vmix = _mix_stencil(w, vnbrs, vscales, mom, n_stencil, out.shape)
+    v = m[0] * vmix - a[0] * grad[...].astype(jnp.float32)
+    acc = _mix_stencil(w, nbrs, scales, slf, n_stencil, out.shape)
+    out[...] = (acc + v).astype(out.dtype)
+    nmom[...] = v.astype(nmom.dtype)
+
+
 def _cdmsgd_nesterov_body(w_ref, alpha_ref, mu_ref, nbrs_ref, scales_ref,
                           self_ref, grad_ref, mom_ref, out_ref, new_mom_ref,
                           look_ref, *, n_stencil: int):
@@ -260,6 +276,20 @@ def _cdmsgd_nesterov_kernel_q(w, a, m, slf, nbrs, scales, grad, mom, out,
                               nmom, look, *, n_stencil):
     _cdmsgd_nesterov_body(w, a, m, nbrs, scales, slf, grad, mom, out, nmom,
                           look, n_stencil=n_stencil)
+
+
+def _cdmsgd_nesterov_kernel_qm(w, a, m, slf, nbrs, scales, vnbrs, vscales,
+                               grad, mom, out, nmom, look, *, n_stencil):
+    """Mixed-momentum Nesterov: the momentum mix feeds both the update and
+    the emitted lookahead ``x' + mu v'`` in the same sweep."""
+    mu = m[0]
+    vmix = _mix_stencil(w, vnbrs, vscales, mom, n_stencil, out.shape)
+    v = mu * vmix - a[0] * grad[...].astype(jnp.float32)
+    acc = _mix_stencil(w, nbrs, scales, slf, n_stencil, out.shape)
+    x = acc + v
+    out[...] = x.astype(out.dtype)
+    nmom[...] = v.astype(nmom.dtype)
+    look[...] = (x + mu * v).astype(look.dtype)
 
 
 def _cdadam_body(w_ref, scal_ref, nbrs_ref, scales_ref, self_ref, grad_ref,
@@ -293,6 +323,22 @@ def _cdadam_kernel_q(w, sc, slf, nbrs, scales, grad, m, v, out, nm, nv,
                  n_stencil=n_stencil)
 
 
+def _cdadam_kernel_qm(w, scal, slf, nbrs, scales, mnbrs, mscales, grad, m, v,
+                      out, nm, nv, *, n_stencil):
+    """Mixed-momentum CDAdam: ``m' = b1 (Pi m) + (1-b1) g``; the second
+    moment stays local (a positive scale, not a direction)."""
+    alpha, b1, b2, eps, bc1, bc2 = (scal[i] for i in range(6))
+    g = grad[...].astype(jnp.float32)
+    mmix = _mix_stencil(w, mnbrs, mscales, m, n_stencil, out.shape)
+    new_m = b1 * mmix + (1.0 - b1) * g
+    new_v = b2 * v[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    acc = _mix_stencil(w, nbrs, scales, slf, n_stencil, out.shape)
+    step_dir = (new_m / bc1) / (jnp.sqrt(new_v / bc2) + eps)
+    out[...] = (acc - alpha * step_dir).astype(out.dtype)
+    nm[...] = new_m.astype(nm.dtype)
+    nv[...] = new_v.astype(nv.dtype)
+
+
 def _grid_and_specs(rows: int, block_rows: int, n_stencil: int):
     grid = (pl.cdiv(rows, block_rows),)
     nbr_spec = pl.BlockSpec((n_stencil, block_rows, LANE), lambda i: (0, i, 0))
@@ -307,15 +353,27 @@ def _aliases(enabled: bool, pairs):
 
 
 def _mix_operands(quantized, s, nbr_spec, scale_spec, mat_spec,
-                  neighbors, scales, self_buf):
-    """Mixing operand group: ``[self,] neighbors [, scales]``.
+                  neighbors, scales, self_buf,
+                  mom_neighbors=None, mom_scales=None):
+    """Mixing operand group: ``[self,] neighbors [, scales] [, momentum]``.
 
     Quantized form: ``neighbors (S, rows, 128)`` int8/fp8 are the wire
     payloads only; the native-precision ``self_buf`` rides separately at
     ``weights[0]`` (it never crossed the wire, so it is never quantized).
     Unquantized form: ``neighbors`` includes the self tile, no extras.
-    Returns ``(in_specs, args, n_weights)``.
+    Mixed-momentum form (``mom_neighbors`` given — always the wire-operand
+    form, since the staged engine carries unit scales even for f32 wires):
+    the momentum payload's ``(S, rows, 128)`` stack + scales follow the
+    params'; the momentum SELF tile is the kernels' existing ``momentum``
+    operand, so it adds no operand here.  Returns ``(in_specs, args,
+    n_weights)``.
     """
+    if mom_neighbors is not None:
+        assert quantized and self_buf is not None and scales.shape[0] == s
+        assert mom_neighbors.shape == neighbors.shape
+        return ([mat_spec, nbr_spec, scale_spec, nbr_spec, scale_spec],
+                [self_buf, neighbors, scales, mom_neighbors, mom_scales],
+                s + 1)
     if not quantized:
         return [nbr_spec], [neighbors], s
     assert self_buf is not None and scales.shape[0] == s
@@ -375,18 +433,26 @@ def cdmsgd_update_2d(
     *,
     scales: jnp.ndarray = None,
     self_buf: jnp.ndarray = None,
+    mom_neighbors: jnp.ndarray = None,   # (S, rows, 128) momentum wire payloads
+    mom_scales: jnp.ndarray = None,      # (S, rows, 1) momentum row scales
     block_rows: int = DEFAULT_BLOCK_ROWS,
     alias: bool = True,
     interpret: bool = False,
 ):
+    """``mom_neighbors`` (+ ``mom_scales``) selects the mixed-momentum form
+    ``v' = mu (Pi v) - a g``: the momentum buffer crossed the wire like the
+    params and ``momentum`` becomes its fresh full-precision self tile."""
     s, rows, lane = neighbors.shape
     block_rows = min(block_rows, rows)
     grid, nbr_spec, scale_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
     quantized = scales is not None
+    mixed = mom_neighbors is not None
     kernel = functools.partial(
+        _cdmsgd_kernel_qm if mixed else
         _cdmsgd_kernel_q if quantized else _cdmsgd_kernel, n_stencil=s)
     mix_specs, mix_args, n_w = _mix_operands(
-        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales, self_buf)
+        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales,
+        self_buf, mom_neighbors, mom_scales)
     in_specs = [
         pl.BlockSpec((n_w,), lambda i: (0,)),      # weights
         pl.BlockSpec((1,), lambda i: (0,)),        # alpha
@@ -421,6 +487,8 @@ def cdmsgd_nesterov_update_2d(
     *,
     scales: jnp.ndarray = None,
     self_buf: jnp.ndarray = None,
+    mom_neighbors: jnp.ndarray = None,
+    mom_scales: jnp.ndarray = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     alias: bool = True,
     interpret: bool = False,
@@ -428,17 +496,21 @@ def cdmsgd_nesterov_update_2d(
     """Returns ``(x', v', x' + mu v')`` — params, momentum, next lookahead.
 
     ``grad`` donates to ``x'`` and ``momentum`` to ``v'``; the lookahead is
-    the one genuinely new buffer of the step.
+    the one genuinely new buffer of the step.  ``mom_neighbors`` selects
+    the mixed-momentum form (see :func:`cdmsgd_update_2d`).
     """
     s, rows, lane = neighbors.shape
     block_rows = min(block_rows, rows)
     grid, nbr_spec, scale_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
     quantized = scales is not None
+    mixed = mom_neighbors is not None
     kernel = functools.partial(
+        _cdmsgd_nesterov_kernel_qm if mixed else
         _cdmsgd_nesterov_kernel_q if quantized else _cdmsgd_nesterov_kernel,
         n_stencil=s)
     mix_specs, mix_args, n_w = _mix_operands(
-        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales, self_buf)
+        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales,
+        self_buf, mom_neighbors, mom_scales)
     in_specs = [
         pl.BlockSpec((n_w,), lambda i: (0,)),      # weights
         pl.BlockSpec((1,), lambda i: (0,)),        # alpha
@@ -479,21 +551,28 @@ def cdadam_update_2d(
     *,
     scales: jnp.ndarray = None,
     self_buf: jnp.ndarray = None,
+    mom_neighbors: jnp.ndarray = None,   # first-moment wire payloads (mixed)
+    mom_scales: jnp.ndarray = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     alias: bool = True,
     interpret: bool = False,
 ):
-    """Returns ``(x', m', v')`` — mixed params with a local-Adam step."""
+    """Returns ``(x', m', v')`` — mixed params with a local-Adam step.
+    ``mom_neighbors`` mixes the first moment over the wire too
+    (``m' = b1 (Pi m) + (1-b1) g``); ``m`` is then its fresh self tile."""
     s, rows, lane = neighbors.shape
     block_rows = min(block_rows, rows)
     grid, nbr_spec, scale_spec, mat_spec = _grid_and_specs(rows, block_rows, s)
     quantized = scales is not None
+    mixed = mom_neighbors is not None
     kernel = functools.partial(
+        _cdadam_kernel_qm if mixed else
         _cdadam_kernel_q if quantized else _cdadam_kernel, n_stencil=s)
     scal = jnp.stack([jnp.asarray(x, jnp.float32) for x in
                       (alpha, b1, b2, eps, bc1, bc2)])
     mix_specs, mix_args, n_w = _mix_operands(
-        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales, self_buf)
+        quantized, s, nbr_spec, scale_spec, mat_spec, neighbors, scales,
+        self_buf, mom_neighbors, mom_scales)
     in_specs = [
         pl.BlockSpec((n_w,), lambda i: (0,)),      # weights
         pl.BlockSpec((6,), lambda i: (0,)),        # packed scalars

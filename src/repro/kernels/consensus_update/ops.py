@@ -87,8 +87,16 @@ def cdsgd_update_flat(neighbors, weights, grad, alpha, *, scales=None,
 
 
 def cdmsgd_update_flat(neighbors, weights, grad, momentum, alpha, mu, *,
-                       scales=None, self_buf=None, interpret: bool = True):
+                       scales=None, self_buf=None, mom_neighbors=None,
+                       mom_scales=None, interpret: bool = True):
     if weights.ndim == 2:
+        if mom_neighbors is not None:
+            # mixed momentum: the per-agent momentum row is the momentum
+            # SELF tile; the shared wire stacks carry everyone's payloads
+            return jax.vmap(lambda w, sb, g, v: cdmsgd_update_2d(
+                neighbors, w, g, v, alpha, mu, scales=scales, self_buf=sb,
+                mom_neighbors=mom_neighbors, mom_scales=mom_scales,
+                interpret=interpret))(weights, self_buf, grad, momentum)
         if scales is not None:
             return jax.vmap(lambda w, sb, g, v: cdmsgd_update_2d(
                 neighbors, w, g, v, alpha, mu, scales=scales, self_buf=sb,
@@ -98,13 +106,20 @@ def cdmsgd_update_flat(neighbors, weights, grad, momentum, alpha, mu, *,
             interpret=interpret))(weights, grad, momentum)
     return cdmsgd_update_2d(neighbors, weights, grad, momentum, alpha, mu,
                             scales=scales, self_buf=self_buf,
-                            interpret=interpret)
+                            mom_neighbors=mom_neighbors,
+                            mom_scales=mom_scales, interpret=interpret)
 
 
 def cdmsgd_nesterov_update_flat(neighbors, weights, grad, momentum, alpha, mu,
                                 *, scales=None, self_buf=None,
+                                mom_neighbors=None, mom_scales=None,
                                 interpret: bool = True):
     if weights.ndim == 2:
+        if mom_neighbors is not None:
+            return jax.vmap(lambda w, sb, g, v: cdmsgd_nesterov_update_2d(
+                neighbors, w, g, v, alpha, mu, scales=scales, self_buf=sb,
+                mom_neighbors=mom_neighbors, mom_scales=mom_scales,
+                interpret=interpret))(weights, self_buf, grad, momentum)
         if scales is not None:
             return jax.vmap(lambda w, sb, g, v: cdmsgd_nesterov_update_2d(
                 neighbors, w, g, v, alpha, mu, scales=scales, self_buf=sb,
@@ -114,13 +129,23 @@ def cdmsgd_nesterov_update_flat(neighbors, weights, grad, momentum, alpha, mu,
             interpret=interpret))(weights, grad, momentum)
     return cdmsgd_nesterov_update_2d(neighbors, weights, grad, momentum,
                                      alpha, mu, scales=scales,
-                                     self_buf=self_buf, interpret=interpret)
+                                     self_buf=self_buf,
+                                     mom_neighbors=mom_neighbors,
+                                     mom_scales=mom_scales,
+                                     interpret=interpret)
 
 
 def cdadam_update_flat(neighbors, weights, grad, m, v, alpha, b1, b2, eps,
                        bc1, bc2, *, scales=None, self_buf=None,
+                       mom_neighbors=None, mom_scales=None,
                        interpret: bool = True):
     if weights.ndim == 2:
+        if mom_neighbors is not None:
+            return jax.vmap(lambda w, sb, g, mi, vi: cdadam_update_2d(
+                neighbors, w, g, mi, vi, alpha, b1, b2, eps, bc1, bc2,
+                scales=scales, self_buf=sb, mom_neighbors=mom_neighbors,
+                mom_scales=mom_scales, interpret=interpret))(
+                    weights, self_buf, grad, m, v)
         if scales is not None:
             return jax.vmap(lambda w, sb, g, mi, vi: cdadam_update_2d(
                 neighbors, w, g, mi, vi, alpha, b1, b2, eps, bc1, bc2,
@@ -131,7 +156,8 @@ def cdadam_update_flat(neighbors, weights, grad, m, v, alpha, b1, b2, eps,
             interpret=interpret))(weights, grad, m, v)
     return cdadam_update_2d(neighbors, weights, grad, m, v, alpha, b1, b2,
                             eps, bc1, bc2, scales=scales, self_buf=self_buf,
-                            interpret=interpret)
+                            mom_neighbors=mom_neighbors,
+                            mom_scales=mom_scales, interpret=interpret)
 
 
 # --------------------------------------------------------------------------

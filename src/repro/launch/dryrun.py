@@ -35,7 +35,8 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
            context_parallel: bool = False, fused: bool = False,
            exchange: str = "f32", schedule: str = "sync",
            mixing_strategy: str = "static", consensus_rounds: int = 1,
-           topology_schedule=None, error_feedback: bool = False):
+           topology_schedule=None, error_feedback: bool = False,
+           momentum_mixing: str = "none"):
     import jax
     from repro.configs import get_config, INPUT_SHAPES
     from repro.core.optim import make_optimizer
@@ -58,7 +59,8 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
             cfg, shape, mesh, opt, mode=mode, topology_name=topology, mixing=mixing,
             microbatches=microbatches, exchange=exchange, schedule=schedule,
             mixing_strategy=mixing_strategy, consensus_rounds=consensus_rounds,
-            topology_schedule=topology_schedule, error_feedback=error_feedback)
+            topology_schedule=topology_schedule, error_feedback=error_feedback,
+            momentum_mixing=momentum_mixing)
         params = bundle.param_structs(mesh)
         opt_state = bundle.opt_state_structs(mesh, opt)
         args = (params, opt_state, bundle.batch_specs)
@@ -85,7 +87,8 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
              context_parallel: bool = False, fused: bool = False,
              exchange: str = "f32", schedule: str = "sync",
              mixing_strategy: str = "static", consensus_rounds: int = 1,
-             topology_schedule=None, error_feedback: bool = False):
+             topology_schedule=None, error_feedback: bool = False,
+             momentum_mixing: str = "none"):
     import jax
     from repro.analysis.hlo import analyze_hlo
     from repro.analysis.roofline import model_flops, roofline_from_stats
@@ -100,7 +103,8 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                          mixing_strategy=mixing_strategy,
                          consensus_rounds=consensus_rounds,
                          topology_schedule=topology_schedule,
-                         error_feedback=error_feedback)
+                         error_feedback=error_feedback,
+                         momentum_mixing=momentum_mixing)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
               "mixing": mixing, "topology": topology, "optimizer": optimizer_name,
               "microbatches": microbatches, "exchange": exchange,
@@ -126,19 +130,22 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                   f"mixing={mixing!r} fused={fused} — reporting native bytes")
         program = bundle.mixing_program
         rounds = program.rounds if program is not None else 1
+        payloads = program.n_payloads if program is not None else 1
         wire_topo = bundle.topology
         if program is not None and not program.schedule.is_static:
             wire_topo = program.schedule
             record["topology_schedule"] = program.schedule.diagnostics(rounds)
         if program is not None:
-            # k rounds => k x exchange_bytes; error feedback adds 0 wire
-            # bytes (the residual is local optimizer state)
+            # k rounds => k x exchange_bytes; momentum mixing doubles the
+            # payload trees; error feedback adds 0 wire bytes (the residual
+            # is local optimizer state)
             record["mixing_program"] = program.describe()
         record["exchange_bytes_per_step"] = consensus_lib.exchange_bytes_per_step(
-            flatbuf.make_flat_spec(args[0], lead=1), wire_topo, live, rounds)
+            flatbuf.make_flat_spec(args[0], lead=1), wire_topo, live, rounds,
+            payloads)
         if verbose:
             print(f"[dryrun] {label} " + consensus_lib.describe_exchange_cost(
-                args[0], wire_topo, live, rounds=rounds))
+                args[0], wire_topo, live, rounds=rounds, payloads=payloads))
         # which step inputs reach the collective exchange (the overlap
         # schedule's proof: ppermutes consume only carried wire state, so
         # they are off the grad->update critical path)
@@ -249,6 +256,11 @@ def main() -> int:
     ap.add_argument("--error-feedback", action="store_true",
                     help="EF residuals for quantized exchanges (0 extra "
                          "wire bytes; residual state rides the opt state)")
+    ap.add_argument("--momentum-mixing", default="none",
+                    choices=["none", "mixed"],
+                    help="'mixed': the momentum buffer rides the wire and "
+                         "mixes with the same Pi (2010.11166); the record's "
+                         "exchange_bytes_per_step doubles (payloads=2)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     ap.add_argument("--no-analyze", action="store_true")
@@ -277,7 +289,8 @@ def main() -> int:
                        mixing_strategy=args.mixing_strategy,
                        consensus_rounds=args.consensus_rounds,
                        topology_schedule=args.topology_schedule,
-                       error_feedback=args.error_feedback)
+                       error_feedback=args.error_feedback,
+                       momentum_mixing=args.momentum_mixing)
         if str(rec.get("status", "")).startswith("FAIL"):
             failures += 1
     print(f"[dryrun] done: {len(pairs)} pairs, {failures} failures")

@@ -37,9 +37,13 @@ strategy** (:class:`repro.core.consensus.MixingProgram`, see
 ARCHITECTURE.md §mixing strategies): ``mixing_strategy`` /
 ``topology_schedule`` select time-varying ``Pi_t`` (one ``lax.switch``
 branch of ppermutes per schedule entry), ``consensus_rounds`` the inner
-i-CDSGD round count (k x the wire bytes), and ``error_feedback`` the
+i-CDSGD round count (k x the wire bytes), ``error_feedback`` the
 quantization-residual state riding ``OptState.residual`` (sharded like
-the wire buffers, initialized inside ``shard_map``).  The fused kernels also alias their
+the wire buffers, initialized inside ``shard_map``), and
+``momentum_mixing="mixed"`` the widened two-payload wire (the momentum
+buffer mixes with the same ``Pi``; wire/residual state and ppermute
+count double — one wire pair and one EF residual per bucket per
+payload).  The fused kernels also alias their
 gradient/state inputs to their outputs (``input_output_aliases``); jit the
 returned ``step_fn`` with ``donate_argnums=TrainStepBundle.donate_argnums``
 to let params, momentum, and Adam moments update in place (saving roughly
@@ -222,6 +226,7 @@ def build_train_step(
     consensus_rounds: int = 1,    # inner i-CDSGD rounds per step (fused path)
     topology_schedule: Optional[str] = None,  # TopologySchedule factory spec
     error_feedback: bool = False,  # EF residuals for quantized exchanges
+    momentum_mixing: str = "none",  # "mixed": momentum rides the wire too
 ) -> TrainStepBundle:
     rules = shlib.rules_for_mode(mode, mesh)
     n_agents = shlib.agent_count(mesh, mode)
@@ -232,7 +237,8 @@ def build_train_step(
     program = consensus_lib.make_mixing_program(
         sched_obj if sched_obj is not None else topology,
         strategy=mixing_strategy, rounds=consensus_rounds,
-        error_feedback=error_feedback, exchange=exchange)
+        error_feedback=error_feedback, exchange=exchange,
+        momentum_mixing=momentum_mixing)
     if not program.is_trivial and mixing != "ppermute_fused":
         raise ValueError(
             f"mixing strategy {program.strategy!r} (rounds={program.rounds}, "
@@ -274,7 +280,9 @@ def build_train_step(
     state_sp = P(rules["agent"], other_axes or None, None)
 
     def _n_buckets():
-        return flatbuf.make_flat_spec(
+        # one wire/residual entry per flat bucket per payload tree — the
+        # mixed momentum payload mirrors the param buckets one-for-one
+        return program.n_payloads * flatbuf.make_flat_spec(
             jax.tree.map(lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype),
                          template,
                          is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init")),
@@ -282,8 +290,9 @@ def build_train_step(
 
     if program.error_feedback:
         # EF residuals ride the optimizer state like the wire buffers do:
-        # one f32 buffer per flat bucket, rows sharded over the non-agent
-        # mesh axes (shard-local flat layout), initialized inside shard_map.
+        # one f32 buffer per flat bucket per payload, rows sharded over the
+        # non-agent mesh axes (shard-local flat layout), initialized inside
+        # shard_map.
         residual_specs = tuple(state_sp for _ in range(_n_buckets()))
         opt_specs = opt_specs._replace(residual=residual_specs)
         local_residual_init = engine.make_local_residual_init(comm.flat)

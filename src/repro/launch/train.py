@@ -60,10 +60,20 @@ def main() -> None:
                     help="carry quantization residuals in the optimizer "
                          "state and compress residual+payload (int8/fp8 "
                          "exchanges only; adds 0 wire bytes)")
+    ap.add_argument("--momentum-mixing", default="none",
+                    choices=["none", "mixed"],
+                    help="'mixed' puts the momentum buffer on the wire and "
+                         "mixes it with the same Pi (v' = mu Pi v - a g, "
+                         "2010.11166) — stabilizes quantized exchanges at "
+                         "large lr; 2x wire bytes; momentum optimizers only "
+                         "(implies --fused)")
     ap.add_argument("--microbatch", type=int, default=1,
                     help="gradient-accumulation microbatches per step")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="FedAvg E: local steps between (gated) all-reduce "
+                         "sync averages; wire accounting reports bytes/E")
     ap.add_argument("--lr-schedule", default="fixed", choices=["fixed", "diminishing"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
@@ -97,6 +107,8 @@ def main() -> None:
     kw = {}
     if args.optimizer in ("cdmsgd", "cdmsgd_nesterov", "msgd", "fedavg"):
         kw["mu"] = args.momentum
+    if args.optimizer == "fedavg":
+        kw["local_steps"] = args.local_steps
     if args.exchange != "f32" and not args.fused:
         # the exchange knob lives on the fused flat-buffer path
         print(f"[train] --exchange {args.exchange} implies --fused; enabling")
@@ -106,7 +118,8 @@ def main() -> None:
         print("[train] --schedule overlap implies --fused; enabling")
         args.fused = True
     nontrivial_mixing = (args.mixing_strategy != "static"
-                         or args.consensus_rounds > 1 or args.error_feedback)
+                         or args.consensus_rounds > 1 or args.error_feedback
+                         or args.momentum_mixing != "none")
     if nontrivial_mixing and not args.fused:
         # the strategy layer lives on the fused flat-buffer path
         print("[train] non-static mixing strategy implies --fused; enabling")
@@ -131,7 +144,8 @@ def main() -> None:
                                    mixing_strategy=args.mixing_strategy,
                                    consensus_rounds=args.consensus_rounds,
                                    topology_schedule=args.topology_schedule,
-                                   error_feedback=args.error_feedback)
+                                   error_feedback=args.error_feedback,
+                                   momentum_mixing=args.momentum_mixing)
 
     from repro.core.consensus import describe_exchange_cost
     program = trainer.program
@@ -142,10 +156,19 @@ def main() -> None:
             print(f"[train] schedule effective gap "
                   f"{d['effective_gap']:.4f} (per-matrix "
                   f"{['%.4f' % g for g in d['per_matrix_gap']]})")
-    print("[train] " + describe_exchange_cost(
-        trainer.state.params,
-        program.schedule if not program.schedule.is_static else topo,
-        args.exchange, rounds=program.rounds))
+    if args.optimizer == "fedavg":
+        # FedAvg moves no neighbor traffic — its cost is the whole-model
+        # all-reduce once per E sync steps (gated; amortized bytes/E)
+        print(f"[train] fedavg all-reduce: {trainer.wire_bytes_per_step:,} "
+              f"bytes/agent/step amortized (sync every "
+              f"{opt.local_steps} steps"
+              + (", params + momentum averaged" if opt.mu else "") + ")")
+    else:
+        print("[train] " + describe_exchange_cost(
+            trainer.state.params,
+            program.schedule if not program.schedule.is_static else topo,
+            args.exchange, rounds=program.rounds,
+            payloads=program.n_payloads))
     tokens = make_lm_tokens(1 << 15, vocab=cfg.vocab_size, seed=args.seed)
     batches = lm_agent_batches(tokens, args.agents, args.batch, args.seq, seed=args.seed)
 

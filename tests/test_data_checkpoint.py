@@ -171,3 +171,71 @@ def test_train_state_restore_rejects_missing_wire(tmp_path):
                                jnp.ones((4, 1, 1), jnp.float32)),))
     with pytest.raises(KeyError):
         restore_train_state(d, params, stateful)
+
+
+def test_train_state_roundtrip_momentum_mixed_wire_bit_exact(tmp_path):
+    """The ISSUE-5 widened wire contract round-trips: with
+    momentum_mixing="mixed" + overlap + EF the OptState carries TWO wire
+    payload trees (params + momentum int8 payloads, scales) and one
+    residual per bucket per payload — save -> restore -> step must equal
+    the continuous run bit-for-bit."""
+    import functools
+    from repro.checkpoint import restore_train_state, save_train_state
+    from repro.core import flatbuf
+    from repro.core.optim import CDMSGD
+    from repro.core.topology import make_topology
+    from repro.core.trainer import CollaborativeTrainer, TrainState
+    from repro.nn.paper_models import (classifier_loss, mlp_classifier_apply,
+                                       mlp_classifier_template)
+    from repro.nn.param import init_params
+
+    loss = functools.partial(classifier_loss, mlp_classifier_apply)
+    params = init_params(mlp_classifier_template(8, 4, width=16, depth=2),
+                         jax.random.PRNGKey(0))
+    topo = make_topology("ring", 4)
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.standard_normal((4, 8, 8)), jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 4, (4, 8)), jnp.int32)}
+
+    def make_trainer():
+        return CollaborativeTrainer(
+            loss, params, topo, CDMSGD(5e-3, mu=0.9, fused=True),
+            schedule="overlap", exchange="int8", error_feedback=True,
+            momentum_mixing="mixed", donate=False)
+
+    tr = make_trainer()
+    spec = flatbuf.make_flat_spec(tr.state.params, lead=1)
+    # the widened state: both payloads' wire pairs + per-payload residuals
+    assert len(tr.state.opt_state.wire) == 2 * spec.n_buckets
+    assert len(tr.state.opt_state.residual) == 2 * spec.n_buckets
+    for _ in range(3):
+        tr.step(batch)
+    d = str(tmp_path / "ckpt")
+    save_train_state(d, tr.state.step, tr.state.params, tr.state.opt_state)
+
+    tr2 = make_trainer()
+    p0, o0 = restore_train_state(d, tr2.state.params, tr2.state.opt_state)
+    tr2.state = TrainState(params=p0, opt_state=o0, step=int(o0.step))
+    for a, b in zip(jax.tree.leaves(tr.state.opt_state.wire),
+                    jax.tree.leaves(tr2.state.opt_state.wire)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m1 = tr.step(batch)
+    m2 = tr2.step(batch)
+    assert m1["loss"] == m2["loss"]
+    for tree in ("params",):
+        for a, b in zip(jax.tree.leaves(getattr(tr.state, tree)),
+                        jax.tree.leaves(getattr(tr2.state, tree))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(tr.state.opt_state.residual),
+                    jax.tree.leaves(tr2.state.opt_state.residual)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a narrower (params-only-payload) checkpoint cannot silently restore
+    # into the widened trainer: structure mismatch fails loudly
+    tr3 = CollaborativeTrainer(
+        loss, params, topo, CDMSGD(5e-3, mu=0.9, fused=True),
+        schedule="overlap", exchange="int8", donate=False)
+    d2 = str(tmp_path / "ckpt_narrow")
+    save_train_state(d2, tr3.state.step, tr3.state.params,
+                     tr3.state.opt_state)
+    with pytest.raises((KeyError, ValueError)):
+        restore_train_state(d2, tr2.state.params, tr2.state.opt_state)

@@ -383,3 +383,336 @@ def test_dependency_report_has_round_fields():
     assert rep["n_ppermutes_carried_only"] == 0
     assert rep["n_ppermutes_fresh"] == 0
     assert not rep["round1_off_critical_path"]
+
+
+# -------------------------------------------------------------------------
+# Momentum-consensus mixing (ISSUE 5 tentpole): v rides the wire
+# -------------------------------------------------------------------------
+
+
+def test_momentum_mixing_validation():
+    params, topo, _ = _testbed()
+    with pytest.raises(ValueError, match="momentum_mixing"):
+        C.make_mixing_program(topo, momentum_mixing="both")
+    # CDSGD has no momentum buffer to mix
+    with pytest.raises(ValueError, match="mixable momentum"):
+        CollaborativeTrainer(LOSS, params, topo, CDSGD(5e-3, fused=True),
+                             momentum_mixing="mixed")
+    # the strategy layer needs the fused staged path
+    with pytest.raises(ValueError, match="fused"):
+        CollaborativeTrainer(LOSS, params, topo, CDMSGD(5e-3, fused=False),
+                             momentum_mixing="mixed")
+    p = C.make_mixing_program(topo, momentum_mixing="mixed")
+    assert not p.is_trivial and p.n_payloads == 2
+
+
+def test_momentum_mixed_matches_dense_reference():
+    """f32 wire (deterministic): the full trainer's momentum-mixed CDMSGD
+    step must equal the dense reference ``v' = mu (Pi v) - a g ;
+    x' = Pi x + v'`` (2010.11166) — vs plain CDMSGD's ``v' = mu v - a g``."""
+    A, D = N_AGENTS, 300
+    topo = make_topology("ring", A)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (A, D))}
+
+    def loss(p, b):
+        return 0.5 * jnp.sum(p["w"] ** 2), {}
+
+    tr = CollaborativeTrainer(loss, params, topo,
+                              CDMSGD(0.05, mu=0.9, fused=True),
+                              stack=False, momentum_mixing="mixed")
+    batch = {"x": jnp.zeros((A, 1))}
+    pi = np.asarray(topo.pi, np.float64)
+    x = np.asarray(params["w"], np.float64)
+    v = np.zeros_like(x)
+    for _ in range(4):
+        tr.step(batch)
+        v = 0.9 * (pi @ v) - 0.05 * x
+        x = pi @ x + v
+        np.testing.assert_allclose(np.asarray(tr.state.params["w"]), x,
+                                   rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tr.state.opt_state.inner["w"]), v,
+                               rtol=0, atol=1e-5)
+
+
+def test_momentum_mixed_multi_round_matches_dense_power():
+    """rounds=2 composes: both payloads mix through Pi^2 before the fused
+    final round (``v' = mu Pi^2 v - a g ; x' = Pi^2 x + v'``)."""
+    A, D = N_AGENTS, 200
+    topo = make_topology("ring", A)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(1), (A, D))}
+
+    def loss(p, b):
+        return 0.5 * jnp.sum(p["w"] ** 2), {}
+
+    tr = CollaborativeTrainer(loss, params, topo,
+                              CDMSGD(0.05, mu=0.9, fused=True),
+                              stack=False, momentum_mixing="mixed",
+                              consensus_rounds=2)
+    batch = {"x": jnp.zeros((A, 1))}
+    pi2 = np.linalg.matrix_power(np.asarray(topo.pi, np.float64), 2)
+    x = np.asarray(params["w"], np.float64)
+    v = np.zeros_like(x)
+    for _ in range(3):
+        tr.step(batch)
+        v = 0.9 * (pi2 @ v) - 0.05 * x
+        x = pi2 @ x + v
+    np.testing.assert_allclose(np.asarray(tr.state.params["w"]), x,
+                               rtol=0, atol=1e-5)
+
+
+def test_momentum_mixed_nesterov_and_cdadam_match_reference():
+    """The other two momentum-capable fused kernels' mixed forms, vs dense
+    references: Nesterov evaluates g at the lookahead; CDAdam mixes the
+    FIRST moment only (the second stays a local positive scale)."""
+    from repro.core.optim import CDAdam, CDMSGDNesterov
+    A, D = N_AGENTS, 200
+    topo = make_topology("ring", A)
+    pi = np.asarray(topo.pi, np.float64)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(2), (A, D))}
+    batch = {"x": jnp.zeros((A, 1))}
+
+    def loss(p, b):
+        return 0.5 * jnp.sum(p["w"] ** 2), {}
+
+    # Nesterov: g_t = lookahead_t (for this loss), v' = mu Pi v - a g
+    # donate=False: fused Nesterov's initial lookahead aliases params, and
+    # donating both to the jitted step would hand XLA one buffer twice
+    tr = CollaborativeTrainer(loss, params, topo,
+                              CDMSGDNesterov(0.05, mu=0.9, fused=True),
+                              stack=False, momentum_mixing="mixed",
+                              donate=False)
+    x = np.asarray(params["w"], np.float64)
+    v = np.zeros_like(x)
+    look = x.copy()
+    for _ in range(3):
+        tr.step(batch)
+        v = 0.9 * (pi @ v) - 0.05 * look
+        x = pi @ x + v
+        look = x + 0.9 * v
+    np.testing.assert_allclose(np.asarray(tr.state.params["w"]), x,
+                               rtol=0, atol=1e-5)
+
+    # CDAdam: m' = b1 (Pi m) + (1-b1) g, v2 local
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    tr = CollaborativeTrainer(loss, params, topo,
+                              CDAdam(0.01, b1=b1, b2=b2, eps=eps, fused=True),
+                              stack=False, momentum_mixing="mixed")
+    x = np.asarray(params["w"], np.float64)
+    m = np.zeros_like(x)
+    v2 = np.zeros_like(x)
+    for t in range(3):
+        tr.step(batch)
+        g = x
+        m = b1 * (pi @ m) + (1 - b1) * g
+        v2 = b2 * v2 + (1 - b2) * g * g
+        bc1, bc2 = 1 - b1 ** (t + 1), 1 - b2 ** (t + 1)
+        x = pi @ x - 0.01 * (m / bc1) / (np.sqrt(v2 / bc2) + eps)
+    np.testing.assert_allclose(np.asarray(tr.state.params["w"]), x,
+                               rtol=0, atol=1e-4)
+
+
+def test_momentum_mixed_wire_doubles_and_ef_adds_zero():
+    """Wire contract: the momentum payload exactly doubles the bytes at
+    equal precision (program accounting AND the actual carried overlap
+    buffers); error feedback still adds zero."""
+    from repro.core import flatbuf
+    params, topo, _ = _testbed()
+    mk = lambda **kw: CollaborativeTrainer(
+        LOSS, params, topo, CDMSGD(5e-3, mu=0.9, fused=True),
+        exchange="int8", **kw)
+    base = mk().wire_bytes_per_step
+    mixed = mk(momentum_mixing="mixed").wire_bytes_per_step
+    mixed_ef = mk(momentum_mixing="mixed",
+                  error_feedback=True).wire_bytes_per_step
+    assert mixed == 2 * base
+    assert mixed_ef == mixed
+    tr = mk(momentum_mixing="mixed", schedule="overlap")
+    spec = flatbuf.make_flat_spec(tr.state.params, lead=1)
+    assert engine.wire_bytes_per_neighbor(tr.state.opt_state.wire) == \
+        2 * spec.exchange_bytes("int8")
+    # the widened state: one wire pair and (under EF) one residual per
+    # bucket per payload
+    assert len(tr.state.opt_state.wire) == 2 * spec.n_buckets
+    tr_ef = mk(momentum_mixing="mixed", error_feedback=True)
+    assert len(tr_ef.state.opt_state.residual) == 2 * spec.n_buckets
+
+
+def test_momentum_mixed_ef_residual_telescopes_per_payload():
+    """With momentum mixing + EF, BOTH payloads' residuals telescope:
+    carried = dequant(payload) + residual, exactly, bucket-for-bucket."""
+    params, topo, _ = _testbed()
+    tr = CollaborativeTrainer(LOSS, params, topo,
+                              CDMSGD(5e-3, mu=0.9, fused=True),
+                              exchange="int8", error_feedback=True,
+                              momentum_mixing="mixed")
+    fl = tr.comm.flat
+    spec = fl.spec(tr.state.params)
+    bufs = fl.pack(tr.state.params, spec)
+    vbufs = [b + 0.5 for b in bufs]              # a nonzero momentum stand-in
+    both = bufs + vbufs
+    res0 = fl.strategy.residual_init(both)
+    assert len(res0) == 2 * len(bufs)
+    wire, res1 = fl.strategy.quantize_ef(both, jnp.int32(0), res0)
+    assert len(wire) == 2 * len(bufs)
+    for b, (p, sc), r in zip(both, wire, res1):
+        np.testing.assert_allclose(
+            np.asarray(b, np.float32),
+            np.asarray(p.astype(jnp.float32) * sc) + np.asarray(r),
+            rtol=0, atol=1e-6)
+    # distinct payload seed stride: equal inputs quantize DIFFERENTLY
+    # across the payload halves (independent SR streams)
+    wire_same, _ = fl.strategy.quantize_ef(bufs + bufs, jnp.int32(0), res0)
+    n = len(bufs)
+    assert any(np.any(np.asarray(wire_same[i][0]) != np.asarray(wire_same[n + i][0]))
+               for i in range(n))
+
+
+# -------------------------------------------------------------------------
+# Seed-stride decorrelation (ISSUE 5 satellite)
+# -------------------------------------------------------------------------
+
+
+def test_wire_seed_strides_collision_free():
+    """The five strides (step/agent/bucket/round + the momentum-payload
+    stride) produce no colliding int32 seeds over the realistic index
+    ranges: agents<=64, buckets<=8, rounds<=8, payloads 2, crossed with
+    (a) a dense 128-step window and (b) ~1000 steps strided across the
+    full 1e6-step range.  (The full 1e6-step cross product holds 6.5e9
+    tuples — more than 2^32 — so exhaustive injectivity is impossible by
+    pigeonhole; the window catches short-range aliasing, the strided
+    sample long-range.)  SR streams stay independent by construction."""
+    strides = dict(step=C._SEED_STEP_STRIDE, agent=C._SEED_AGENT_STRIDE,
+                   bucket=C._SEED_BUCKET_STRIDE, rnd=C._SEED_ROUND_STRIDE,
+                   payload=C._SEED_PAYLOAD_STRIDE)
+    assert len(set(strides.values())) == 5
+
+    def seeds(steps):
+        steps = np.asarray(steps, np.int64)
+        a = np.arange(64, dtype=np.int64)
+        b = np.arange(8, dtype=np.int64)
+        r = np.arange(8, dtype=np.int64)
+        p = np.arange(2, dtype=np.int64)
+        s = (strides["step"] * (steps[:, None, None, None, None]
+                                + strides["rnd"] * r[None, None, None, :, None])
+             + strides["agent"] * a[None, :, None, None, None]
+             + strides["bucket"] * b[None, None, :, None, None]
+             + strides["payload"] * p[None, None, None, None, :])
+        return (s & 0xFFFFFFFF).ravel()
+
+    win = seeds(np.arange(128))
+    assert np.unique(win).size == win.size, "short-range seed collision"
+    samp = seeds((np.arange(997) * 1003 + 13) % 1_000_000)
+    assert np.unique(samp).size == samp.size, "long-range seed collision"
+
+    # the vectorized mirror above IS wire_seed (spot-checked), so the
+    # uniqueness proof applies to the composition the stages implement
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        st, ag, bu, rd, pl = (int(rng.integers(0, 1_000_000)),
+                              int(rng.integers(0, 64)),
+                              int(rng.integers(0, 8)),
+                              int(rng.integers(0, 8)),
+                              int(rng.integers(0, 2)))
+        want = (strides["step"] * (st + strides["rnd"] * rd)
+                + strides["agent"] * ag + strides["bucket"] * bu
+                + strides["payload"] * pl)
+        assert C.wire_seed(st, ag, bu, rd, pl) == int(
+            np.int64(want).astype(np.int32))
+
+
+def test_wire_seed_matches_actual_quantize_stage():
+    """The stacked quantize stage draws exactly wire_seed's streams: the
+    per-agent/bucket/payload payload bits equal sr_quantize_2d at the
+    composed seed (the consistency anchor that ties the collision proof
+    to the running code)."""
+    from repro.kernels.consensus_update.consensus_update import sr_quantize_2d
+    rng = np.random.default_rng(3)
+    bufs = [jnp.asarray(rng.standard_normal((N_AGENTS, 4, 128)), jnp.float32),
+            jnp.asarray(rng.standard_normal((N_AGENTS, 2, 128)), jnp.float32)]
+    step = 17
+    for payload in (0, 1):
+        wire = C._quantize_wire_stacked(bufs, jnp.int32(step), N_AGENTS,
+                                        "int8", True, payload=payload)
+        for bi, (q, sc) in enumerate(wire):
+            for j in range(N_AGENTS):
+                qq, ss = sr_quantize_2d(
+                    bufs[bi][j],
+                    jnp.int32(C.wire_seed(step, j, bi, 0, payload)),
+                    exchange="int8", interpret=True)
+                np.testing.assert_array_equal(np.asarray(q[j]),
+                                              np.asarray(qq))
+                np.testing.assert_array_equal(np.asarray(sc[j]),
+                                              np.asarray(ss))
+
+
+# -------------------------------------------------------------------------
+# THE ISSUE-5 acceptance: momentum-mixed int8 CDMSGD at the caveat lr
+# -------------------------------------------------------------------------
+
+# Documented envelope (measured on the seed-0 paper testbed, 20 steps,
+# CDMSGD lr 0.01 mu 0.9 ring-4, drift = max |param diff| vs the SAME-
+# ALGORITHM f32 run of the SAME schedule — the reference that isolates
+# the wire-quantization noise; referencing overlap runs to the sync f32
+# trajectory would re-measure the known one-step-staleness gap, which is
+# orthogonal to what momentum mixing fixes):
+#   sync:    plain-int8 0.0275   mixed-int8 0.0219   (ratio 0.80)
+#   overlap: plain-int8 0.0182   mixed-int8 0.0145   (ratio 0.79)
+# Mechanism: the unmixed momentum integrates wire noise through the
+# gradient loop with a 1/(1-mu) = 10-step memory (disagreement modes
+# contract at max(rho(Pi), mu) = 0.9); mixing v over the wire cuts that
+# to rho(Pi) = 1/3 (lyapunov.momentum_consensus_contraction), at the
+# price of also quantizing the v payload — a net win whenever the
+# momentum buffer is small against the params (a g/(1-mu) << |x|, true
+# for NN training; a stiff quadratic with a g/(1-mu) ~ |x| can invert
+# it, which is why this is asserted on the paper testbed and not a toy).
+MOMENTUM_MIX_DRIFT_BOUND = 5e-2
+
+
+@pytest.mark.parametrize("schedule", ["sync", "overlap"])
+def test_momentum_mixed_int8_beats_plain_at_caveat_lr(schedule):
+    """THE acceptance criterion: at the PR 2 caveat lr (0.01, mu 0.9 —
+    the regime whose momentum/quantization instability PR 2 documented
+    and PR 4 queued the principled fix for), the momentum-mixed int8
+    CDMSGD trajectory tracks its f32 reference strictly closer than
+    plain int8 tracks its own, on both schedules, and the mixed drift is
+    bounded."""
+    params, topo, batch = _testbed()
+    runs = {}
+    for label, kw in (("f32_plain", {"exchange": "f32"}),
+                      ("f32_mixed", {"exchange": "f32",
+                                     "momentum_mixing": "mixed"}),
+                      ("int8_plain", {"exchange": "int8"}),
+                      ("int8_mixed", {"exchange": "int8",
+                                      "momentum_mixing": "mixed"})):
+        tr = CollaborativeTrainer(LOSS, params, topo,
+                                  CDMSGD(0.01, mu=0.9, fused=True),
+                                  schedule=schedule, **kw)
+        for _ in range(20):
+            m = tr.step(batch)
+        runs[label] = (tr.state.params, m["loss"])
+    drift_plain = _max_diff(runs["f32_plain"][0], runs["int8_plain"][0])
+    drift_mixed = _max_diff(runs["f32_mixed"][0], runs["int8_mixed"][0])
+    assert drift_mixed < MOMENTUM_MIX_DRIFT_BOUND, drift_mixed
+    assert drift_mixed < drift_plain, (drift_mixed, drift_plain)
+    assert runs["int8_mixed"][1] == pytest.approx(runs["f32_mixed"][1],
+                                                  abs=5e-2)
+
+
+def test_momentum_mixed_improves_consensus_contraction():
+    """The rate side of the fix (2010.11166): with heterogeneous agent
+    data, momentum-mixed CDMSGD holds a strictly smaller steady
+    consensus error than plain CDMSGD at the same lr/mu — disagreement
+    contracts at rho(Pi) instead of max(rho(Pi), mu) — independent of
+    quantization (asserted on the f32 wire AND the int8 wire)."""
+    params, topo, batch = _testbed()
+    cons = {}
+    for mm in ("none", "mixed"):
+        for exch in ("f32", "int8"):
+            tr = CollaborativeTrainer(LOSS, params, topo,
+                                      CDMSGD(0.01, mu=0.9, fused=True),
+                                      exchange=exch, momentum_mixing=mm)
+            for _ in range(20):
+                m = tr.step(batch)
+            cons[(mm, exch)] = m["consensus_error"]
+    assert cons[("mixed", "f32")] < cons[("none", "f32")]
+    assert cons[("mixed", "int8")] < cons[("none", "int8")]

@@ -132,3 +132,127 @@ def test_diminishing_schedule_drives_step_down(setup):
         alphas.append(float(opt.schedule(st.step)))
         p, st = opt.update(p, grads, st, comm)
     assert all(a > b for a, b in zip(alphas, alphas[1:]))
+
+
+# -------------------------------------------------------------------------
+# FedAvg: gated sync collective + momentum averaging (ISSUE 5 satellites)
+# -------------------------------------------------------------------------
+
+
+def test_fedavg_matches_handrolled_e_step_reference(setup):
+    """FedAvg E=3 mu=0.9 over 7 steps vs the hand-rolled server-side
+    recurrence: E local momentum-SGD steps, then BOTH x and v replaced by
+    their global means.  Before this fix the local v buffers silently
+    diverged across agents between syncs and were never reconciled, so
+    every post-sync step immediately pulled the averaged params back
+    toward each agent's own shard."""
+    _, comm, params, grads = setup
+    mu, e = 0.9, 3
+    opt = FedAvg(ALPHA, local_steps=e, mu=mu)
+    st = opt.init(params)
+    p = params
+    x = np.asarray(params["w"], np.float64)
+    v = np.zeros_like(x)
+    g = np.asarray(grads["w"], np.float64)
+    for t in range(7):
+        p, st = opt.update(p, grads, st, comm)
+        v = mu * v - ALPHA * g
+        x = x + v
+        if (t + 1) % e == 0:
+            x = np.broadcast_to(x.mean(0, keepdims=True), x.shape).copy()
+            v = np.broadcast_to(v.mean(0, keepdims=True), v.shape).copy()
+        np.testing.assert_allclose(np.asarray(p["w"]), x, rtol=0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st.inner["w"]), v, rtol=0,
+                                   atol=1e-5)
+
+
+def test_fedavg_momentum_averaged_at_sync(setup):
+    """The momentum buffers agree across agents right after a sync step
+    (they used to keep their divergent local values forever)."""
+    _, comm, params, grads = setup
+    opt = FedAvg(ALPHA, local_steps=2, mu=0.9)
+    st = opt.init(params)
+    p, st = opt.update(params, grads, st, comm)      # local: v diverges
+    assert float(jnp.max(jnp.abs(st.inner["w"] - st.inner["w"][0:1]))) > 1e-4
+    p, st = opt.update(p, grads, st, comm)           # sync: v averaged
+    assert float(jnp.max(jnp.abs(st.inner["w"] - st.inner["w"][0:1]))) < 1e-6
+
+
+def test_fedavg_mean_gated_inside_cond(setup):
+    """E>1: the averaging computation lives ONLY inside a lax.cond branch
+    of the step jaxpr — the collective is paid once per E steps, i.e. 1/E
+    as many mean reductions as the old unconditional mean + select.  E=1
+    keeps the unconditional mean (every step syncs anyway, no cond)."""
+    _, comm, params, grads = setup
+
+    def step(e):
+        opt = FedAvg(ALPHA, local_steps=e, mu=0.9)
+        return jax.make_jaxpr(
+            lambda p, g, s: opt.update(p, g, s, comm))(
+                params, grads, FedAvg(ALPHA, local_steps=e, mu=0.9).init(params))
+
+    def count_reduces(jaxpr, top_only):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if "reduce_sum" in eqn.primitive.name:
+                n += 1
+            if not top_only:
+                for v in eqn.params.values():
+                    for x in (v if isinstance(v, (tuple, list)) else (v,)):
+                        if isinstance(x, (jax.core.Jaxpr, jax.core.ClosedJaxpr)):
+                            j = x.jaxpr if isinstance(x, jax.core.ClosedJaxpr) else x
+                            n += count_reduces(j, top_only)
+        return n
+
+    j3 = step(3).jaxpr
+    assert any(e.primitive.name == "cond" for e in j3.eqns)
+    # the agent-mean reductions (params + momentum) exist ONLY inside the
+    # cond branches — nothing averages unconditionally
+    assert count_reduces(j3, top_only=True) == 0
+    assert count_reduces(j3, top_only=False) >= 2
+    j1 = step(1).jaxpr
+    assert not any(e.primitive.name == "cond" for e in j1.eqns)
+    assert count_reduces(j1, top_only=True) >= 2
+
+
+def test_fedavg_sync_executions_are_one_per_e_steps(setup):
+    """Runtime proof of the 1/E collective count: a callback planted in
+    comm.mean fires only on the 2 sync steps of 6 jitted E=3 steps — 2
+    mean calls per sync (params + momentum) x 2 syncs = 4, where the old
+    unconditional averaging would have fired 6 times for params alone
+    (the callback counts branch EXECUTIONS, not traces)."""
+    import dataclasses as _dc
+    _, comm, params, grads = setup
+    fired = []
+
+    base_mean = comm.mean
+
+    def counting_mean(tree):
+        jax.debug.callback(lambda: fired.append(1))
+        return base_mean(tree)
+
+    comm_c = _dc.replace(comm, mean=counting_mean)
+    opt = FedAvg(ALPHA, local_steps=3, mu=0.9)
+    step = jax.jit(lambda p, g, s: opt.update(p, g, s, comm_c))
+    p, st = params, opt.init(params)
+    for _ in range(6):
+        p, st = step(p, grads, st)
+    jax.effects_barrier()
+    # 6 steps / E=3 -> 2 sync executions x 2 payload means each
+    assert len(fired) == 4, fired
+
+
+def test_fedavg_wire_accounting_bytes_per_e():
+    """mean_exchange_bytes_per_step: the gated all-reduce amortizes to
+    bytes/E per step; averaging the momentum too doubles the payloads."""
+    from repro.core import flatbuf
+    from repro.core.consensus import mean_exchange_bytes_per_step
+    spec = flatbuf.make_flat_spec(
+        {"w": jax.ShapeDtypeStruct((N, 64, 128), jnp.float32)}, lead=1)
+    e1 = mean_exchange_bytes_per_step(spec, N, period=1)
+    e4 = mean_exchange_bytes_per_step(spec, N, period=4)
+    e4m = mean_exchange_bytes_per_step(spec, N, period=4, payloads=2)
+    assert e4["per_step_bytes"] == e1["per_step_bytes"] // 4
+    assert e4m["per_step_bytes"] == 2 * e4["per_step_bytes"]
+    assert e1["per_sync_bytes"] == int(2 * (N - 1) / N
+                                       * spec.exchange_bytes("f32"))

@@ -641,3 +641,203 @@ def test_sharded_mixing_strategies():
     assert res["ef_overlap"]["n_ppermutes"] == 4
     assert res["ef_overlap_run"]["res_max"] > 0.0
     assert res["ef_overlap_run"]["n_res_bufs"] >= 1
+
+
+@pytest.mark.slow
+def test_sharded_momentum_mixing_acceptance():
+    """ISSUE-5 acceptance, sharded half: the momentum-mixed int8 CDMSGD
+    wire through the REAL shard_map machinery (make_local_fused_comm ->
+    engine phases -> ppermutes), on the paper MLP testbed at the PR 2
+    caveat lr (0.01, mu 0.9), both schedules:
+
+    * drift(mixed-int8 vs mixed-f32, same schedule) is bounded and
+      strictly below drift(plain-int8 vs plain-f32) — the same criterion
+      and (mesh 4x1: no model sharding, so the shard-local SR streams
+      equal the stacked oracle's) the same measured envelope as the
+      stacked test in tests/test_mixing.py;
+    * the wire widens structurally: int8 mixed moves BOTH payload trees
+      -> 8 ppermutes per step (2 ring shifts x (payload + row scales) x
+      2 payload trees) vs 4 for plain, all of them consuming ONLY
+      carried wire state under schedule='overlap' (the jaxpr taint
+      proof), and OptState.wire holds one pair per bucket per payload.
+    """
+    res = run_sub(textwrap.dedent("""
+        import functools, json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core import consensus as C
+        from repro.core import engine
+        from repro.core.optim import CDMSGD
+        from repro.core.topology import make_topology
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch import steps as steps_lib
+        from repro.nn.paper_models import (classifier_loss,
+                                           mlp_classifier_apply,
+                                           mlp_classifier_template)
+        from repro.nn.param import init_params
+
+        LOSS = functools.partial(classifier_loss, mlp_classifier_apply)
+        A = 4
+        mesh = make_debug_mesh(A, 1)
+        topo = make_topology("ring", A)
+        base = init_params(mlp_classifier_template(8, 4, width=16, depth=2),
+                           jax.random.PRNGKey(0))
+        params0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (A,) + x.shape).copy(), base)
+        rng = np.random.default_rng(0)
+        batch = {"x": jnp.asarray(rng.standard_normal((A, 8, 8)), jnp.float32),
+                 "y": jnp.asarray(rng.integers(0, 4, (A, 8)), jnp.int32)}
+        pspecs = jax.tree.map(
+            lambda x: P(*(("data",) + (None,) * (x.ndim - 1))), params0)
+        state_sp = P("data", None, None)
+
+        def build(mm, exch, schedule):
+            opt = CDMSGD(0.01, mu=0.9, fused=True)
+            program = C.make_mixing_program(topo, exchange=exch,
+                                            momentum_mixing=mm)
+            comm = steps_lib.make_local_fused_comm(
+                topo, mesh, "train", interpret=True, exchange=exch,
+                program=program)
+            engine.check_program_support(opt, comm)
+            opt_specs = opt.state_specs(pspecs)
+            n_entries = program.n_payloads  # MLP packs into one f32 bucket
+            init_wire = None
+            if schedule == "overlap":
+                wire_specs = tuple((state_sp, state_sp)
+                                   for _ in range(n_entries))
+                opt_specs = opt_specs._replace(wire=wire_specs)
+                local_wire_init = engine.make_local_wire_init(comm.flat)
+                init_wire = lambda p: steps_lib._shard_map(
+                    local_wire_init, mesh, (pspecs,), wire_specs)(p)
+            update_local = engine.make_update_phase(opt, comm, schedule)
+            update_phase = lambda p, g, s: steps_lib._shard_map(
+                update_local, mesh, (pspecs, pspecs, opt_specs),
+                (pspecs, opt_specs))(p, g, s)
+            return engine.StepProgram(
+                optimizer=opt, comm=comm,
+                grad_phase=engine.make_grad_phase(LOSS),
+                update_phase=update_phase, schedule=schedule,
+                init_wire=init_wire)
+
+        def run(mm, exch, schedule):
+            prog = build(mm, exch, schedule)
+            with mesh:
+                state = prog.init_state(params0)
+                step = jax.jit(prog.step_fn)
+                p = params0
+                for _ in range(20):
+                    p, state, m = step(p, state, batch)
+            return p, state, float(m["loss"])
+
+        def md(a, b):
+            return max(jax.tree.leaves(jax.tree.map(
+                lambda x, y: float(jnp.max(jnp.abs(x - y))), a, b)))
+
+        out = {}
+        for schedule in ("sync", "overlap"):
+            rp, _, _ = run("none", "f32", schedule)
+            rm, _, lm = run("mixed", "f32", schedule)
+            pp, _, _ = run("none", "int8", schedule)
+            pm, sm, lq = run("mixed", "int8", schedule)
+            out[schedule] = {
+                "drift_plain": md(rp, pp), "drift_mixed": md(rm, pm),
+                "loss_gap_mixed": abs(lq - lm),
+                "n_wire_entries": len(sm.wire),
+                "finite": bool(all(jnp.all(jnp.isfinite(x))
+                                   for x in jax.tree.leaves(pm))),
+            }
+
+        # structural: ppermute counts + the overlap taint proof
+        for schedule in ("sync", "overlap"):
+            for mm, key in (("none", "plain"), ("mixed", "mixed")):
+                prog = build(mm, "int8", schedule)
+                with mesh:
+                    state = prog.init_state(params0)
+                    rep = engine.exchange_dependency_report(
+                        prog.step_fn, params0, state, batch)
+                out[f"rep_{schedule}_{key}"] = rep
+        print("RESULT " + json.dumps(out))
+    """), timeout=840)
+    for schedule in ("sync", "overlap"):
+        r = res[schedule]
+        assert r["finite"]
+        # same criterion + envelope as the stacked acceptance test
+        assert r["drift_mixed"] < 5e-2, r
+        assert r["drift_mixed"] < r["drift_plain"], r
+        assert r["loss_gap_mixed"] < 5e-2, r
+    assert res["overlap"]["n_wire_entries"] == 2    # one pair per payload
+    # widened wire: 2 ring shifts x (payload + scales) x 2 payload trees
+    assert res["rep_sync_plain"]["n_ppermutes"] == 4
+    assert res["rep_sync_mixed"]["n_ppermutes"] == 8
+    assert res["rep_sync_mixed"]["depends_on_params"]
+    assert res["rep_overlap_mixed"]["n_ppermutes"] == 8
+    assert res["rep_overlap_mixed"]["n_ppermutes_carried_only"] == 8
+    assert res["rep_overlap_mixed"]["off_grad_update_critical_path"]
+
+
+@pytest.mark.slow
+def test_sharded_build_train_step_momentum_mixing():
+    """build_train_step threads momentum_mixing end-to-end on the real
+    transformer path: the opt-state specs carry one wire pair AND one EF
+    residual per bucket per payload, init_state fills them inside
+    shard_map, one jitted step runs finite, and the dryrun-style record
+    doubles the wire bytes (payloads=2)."""
+    res = run_sub(textwrap.dedent("""
+        import dataclasses, json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.core import consensus as consensus_lib
+        from repro.core import engine, flatbuf
+        from repro.core.optim import make_optimizer
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch import steps as steps_lib
+        from repro.nn.param import init_params
+
+        cfg = dataclasses.replace(get_config("granite-3-8b").reduced(),
+                                  param_dtype="float32")
+        shape = InputShape("tiny_train", 16, 8, "train")
+        mesh = make_debug_mesh(4, 2)
+        opt = make_optimizer("cdmsgd", 0.01, mu=0.9, fused=True)
+        b = steps_lib.build_train_step(
+            cfg, shape, mesh, opt, mode="train", topology_name="ring",
+            mixing="ppermute_fused", exchange="int8", schedule="overlap",
+            error_feedback=True, momentum_mixing="mixed")
+        params = init_params(b.param_template, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch = {
+            "inputs": jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 2, 16)), jnp.int32),
+            "targets": jnp.asarray(rng.integers(1, cfg.vocab_size, (4, 2, 16)), jnp.int32),
+        }
+        n_buckets = flatbuf.make_flat_spec(params, lead=1).n_buckets
+        with mesh:
+            state = b.init_state(params)
+            rep = engine.exchange_dependency_report(
+                b.step_fn, params, state, batch)
+            p1, s1, m = jax.jit(b.step_fn)(params, state, batch)
+        wire = consensus_lib.exchange_bytes_per_step(
+            flatbuf.make_flat_spec(params, lead=1), b.topology, "int8",
+            b.mixing_program.rounds, b.mixing_program.n_payloads)
+        base = consensus_lib.exchange_bytes_per_step(
+            flatbuf.make_flat_spec(params, lead=1), b.topology, "int8")
+        print("RESULT " + json.dumps({
+            "n_buckets": n_buckets,
+            "n_wire": len(state.wire), "n_residual": len(state.residual),
+            "report": rep,
+            "loss": float(m["loss"]),
+            "finite": bool(all(jnp.all(jnp.isfinite(x))
+                               for x in jax.tree.leaves(p1))),
+            "residual_live": float(max(jnp.max(jnp.abs(r))
+                                       for r in s1.residual)),
+            "wire_bytes": wire["per_step_bytes"],
+            "wire_bytes_base": base["per_step_bytes"],
+        }))
+    """), timeout=840)
+    assert res["finite"]
+    assert res["n_wire"] == 2 * res["n_buckets"]
+    assert res["n_residual"] == 2 * res["n_buckets"]
+    # overlap + momentum mixing: every collective consumes carried state
+    assert res["report"]["n_ppermutes"] == 8 * res["n_buckets"]
+    assert res["report"]["off_grad_update_critical_path"]
+    assert res["residual_live"] > 0.0
+    assert res["wire_bytes"] == 2 * res["wire_bytes_base"]

@@ -199,3 +199,60 @@ def test_schedule_theory_constants_contract():
     # more rounds: stronger strong-convexity of V, faster contraction
     assert c2.h_hat > c1.h_hat
     assert c2.contraction < c1.contraction < 1.0
+
+
+# -------------------------------------------------------------------------
+# Momentum-consensus mixing constants (2010.11166)
+# -------------------------------------------------------------------------
+
+
+def test_momentum_contraction_mixed_restores_topology_rate():
+    """Unmixed momentum gates the disagreement contraction at mu once
+    mu > rho(Pi) (the momentum mode outlives the consensus mode — the
+    noise-persistence mechanism of the large-lr instability); mixing the
+    momentum with the same Pi restores the momentum-free rate rho(Pi)."""
+    from repro.core.lyapunov import momentum_consensus_contraction
+    t = make_topology("ring", 4)                  # rho(Pi) = 1/3
+    rho_pi = momentum_consensus_contraction(t, mu=0.0)
+    assert rho_pi == pytest.approx(1.0 / 3.0, abs=1e-9)
+    assert momentum_consensus_contraction(t, 0.9, "none") == pytest.approx(0.9)
+    assert momentum_consensus_contraction(t, 0.9, "mixed") == \
+        pytest.approx(rho_pi)
+    # below the topology rate, momentum never gates: both forms equal
+    assert momentum_consensus_contraction(t, 0.2, "none") == \
+        momentum_consensus_contraction(t, 0.2, "mixed") == pytest.approx(rho_pi)
+
+
+def test_momentum_contraction_uses_modulus_not_lambda2():
+    """Short even rings have lambda_N < 0 with |lambda_N| > lambda_2; the
+    joint dynamics amplify whichever mode decays slowest, so the radius
+    must be the modulus over ALL non-principal eigenvalues."""
+    from repro.core.lyapunov import momentum_consensus_contraction
+    t = make_topology("ring", 4)
+    lams = np.linalg.eigvalsh(np.asarray(t.pi, np.float64))
+    assert momentum_consensus_contraction(t, 0.0) == \
+        pytest.approx(float(np.max(np.abs(lams[:-1]))), abs=1e-9)
+
+
+def test_momentum_consensus_bound_ordering_and_schedules():
+    """a L / (1 - rho): mixing can only tighten the steady-state consensus
+    radius, strictly when mu > rho(Pi); reduces to the momentum-free
+    Prop-1 radius framing and accepts TopologySchedules."""
+    from repro.core.lyapunov import (momentum_consensus_bound,
+                                     momentum_consensus_contraction)
+    from repro.core.topology import make_topology_schedule
+    t = make_topology("ring", 8)
+    unmixed = momentum_consensus_bound(0.05, 1.0, t, 0.9, "none")
+    mixed = momentum_consensus_bound(0.05, 1.0, t, 0.9, "mixed")
+    assert mixed < unmixed
+    # more inner rounds tighten the mixed bound further (rho^k)
+    assert momentum_consensus_bound(0.05, 1.0, t, 0.9, "mixed", rounds=2) \
+        < mixed
+    s = make_topology_schedule("alternating:ring:fully_connected", 8)
+    assert momentum_consensus_bound(0.05, 1.0, s, 0.9, "mixed") \
+        <= momentum_consensus_bound(0.05, 1.0, s, 0.9, "none")
+    assert momentum_consensus_contraction(s, 0.9, "mixed") < 1.0
+    with pytest.raises(ValueError, match="momentum_mixing"):
+        momentum_consensus_contraction(t, 0.9, "both")
+    with pytest.raises(ValueError, match="mu"):
+        momentum_consensus_contraction(t, 1.0)
