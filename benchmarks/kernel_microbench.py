@@ -31,9 +31,17 @@ mode step time plus an assertion — from the actual carried buffers — that
 the overlap double-buffer puts exactly the sync schedule's quantized bytes
 on the wire (the schedule changes WHEN the payload moves, never how much).
 
+``stale_ring`` benchmarks the bounded-staleness wire ring
+(``MixingProgram(staleness=S, faults=...)``): asserts — from the actual
+carried :class:`repro.core.consensus.WireRing` buffers — that the per-step
+bytes on the wire stay EXACTLY the sync schedule's bytes at every ring
+depth S (only the sender-selected generation moves; the stale slots and
+age counters are local state), and reports the parameter drift vs the
+fault-free run as S grows under an injected straggler+drop schedule.
+
 ``--smoke`` runs only the consensus-path benches (CI-friendly);
 ``--json-out FILE`` writes the records as a JSON file (the CI workflow
-publishes it as the ``BENCH_3.json`` artifact).
+publishes it as the ``BENCH_6.json`` artifact).
 """
 
 import argparse
@@ -385,6 +393,79 @@ def momentum_mix(steps_timed: int = 3):
     return row, rec
 
 
+def stale_ring(steps_timed: int = 3, drift_steps: int = 10):
+    """Bounded-staleness ring (MixingProgram staleness=S + FaultSchedule)
+    wire accounting and robustness trajectory.
+
+    Asserts, from the actual carried WireRing buffers, that the bytes ONE
+    neighbor transfer moves per step equal the sync schedule's
+    ``FlatSpec.exchange_bytes`` at EVERY ring depth S — the ring deepens
+    the local state (S generations + age counters), never the wire.
+    Reports the max parameter drift vs the fault-free overlap run after
+    ``drift_steps`` steps under an injected straggler+drop schedule — the
+    price of absorbing the faults instead of stalling the step."""
+    from repro.core import engine
+    from repro.core.optim import CDSGD
+    from repro.core.trainer import CollaborativeTrainer
+
+    key = jax.random.PRNGKey(0)
+    topo = make_topology("ring", 4)
+    params = {"w": jax.random.normal(key, (256, 128), jnp.float32),
+              "b": jax.random.normal(key, (300,), jnp.float32)}
+
+    def loss(p, b):
+        return 0.5 * (jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)), {}
+
+    batch = {"x": jnp.zeros((4, 1), jnp.float32)}
+    spec = flatbuf.make_flat_spec(
+        jax.tree.map(lambda x: jnp.broadcast_to(x[None], (4,) + x.shape),
+                     params), lead=1)
+    sync_bytes = spec.exchange_bytes("int8")
+    fault = "stall:1:1:3,drop:0:2"
+
+    def make(S, fs):
+        return CollaborativeTrainer(loss, params, topo, CDSGD(0.01, fused=True),
+                                    schedule="overlap", exchange="int8",
+                                    staleness=S, fault_schedule=fs,
+                                    donate=False)
+
+    base = make(1, None)
+    for _ in range(drift_steps):
+        base.step(batch)
+
+    us, drift, ring_bytes = {}, {}, {}
+    for S in (1, 2, 4):
+        tr = make(S, fault)
+        ring_bytes[f"S{S}"] = engine.wire_bytes_per_neighbor(
+            tr.state.opt_state.wire)
+        # the ring never widens the wire: one selected generation moves
+        assert ring_bytes[f"S{S}"] == sync_bytes, (S, ring_bytes, sync_bytes)
+        us[f"S{S}"] = _time(tr._step_fn, tr.state.params,
+                            tr.state.opt_state, batch, reps=steps_timed)
+        for _ in range(drift_steps):
+            tr.step(batch)
+        drift[f"S{S}"] = max(
+            float(jnp.max(jnp.abs(a - b))) for a, b in
+            zip(jax.tree.leaves(tr.state.params),
+                jax.tree.leaves(base.state.params)))
+
+    rec = {
+        "bench": "consensus/stale_ring",
+        "model": "33k f32 params, ring deg 2, int8 wire, CDSGD",
+        "fault_schedule": fault,
+        "us_per_step_interp": {k: round(v, 1) for k, v in us.items()},
+        "wire_bytes_per_neighbor": ring_bytes,
+        "sync_wire_bytes_per_neighbor": sync_bytes,
+        "ring_bytes_independent_of_S": True,
+        "drift_vs_faultfree": drift,
+    }
+    row = ("kernel/stale_ring", us["S4"],
+           f"wire/nbr S1={ring_bytes['S1']} S2={ring_bytes['S2']} "
+           f"S4={ring_bytes['S4']} (=sync {sync_bytes});"
+           f"drift S1={drift['S1']:.1e} S4={drift['S4']:.1e}")
+    return row, rec
+
+
 def run(smoke: bool = False, json_out: str = None):
     key = jax.random.PRNGKey(0)
     rows = []
@@ -434,8 +515,10 @@ def run(smoke: bool = False, json_out: str = None):
     # + sync-vs-overlap schedule step time / wire-byte equality
     # + k-round strategy wire accounting (k x sync; EF adds 0)
     # + momentum-mixing wire accounting (2x params-only; EF still +0)
+    # + staleness-ring wire accounting (bytes independent of S) and
+    #   drift-vs-S under an injected straggler+drop schedule
     for fn in (exchange_wire, alias_accounting, schedule_overlap, multi_round,
-               momentum_mix):
+               momentum_mix, stale_ring):
         row, rec = fn()
         rows.append(row)
         records.append(rec)

@@ -43,7 +43,7 @@ ARCHITECTURE.md §mixing strategies).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,9 @@ import numpy as np
 from jax import lax
 
 from repro.core import flatbuf
+from repro.core.faults import (FaultSchedule, arrival_masked_pi,
+                               trivial_faults)
+from repro.core.faults import MAX_FAULT_PERIOD as _MAX_FAULT_PERIOD
 from repro.core.topology import Topology, TopologySchedule, fixed_schedule
 from repro.utils.tree import tree_weighted_sum
 
@@ -97,6 +100,20 @@ class MixingProgram:
     the wire bytes at equal precision; momentum-capable fused optimizers
     only (CDMSGD family / CDAdam's first moment).
 
+    ``staleness=S`` / ``faults=`` engage the **bounded-staleness ring**
+    (``schedule="overlap"`` only): the overlap double-buffer generalizes to
+    a depth-``S`` ring of each agent's own last-``S`` quantized wire
+    generations (:class:`WireRing`); under the injected
+    :class:`~repro.core.faults.FaultSchedule` each sender contributes the
+    freshest generation that *arrived* (up to ``S`` steps stale) and the
+    mixing weights renormalize over arrived neighbors — a dropped or
+    over-stale neighbor's mass folds into the receiver's self term,
+    preserving row-stochasticity.  The self term stays fresh and
+    full-precision exactly as today: staleness and masking ride entirely in
+    *which* carried buffers and *which* weights feed the existing
+    self-separated fused update (no new kernel variants), and the per-step
+    wire bytes are independent of ``S`` — a stale slot moves nothing.
+
     Built via :func:`make_mixing_program`, which validates everything at
     config time — never inside a traced step.
     """
@@ -107,6 +124,17 @@ class MixingProgram:
     error_feedback: bool = False
     exchange: str = "f32"
     momentum_mixing: str = "none"
+    # bounded-staleness fault tolerance: ring depth S and the injected
+    # fault schedule (see repro.core.faults).  staleness=1 with no faults
+    # is today's overlap double-buffer, bit-for-bit.
+    staleness: int = 1
+    faults: Optional[FaultSchedule] = None
+
+    @property
+    def fault_tolerant(self) -> bool:
+        """True iff the depth-S staleness ring / arrival-masked weight path
+        is engaged (``staleness > 1`` or an injected fault schedule)."""
+        return self.staleness > 1 or self.faults is not None
 
     @property
     def is_trivial(self) -> bool:
@@ -114,7 +142,8 @@ class MixingProgram:
         program (whose sync path must stay bit-for-bit unchanged)."""
         return (self.strategy == "static" and self.rounds == 1
                 and not self.error_feedback
-                and self.momentum_mixing == "none")
+                and self.momentum_mixing == "none"
+                and not self.fault_tolerant)
 
     @property
     def n_payloads(self) -> int:
@@ -130,6 +159,8 @@ class MixingProgram:
             "error_feedback": self.error_feedback,
             "exchange": self.exchange,
             "momentum_mixing": self.momentum_mixing,
+            "staleness": self.staleness,
+            "faults": self.faults.describe() if self.faults else None,
         }
 
 
@@ -141,6 +172,8 @@ def make_mixing_program(
     error_feedback: bool = False,
     exchange: str = "f32",
     momentum_mixing: str = "none",
+    staleness: int = 1,
+    faults: Optional[FaultSchedule] = None,
 ) -> MixingProgram:
     """Validate + build a :class:`MixingProgram` at config time.
 
@@ -180,9 +213,28 @@ def make_mixing_program(
     if momentum_mixing not in MOMENTUM_MIXINGS:
         raise ValueError(f"unknown momentum_mixing {momentum_mixing!r}; "
                          f"expected one of {MOMENTUM_MIXINGS}")
+    if not isinstance(staleness, int) or staleness < 1:
+        raise ValueError(f"staleness must be an int >= 1, got {staleness!r}")
+    if faults is not None:
+        if not isinstance(faults, FaultSchedule):
+            raise TypeError(f"faults must be a FaultSchedule, got "
+                            f"{type(faults).__name__}")
+        if faults.n_agents != schedule.n_agents:
+            raise ValueError(f"fault schedule covers {faults.n_agents} agents "
+                             f"but the topology has {schedule.n_agents}")
+        faults.validate()
+        if faults.is_trivial:
+            faults = None  # the all-arrive schedule IS the no-fault program
+    if error_feedback and (staleness > 1 or faults is not None):
+        raise ValueError(
+            "error_feedback is incompatible with staleness > 1 / fault "
+            "injection: the residual telescoping assumes every carried wire "
+            "payload is consumed exactly one step later, which bounded "
+            "staleness breaks by design")
     return MixingProgram(schedule=schedule, strategy=strategy, rounds=rounds,
                          error_feedback=error_feedback, exchange=exchange,
-                         momentum_mixing=momentum_mixing)
+                         momentum_mixing=momentum_mixing,
+                         staleness=staleness, faults=faults)
 
 
 # --------------------------------------------------------------------------
@@ -366,6 +418,109 @@ def _quantize_wire_stacked(bufs, seed, n: int, exchange: str, interpret: bool,
 
 
 # --------------------------------------------------------------------------
+# Bounded-staleness wire ring (fault-tolerant overlap schedule)
+# --------------------------------------------------------------------------
+
+
+class WireRing(NamedTuple):
+    """Depth-``S`` generalization of the overlap schedule's wire state.
+
+    Lives in ``OptState.wire`` exactly where the one-deep ``(payload,
+    scales)`` tuple lives today (a NamedTuple, so checkpointing and the
+    dependency-report labeling treat it as more wire leaves — bit-exact
+    round-trips with zero checkpoint changes):
+
+    * ``slots`` — one ``(payload, scales)`` pair per bucket x payload tree,
+      with a ring axis inserted after the agent axis: ``(A, S, rows, 128)``
+      stacked / ``(1, S, rows, 128)`` shard-local.  Ring index 0 is the
+      agent's own freshest quantized generation (what the plain overlap
+      wire carries), index ``k`` is ``k`` steps older.  Carried slots are
+      never re-quantized — each generation keeps the SR bits it was born
+      with, so stale consumption cannot collide with a live SR stream.
+    * ``send_age`` — ``(A,)`` / ``(1,)`` int32: the ring index the agent
+      *contributes* this step (its freshest generation that escaped the
+      injected straggler delays; ``S`` = nothing within the ring arrived
+      and receivers mask it out).  The sender selects ONE generation for
+      all receivers, so the exchanged operand stays a single per-bucket
+      stack and the existing self-separated kernels apply unchanged.
+    * ``ages`` — ``(A, A)`` / ``(1, A)`` int32 bookkeeping: receiver row
+      ``i``, the staleness-minus-1 of what sender ``j`` delivered (0 =
+      normal one-step-stale; sentinel ``S`` = masked by drop/over-stale;
+      diagonal 0 — the self term is always fresh).  Deterministic given
+      the fault schedule; carried so checkpoints/dryruns expose the
+      arrival state without re-deriving it.
+    """
+
+    slots: Tuple
+    send_age: Any
+    ages: Any
+
+
+def _ring_select(ring: WireRing, staleness: int):
+    """Sender-side slot selection: ring -> plain per-bucket wire pairs.
+
+    Each agent contributes ``ring[min(send_age, S-1)]`` — its freshest
+    arrived generation.  A fully masked sender (``send_age == S``) selects
+    the oldest slot harmlessly: every receiver weights it zero.
+    """
+    sel = jnp.minimum(ring.send_age.astype(jnp.int32), staleness - 1)
+    out = []
+    for p, sc in ring.slots:
+        idx = sel.reshape((-1,) + (1,) * (p.ndim - 1))
+        out.append((jnp.take_along_axis(p, idx, axis=1)[:, 0],
+                    jnp.take_along_axis(sc, idx, axis=1)[:, 0]))
+    return tuple(out)
+
+
+def _ring_push(old, new):
+    """Shift one ring buffer: fresh generation in, oldest out."""
+    return jnp.concatenate([new[:, None], old[:, :-1]], axis=1)
+
+
+def _fault_tables(program: MixingProgram) -> dict:
+    """Host-precomputed fault-path tables over the combined period.
+
+    Everything the runtime indexes with ``step % period`` is a static
+    numpy table baked into the jitted step — the fault layer adds zero
+    collectives and zero device randomness, and both execution modes read
+    the identical tables (:class:`~repro.core.faults.FaultSchedule` is
+    seeded host-side like ``TopologySchedule``):
+
+    * ``send_age (P, A)`` — steady state of the carried ``send_age``
+      counter recurrence (valid because ``straggle[0]`` is all-False);
+    * ``arrive (P, A, A)`` — receiver ``i`` uses sender ``j`` this step;
+    * ``weights (P, A, A+1)`` — arrival-masked renormalized
+      self-separated weights (:func:`repro.core.faults.arrival_masked_pi`
+      of each schedule entry's ``Pi``);
+    * ``ages (P, A, A)`` — the :class:`WireRing` bookkeeping rows.
+    """
+    s = program.staleness
+    sched = program.schedule
+    f = program.faults or trivial_faults(sched.n_agents)
+    tb = f.tables(s)
+    pw = int(np.lcm(sched.period, f.period))
+    if pw > _MAX_FAULT_PERIOD:
+        raise ValueError(
+            f"combined schedule x fault period {pw} exceeds "
+            f"{_MAX_FAULT_PERIOD}; align the fault period with the "
+            "topology schedule period")
+    ts = np.arange(pw)
+    straggle = f.straggle[ts % f.period]
+    send_age = tb["send_age"][ts % f.period]
+    arrive = tb["arrive"][ts % f.period]
+    weights = np.stack([
+        _self_separated_weights(arrival_masked_pi(
+            sched.topologies[t % sched.period].pi, arrive[t]))
+        for t in range(pw)])
+    ages = np.where(arrive, send_age[:, None, :], s).astype(np.int32)
+    di = np.arange(sched.n_agents)
+    ages[:, di, di] = 0
+    return {"period": pw, "S": s, "straggle": straggle,
+            "send_age": send_age, "arrive": arrive,
+            "weights": weights, "ages": ages}
+
+
+# --------------------------------------------------------------------------
 # MixingStrategy: how the wire stages compose per optimizer step
 # --------------------------------------------------------------------------
 
@@ -397,7 +552,7 @@ class MixingStrategy:
 
     def __init__(self, program: MixingProgram, *, quantize, exchange_t,
                  combine, wire_to_bufs, legacy_gather=None,
-                 bufs_to_state=None, state_to_bufs=None):
+                 bufs_to_state=None, state_to_bufs=None, fault_ops=None):
         self.program = program
         self.rounds = program.rounds
         self.mixed_momentum = program.momentum_mixing == "mixed"
@@ -406,6 +561,10 @@ class MixingStrategy:
         self._combine = combine
         self._wire_to_bufs = wire_to_bufs
         self._legacy_gather = legacy_gather
+        # execution-mode-specific fault-path closures (None = fault-free;
+        # see stacked_flat_comm / sharded_flat_comm): masked_weights(t),
+        # own_straggle(t), next_ages(t), init_state(), period, S
+        self.fault_ops = fault_ops
         # residual buffers live in the optimizer state with the leading
         # agent axes kept (like the wire pairs) so sharded PartitionSpecs
         # apply; the sharded mode's packed bufs are squeezed, so these two
@@ -441,10 +600,77 @@ class MixingStrategy:
         return self._quantize_payloads(bufs, seed)
 
     def exchange_stage(self, wire, step=None):
-        return self._exchange_t(wire, self._entry(step))
+        """One round of neighbor exchange; fault-aware when engaged.
+
+        On the fault path ``wire`` is either the carried :class:`WireRing`
+        (round 1 — the sender-selected slot is exchanged) or a freshly
+        quantized plain tuple (inner multi-round rounds — a masked sender's
+        live transmissions miss the whole step, so the same per-step
+        arrival mask applies); either way the schedule's weights are
+        replaced by the arrival-masked renormalized row(s), which is the
+        *only* thing that changes about the exchanged operands — same
+        ppermutes, same shapes, same kernels.
+        """
+        if self.fault_ops is None:
+            return self._exchange_t(wire, self._entry(step))
+        fo = self.fault_ops
+        if step is None:
+            raise ValueError("fault-tolerant mixing needs the optimizer "
+                             "step; exchange_stage(wire, step)")
+        t = jnp.mod(jnp.asarray(step, jnp.int32), fo["period"])
+        if isinstance(wire, WireRing):
+            wire = _ring_select(wire, fo["S"])
+        nbrs, _w, scs = self._exchange_t(wire, self._entry(step))
+        return nbrs, fo["masked_weights"](t), scs
 
     def combine(self, nbrs, weights_q, scales, selfs):
         return self._combine(nbrs, weights_q, scales, selfs)
+
+    # -- carried wire state (schedule="overlap") ----------------------------
+    def advance_wire(self, bufs, old_wire, step):
+        """Produce the wire state step ``step + 1`` will consume.
+
+        Fault-free: exactly today's double-buffer — quantize the current
+        buckets, drop the old wire.  Fault path: push the fresh generation
+        into the :class:`WireRing` and advance the age counters by the
+        recurrence whose steady state is the precomputed ``send_age``
+        table (``a' = min(a + 1, S)`` while straggling, else 0) — asserted
+        equal in tests, and load-bearing for the sender's slot selection.
+        """
+        fresh = self.quantize_stage(bufs, step)
+        if self.fault_ops is None:
+            return fresh
+        fo = self.fault_ops
+        slots = tuple((_ring_push(op, p), _ring_push(osc, sc))
+                      for (op, osc), (p, sc) in zip(old_wire.slots, fresh))
+        t1 = jnp.mod(jnp.asarray(step, jnp.int32) + 1, fo["period"])
+        send_age = jnp.where(
+            fo["own_straggle"](t1),
+            jnp.minimum(old_wire.send_age + 1, fo["S"]),
+            0).astype(jnp.int32)
+        return WireRing(slots=slots, send_age=send_age,
+                        ages=fo["next_ages"](t1))
+
+    def initial_wire(self, bufs):
+        """Wire state priming step 0 (the ``x_{-1} := x_0`` convention).
+
+        Fault path: the seed ``-1`` generation *replicated* across the ring
+        slots (replication, not re-quantization — one SR draw, copied), so
+        whichever slot a straggler schedule selects early on carries the
+        same bits today's overlap init would.  ``send_age`` starts 0 for
+        everyone: ``straggle[0]`` is all-False by construction ("step 0
+        publishes"), so the counters match the steady-state tables from
+        the very first step.
+        """
+        wire = self.quantize_stage(bufs, jnp.int32(-1))
+        if self.fault_ops is None:
+            return wire
+        fo = self.fault_ops
+        slots = tuple((jnp.repeat(p[:, None], fo["S"], axis=1),
+                       jnp.repeat(sc[:, None], fo["S"], axis=1))
+                      for p, sc in wire)
+        send_age, ages = fo["init_state"]()
+        return WireRing(slots=slots, send_age=send_age, ages=ages)
 
     def continue_from_wire(self, bufs, wire, step):
         """Rounds 1..k of the per-step pipeline, round 1 from ``wire``.
@@ -644,9 +870,23 @@ def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
         nbrs, w, scales = exchange_t(quantize(bufs, seed), None)
         return nbrs, w, scales, list(bufs)
 
+    fault_ops = None
+    if program.fault_tolerant:
+        ft = _fault_tables(program)
+        w_masked = jnp.asarray(ft["weights"], jnp.float32)    # (P, A, A+1)
+        straggle_t = jnp.asarray(ft["straggle"])              # (P, A) bool
+        ages_t = jnp.asarray(ft["ages"], jnp.int32)           # (P, A, A)
+        fault_ops = {
+            "period": ft["period"], "S": ft["S"],
+            "masked_weights": lambda t: jnp.take(w_masked, t, axis=0),
+            "own_straggle": lambda t: jnp.take(straggle_t, t, axis=0),
+            "next_ages": lambda t: jnp.take(ages_t, t, axis=0),
+            "init_state": lambda: (jnp.zeros((n,), jnp.int32), ages_t[0]),
+        }
+
     strategy = _make_strategy(program, quantize=quantize, exchange_t=exchange_t,
                               combine=combine, wire_to_bufs=wire_to_bufs,
-                              legacy_gather=legacy_gather)
+                              legacy_gather=legacy_gather, fault_ops=fault_ops)
 
     return FlatComm(lead=1, batched=True, gather=strategy.gather,
                     interpret=interpret, exchange=exchange, n_agents=n,
@@ -888,11 +1128,58 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
             Topology(name="factored", pi=_factored_pi(factors)),
             exchange=exchange)
 
+    fault_ops = None
+    if program.fault_tolerant:
+        live = [(a, t) for a, t in factors if t.n_agents > 1]
+        if len(live) != 1:
+            raise ValueError(
+                "fault-tolerant mixing supports a single agent mesh axis "
+                f"(got {[a for a, _ in factors]}); factored multi-axis "
+                "meshes need per-axis fault schedules, not implemented")
+        nn = live[0][1].n_agents
+        ft = _fault_tables(program)
+        # per-agent masked weight rows in the union-stencil layout: slot k
+        # at agent i receives from sender (i + shift_k) mod n, so the
+        # dense arrival mask folds into a (P, A, 1+U) table exactly the
+        # way _self_separated_weights folds the dense Pi
+        sched_period = program.schedule.period
+        wtab = np.zeros((ft["period"], nn, 1 + len(union_keys)))
+        for t in range(ft["period"]):
+            e = (t % sched_period) if time_varying else 0
+            wm = entry_wire[e]
+            for i in range(nn):
+                self_w = entry_selfw[e]
+                for ki, k in enumerate(union_keys):
+                    if k not in wm:
+                        continue
+                    sender = (i + k[0][1]) % nn
+                    if ft["arrive"][t, i, sender]:
+                        wtab[t, i, 1 + ki] = wm[k][2]
+                    else:
+                        self_w += wm[k][2]
+                wtab[t, i, 0] = self_w
+        w_masked = jnp.asarray(wtab, jnp.float32)
+        straggle_t = jnp.asarray(ft["straggle"])
+        ages_t = jnp.asarray(ft["ages"], jnp.int32)
+        fault_ops = {
+            "period": ft["period"], "S": ft["S"],
+            "masked_weights":
+                lambda t: jnp.take(w_masked, t, axis=0)[_agent_index()],
+            "own_straggle":
+                lambda t: jnp.take(straggle_t, t, axis=0)[_agent_index()],
+            "next_ages":
+                lambda t: jnp.take(ages_t, t, axis=0)[_agent_index()][None],
+            "init_state":
+                lambda: (jnp.zeros((1,), jnp.int32),
+                         ages_t[0][_agent_index()][None]),
+        }
+
     strategy = _make_strategy(program, quantize=quantize, exchange_t=exchange_t,
                               combine=combine, wire_to_bufs=wire_to_bufs,
                               legacy_gather=legacy_gather,
                               bufs_to_state=bufs_to_state,
-                              state_to_bufs=state_to_bufs)
+                              state_to_bufs=state_to_bufs,
+                              fault_ops=fault_ops)
 
     return FlatComm(lead=lead, batched=False, gather=strategy.gather,
                     interpret=interpret, exchange=exchange, n_agents=n_total,
@@ -952,6 +1239,10 @@ def initial_wire_state(fl: FlatComm, params: PyTree) -> tuple:
     bufs = widen_with_momentum(fl, flatbuf.pack(params, spec))
     seed = jnp.int32(-1)
     if fl.batched:
+        # the strategy's initial_wire wraps the seed -1 generation into a
+        # WireRing on the fault path (plain quantize_stage otherwise)
+        if fl.strategy is not None:
+            return fl.strategy.initial_wire(bufs)
         return fl.quantize_stage(bufs, seed)
     # sharded comm, global agent-stacked view: the strategy's quantize is
     # the shard-local one, so replay _quantize_payloads' split on the
@@ -963,6 +1254,16 @@ def initial_wire_state(fl: FlatComm, params: PyTree) -> tuple:
     if mixed:
         wire = tuple(wire) + tuple(_quantize_wire_stacked(
             bufs[b:], seed, fl.n_agents, fl.exchange, fl.interpret, payload=1))
+    if fl.program is not None and fl.program.fault_tolerant:
+        # global view of the per-shard ring init: replicate the seed -1
+        # generation across the ring, age counters at their step-0 tables
+        ft = _fault_tables(fl.program)
+        wire = WireRing(
+            slots=tuple((jnp.repeat(p[:, None], ft["S"], axis=1),
+                         jnp.repeat(sc[:, None], ft["S"], axis=1))
+                        for p, sc in wire),
+            send_age=jnp.zeros((fl.n_agents,), jnp.int32),
+            ages=jnp.asarray(ft["ages"][0], jnp.int32))
     return wire
 
 

@@ -232,7 +232,9 @@ def make_local_wire_init(fl: consensus.FlatComm) -> Callable:
 
     def local_init(params):
         _, bufs = _pack_wire_bufs(fl, params)
-        return fl.quantize_stage(bufs, jnp.int32(-1))
+        # the strategy wraps the seed -1 generation into a depth-S WireRing
+        # on the fault path (plain quantize_stage otherwise, bit-for-bit)
+        return fl.strategy.initial_wire(bufs)
 
     return local_init
 
@@ -293,6 +295,11 @@ def make_update_phase(optimizer: DistributedOptimizer, comm: CommOps,
     fl = comm.flat
     program = fl.program if fl is not None else None
     error_feedback = program is not None and program.error_feedback
+    if program is not None and program.fault_tolerant and schedule != "overlap":
+        raise ValueError(
+            "staleness > 1 / fault injection needs schedule='overlap': the "
+            "staleness ring generalizes the overlap wire double-buffer — a "
+            "sync exchange has no carried wire state to be stale in")
     mixed = _mixed_momentum(fl)
     # a non-trivial program needs the fused staged path under EVERY
     # schedule — without this, a hand-assembled StepProgram with a
@@ -355,7 +362,10 @@ def make_update_phase(optimizer: DistributedOptimizer, comm: CommOps,
                                                      state.residual)
             return new_params, new_state._replace(wire=new_wire,
                                                   residual=new_res)
-        new_wire = strategy.quantize_stage(bufs, state.step)
+        # advance_wire = quantize_stage on the fault-free path; with a
+        # staleness ring it also pushes the fresh generation and advances
+        # the age counters (no extra bytes — the old slots never move)
+        new_wire = strategy.advance_wire(bufs, state.wire, state.step)
         return new_params, new_state._replace(wire=new_wire)
 
     return update_overlap
@@ -429,7 +439,23 @@ def wire_bytes_per_neighbor(wire) -> int:
     the sync schedule's bytes on the wire (``FlatSpec.exchange_bytes``),
     just one step later.  Row scales only cross the wire for quantized
     payloads; the unit scales of f32/bf16 wires are synthesized locally
-    after the exchange (shift-invariant), so they cost nothing here."""
+    after the exchange (shift-invariant), so they cost nothing here.
+
+    A :class:`repro.core.consensus.WireRing` counts ONE ring generation —
+    the sender-selected slot is the only thing exchanged each step, so the
+    bytes are independent of the ring depth ``S``; the stale slots and the
+    age counters are local state and move nothing (asserted by
+    ``benchmarks/kernel_microbench.py consensus/stale_ring``)."""
+    if isinstance(wire, consensus.WireRing):
+        total = 0
+        for payload, scales in wire.slots:
+            quantized = jnp.dtype(payload.dtype).itemsize == 1
+            for x in ((payload, scales) if quantized else (payload,)):
+                per_agent = 1
+                for d in x.shape[2:]:     # drop the agent AND ring axes
+                    per_agent *= d
+                total += per_agent * jnp.dtype(x.dtype).itemsize
+        return total
     total = 0
     for payload, scales in wire:
         quantized = jnp.dtype(payload.dtype).itemsize == 1

@@ -174,6 +174,84 @@ def schedule_theory_constants(alpha: float, gamma_m: float, h_m: float,
 
 
 # --------------------------------------------------------------------------
+# Bounded-staleness / fault-masked consensus (Lian et al. 1705.09056)
+# --------------------------------------------------------------------------
+
+
+def masked_effective_lambda2(topology_or_schedule, faults=None,
+                             staleness: int = 1) -> float:
+    """Effective disagreement norm of the arrival-masked mixing schedule.
+
+    Builds the per-step *masked* agent-interaction matrices — each
+    schedule entry's ``Pi`` with the non-arrived off-diagonal mass folded
+    into the self weights, exactly the renormalization the runtime applies
+    (:func:`repro.core.faults.arrival_masked_pi` over the fault schedule's
+    arrival table at ring depth ``staleness``) — and returns the
+    period-geometric-mean disagreement norm of their product, the
+    :meth:`~repro.core.topology.TopologySchedule.effective_lambda2`
+    construction applied to the faulted sequence.  With no faults this IS
+    ``effective_lambda2`` (the mask is all-arrive and the masked ``Pi``
+    equals ``Pi``).
+    """
+    from repro.core.faults import arrival_masked_pi, trivial_faults
+    from repro.core.topology import TopologySchedule, fixed_schedule
+
+    if isinstance(topology_or_schedule, Topology):
+        schedule = fixed_schedule(topology_or_schedule)
+    elif isinstance(topology_or_schedule, TopologySchedule):
+        schedule = topology_or_schedule
+    else:
+        raise TypeError(f"expected Topology or TopologySchedule, got "
+                        f"{type(topology_or_schedule).__name__}")
+    f = faults or trivial_faults(schedule.n_agents)
+    tb = f.tables(staleness)
+    period = int(np.lcm(schedule.period, f.period))
+    n = schedule.n_agents
+    prod = np.eye(n)
+    for t in range(period):
+        pi = np.asarray(schedule.topologies[t % schedule.period].pi,
+                        np.float64)
+        prod = arrival_masked_pi(pi, tb["arrive"][t % f.period]) @ prod
+    proj = prod @ (np.eye(n) - np.ones((n, n)) / n)
+    sigma = float(np.linalg.norm(proj, 2))
+    return sigma ** (1.0 / period)
+
+
+def bounded_staleness_consensus_bound(alpha: float, grad_norm_bound: float,
+                                      topology_or_schedule, *,
+                                      staleness: int = 1,
+                                      faults=None) -> float:
+    """Proposition 1 under bounded-staleness arrival-masked mixing.
+
+    With a depth-``S`` staleness ring a consumed neighbor payload lags by
+    up to ``S`` steps, so the disagreement a step can inject grows to the
+    ``S``-step gradient drift ``a L S``, while the per-step contraction
+    degrades to the arrival-masked schedule product — the asynchronous
+    decentralized-SGD picture of Lian et al. (1705.09056) specialized to
+    this deterministic fault model:
+
+        radius(S) = a L S / (1 - max_{s <= S} lambda_mask(s))
+
+    The contraction takes the worst masked spectrum over ring depths
+    ``s <= S`` (an adversary within depth ``S`` may realize any shallower
+    arrival pattern), which makes the bound **monotone non-decreasing in
+    S** by construction — deeper tolerated staleness never claims a
+    tighter radius.  ``staleness=1`` with no faults reduces exactly to
+    :func:`schedule_consensus_bound` (``a L / (1 - lambda_eff)``); infinite
+    when the masked gap closes (e.g. a fault schedule that disconnects the
+    union graph for the whole period).
+    """
+    if not isinstance(staleness, int) or staleness < 1:
+        raise ValueError(f"staleness must be an int >= 1, got {staleness!r}")
+    lam = max(masked_effective_lambda2(topology_or_schedule, faults, s)
+              for s in range(1, staleness + 1))
+    gap = 1.0 - lam
+    if gap <= 0:
+        return float("inf")
+    return alpha * grad_norm_bound * staleness / gap
+
+
+# --------------------------------------------------------------------------
 # Momentum-consensus mixing (Gao & Huang 2010.11166)
 # --------------------------------------------------------------------------
 

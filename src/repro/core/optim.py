@@ -580,12 +580,33 @@ class FedAvg(DistributedOptimizer):
     pulling toward its own shard after every sync, which is NOT the E-step
     server-side FedAvg recurrence (asserted against the hand-rolled
     reference in tests/test_optim.py).
+
+    ``faults`` (a :class:`repro.core.faults.FaultSchedule`) enables
+    **partial participation**: at a sync step whose fault table marks
+    agents as straggling, the server averages over the ``k``-of-``N``
+    *present* agents only (masked sum renormalized by ``N/k``) instead of
+    silently including the absent agents' stale params, and broadcasts the
+    result to everyone — the deterministic analog of client sampling.  A
+    sync step where nobody is present keeps the local params (no sync
+    happened).  The momentum average is masked identically.  Agent-stacked
+    execution mode (the FedAvg baseline's home); asserted against a
+    hand-rolled k-of-N server reference in tests/test_optim.py.
     """
 
-    def __init__(self, schedule, local_steps: int = 1, mu: float = 0.0, **kw):
+    def __init__(self, schedule, local_steps: int = 1, mu: float = 0.0,
+                 faults=None, **kw):
         super().__init__(schedule, **kw)
         self.local_steps = int(local_steps)
         self.mu = mu
+        self.faults = faults
+        if faults is not None:
+            faults.validate()
+            # presence = NOT straggling at the sync step (link drops are a
+            # neighbor-exchange concept; the server round-trip only cares
+            # whether the client reported in)
+            self._present = jnp.asarray(
+                (~faults.straggle).astype("float32"))     # (P, A)
+            self._fault_period = faults.period
 
     def init_inner(self, params):
         return tree_zeros_like(params)
@@ -601,9 +622,24 @@ class FedAvg(DistributedOptimizer):
 
         def sync(args):
             p, vv = args
-            # mu == 0: v is identically -alpha g, already consumed — skip
-            # the second collective
-            return comm.mean(p), (comm.mean(vv) if self.mu else vv)
+            if self.faults is None:
+                # mu == 0: v is identically -alpha g, already consumed —
+                # skip the second collective
+                return comm.mean(p), (comm.mean(vv) if self.mu else vv)
+            tp = jnp.mod(jnp.asarray(step, jnp.int32), self._fault_period)
+            m = jnp.take(self._present, tp, axis=0)       # (A,) f32
+            k = jnp.sum(m)
+            scale = m.shape[0] / jnp.maximum(k, 1.0)
+
+            def masked_mean(tree):
+                wsum = comm.mean(jax.tree.map(
+                    lambda x: x * m.reshape((-1,) + (1,) * (x.ndim - 1)),
+                    tree))
+                return jax.tree.map(
+                    lambda mn, x: jnp.where(k > 0, (mn * scale).astype(x.dtype), x),
+                    wsum, tree)
+
+            return masked_mean(p), (masked_mean(vv) if self.mu else vv)
 
         if self.local_steps <= 1:
             return sync((local, new_v))

@@ -97,8 +97,13 @@ class CollaborativeTrainer:
     buffer on the wire next to the params (``v' = mu (Pi v) - a g``,
     2010.11166 — the principled fix for the momentum/quantization
     large-lr instability; 2x the wire bytes, momentum-capable optimizers
-    only).  Everything validates at construction; non-trivial programs
-    require a ``fused=True`` consensus optimizer.
+    only).  ``staleness=S`` / ``fault_schedule=`` (a
+    :class:`repro.core.faults.FaultSchedule` or a spec string like
+    ``"stall:1:1:3,drop:0:2"``) engage the bounded-staleness wire ring with
+    arrival-masked mixing under ``schedule="overlap"`` — injected
+    stragglers/drops cost bounded drift instead of a stalled step.
+    Everything validates at construction; non-trivial programs require a
+    ``fused=True`` consensus optimizer.
     """
 
     def __init__(
@@ -119,6 +124,8 @@ class CollaborativeTrainer:
         topology_schedule=None,           # TopologySchedule | factory spec str
         error_feedback: bool = False,
         momentum_mixing: str = "none",
+        staleness: int = 1,
+        fault_schedule=None,              # FaultSchedule | spec str (faults.py)
     ):
         self.loss_fn = loss_fn
         self.topology = topology
@@ -139,11 +146,17 @@ class CollaborativeTrainer:
             raise ValueError(
                 f"topology_schedule spans {topology_schedule.n_agents} agents "
                 f"but the topology has {topology.n_agents}")
+        if isinstance(fault_schedule, str):
+            from repro.core.faults import make_fault_schedule
+            fault_schedule = make_fault_schedule(fault_schedule,
+                                                 topology.n_agents)
         self.program: MixingProgram = make_mixing_program(
             topology_schedule if topology_schedule is not None else topology,
             strategy=mixing_strategy, rounds=consensus_rounds,
             error_feedback=error_feedback, exchange=exchange,
-            momentum_mixing=momentum_mixing)
+            momentum_mixing=momentum_mixing,
+            staleness=staleness, faults=fault_schedule)
+        self.faults = self.program.faults
         self.comm: CommOps = stacked_comm_ops(topology, interpret=interpret,
                                               exchange=exchange,
                                               program=self.program)

@@ -36,7 +36,8 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
            exchange: str = "f32", schedule: str = "sync",
            mixing_strategy: str = "static", consensus_rounds: int = 1,
            topology_schedule=None, error_feedback: bool = False,
-           momentum_mixing: str = "none"):
+           momentum_mixing: str = "none", staleness: int = 1,
+           fault_schedule=None):
     import jax
     from repro.configs import get_config, INPUT_SHAPES
     from repro.core.optim import make_optimizer
@@ -60,7 +61,8 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
             microbatches=microbatches, exchange=exchange, schedule=schedule,
             mixing_strategy=mixing_strategy, consensus_rounds=consensus_rounds,
             topology_schedule=topology_schedule, error_feedback=error_feedback,
-            momentum_mixing=momentum_mixing)
+            momentum_mixing=momentum_mixing, staleness=staleness,
+            fault_schedule=fault_schedule)
         params = bundle.param_structs(mesh)
         opt_state = bundle.opt_state_structs(mesh, opt)
         args = (params, opt_state, bundle.batch_specs)
@@ -88,7 +90,8 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
              exchange: str = "f32", schedule: str = "sync",
              mixing_strategy: str = "static", consensus_rounds: int = 1,
              topology_schedule=None, error_feedback: bool = False,
-             momentum_mixing: str = "none"):
+             momentum_mixing: str = "none", staleness: int = 1,
+             fault_schedule=None):
     import jax
     from repro.analysis.hlo import analyze_hlo
     from repro.analysis.roofline import model_flops, roofline_from_stats
@@ -104,11 +107,12 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                          consensus_rounds=consensus_rounds,
                          topology_schedule=topology_schedule,
                          error_feedback=error_feedback,
-                         momentum_mixing=momentum_mixing)
+                         momentum_mixing=momentum_mixing, staleness=staleness,
+                         fault_schedule=fault_schedule)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
               "mixing": mixing, "topology": topology, "optimizer": optimizer_name,
               "microbatches": microbatches, "exchange": exchange,
-              "schedule": schedule}
+              "schedule": schedule, "staleness": staleness}
     if skip:
         record["status"] = skip
         _dump(out_dir, label, record)
@@ -140,6 +144,18 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
             # payload trees; error feedback adds 0 wire bytes (the residual
             # is local optimizer state)
             record["mixing_program"] = program.describe()
+        if program is not None and program.fault_tolerant:
+            # staleness config + per-step arrival accounting: which links
+            # delivered a fresh/stale payload and which were masked out of
+            # the (renormalized) mixing row, for every step of the fault
+            # period — the record a postmortem reads to see what the ring
+            # actually absorbed
+            from repro.core.faults import trivial_faults
+            f = program.faults or trivial_faults(bundle.n_agents)
+            record["staleness_config"] = {"staleness": program.staleness,
+                                          "faults": f.describe()}
+            record["arrival_accounting"] = f.arrival_accounting(
+                program.staleness)
         record["exchange_bytes_per_step"] = consensus_lib.exchange_bytes_per_step(
             flatbuf.make_flat_spec(args[0], lead=1), wire_topo, live, rounds,
             payloads)
@@ -261,6 +277,16 @@ def main() -> int:
                     help="'mixed': the momentum buffer rides the wire and "
                          "mixes with the same Pi (2010.11166); the record's "
                          "exchange_bytes_per_step doubles (payloads=2)")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="bounded-staleness ring depth S (pairs with "
+                         "--schedule overlap); the record gains a "
+                         "staleness_config + per-step arrival_accounting "
+                         "section and exchange_schedule proves every "
+                         "ppermute stays carried-only at this S")
+    ap.add_argument("--fault-schedule", default=None,
+                    help="deterministic fault-injection spec (e.g. "
+                         "'stall:1:1:3,drop:0:2', 'random:0.1:16'; see "
+                         "repro.core.faults.make_fault_schedule)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     ap.add_argument("--no-analyze", action="store_true")
@@ -290,7 +316,9 @@ def main() -> int:
                        consensus_rounds=args.consensus_rounds,
                        topology_schedule=args.topology_schedule,
                        error_feedback=args.error_feedback,
-                       momentum_mixing=args.momentum_mixing)
+                       momentum_mixing=args.momentum_mixing,
+                       staleness=args.staleness,
+                       fault_schedule=args.fault_schedule)
         if str(rec.get("status", "")).startswith("FAIL"):
             failures += 1
     print(f"[dryrun] done: {len(pairs)} pairs, {failures} failures")

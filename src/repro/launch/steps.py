@@ -227,6 +227,8 @@ def build_train_step(
     topology_schedule: Optional[str] = None,  # TopologySchedule factory spec
     error_feedback: bool = False,  # EF residuals for quantized exchanges
     momentum_mixing: str = "none",  # "mixed": momentum rides the wire too
+    staleness: int = 1,           # bounded-staleness ring depth S (overlap)
+    fault_schedule=None,          # FaultSchedule | spec str (repro.core.faults)
 ) -> TrainStepBundle:
     rules = shlib.rules_for_mode(mode, mesh)
     n_agents = shlib.agent_count(mesh, mode)
@@ -234,11 +236,15 @@ def build_train_step(
     sched_obj = None
     if topology_schedule is not None:
         sched_obj = make_topology_schedule(topology_schedule, n_agents)
+    if isinstance(fault_schedule, str):
+        from repro.core.faults import make_fault_schedule
+        fault_schedule = make_fault_schedule(fault_schedule, n_agents)
     program = consensus_lib.make_mixing_program(
         sched_obj if sched_obj is not None else topology,
         strategy=mixing_strategy, rounds=consensus_rounds,
         error_feedback=error_feedback, exchange=exchange,
-        momentum_mixing=momentum_mixing)
+        momentum_mixing=momentum_mixing,
+        staleness=staleness, faults=fault_schedule)
     if not program.is_trivial and mixing != "ppermute_fused":
         raise ValueError(
             f"mixing strategy {program.strategy!r} (rounds={program.rounds}, "
@@ -314,7 +320,18 @@ def build_train_step(
         # non-agent mesh axis (a model-parallel device pair carries two
         # different row blocks — the wire is never read as one global
         # buffer, only round-tripped shard-to-shard between steps).
-        wire_specs = tuple((state_sp, state_sp) for _ in range(_n_buckets()))
+        if program.fault_tolerant:
+            # Depth-S staleness ring: the ring axis (dim 1) is unsharded —
+            # every shard keeps its own S generations locally; rows still
+            # shard over the non-agent axes exactly like the flat buffers.
+            ring_sp = P(rules["agent"], None, other_axes or None, None)
+            wire_specs = consensus_lib.WireRing(
+                slots=tuple((ring_sp, ring_sp) for _ in range(_n_buckets())),
+                send_age=P(rules["agent"]),
+                ages=P(rules["agent"], None))
+        else:
+            wire_specs = tuple((state_sp, state_sp)
+                               for _ in range(_n_buckets()))
         opt_specs = opt_specs._replace(wire=wire_specs)
         local_wire_init = engine.make_local_wire_init(fl)
 

@@ -67,6 +67,17 @@ def main() -> None:
                          "2010.11166) — stabilizes quantized exchanges at "
                          "large lr; 2x wire bytes; momentum optimizers only "
                          "(implies --fused)")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="bounded-staleness ring depth S: each neighbor slot "
+                         "may be up to S steps stale before its weight is "
+                         "masked out (arrival-renormalized mixing; requires "
+                         "--schedule overlap, implies --fused)")
+    ap.add_argument("--fault-schedule", default=None,
+                    help="deterministic fault-injection spec, e.g. "
+                         "'straggler:1:2', 'stall:1:1:3,drop:0:2', "
+                         "'random:0.1:16' or 'none' (see "
+                         "repro.core.faults.make_fault_schedule; requires "
+                         "--schedule overlap, implies --fused)")
     ap.add_argument("--microbatch", type=int, default=1,
                     help="gradient-accumulation microbatches per step")
     ap.add_argument("--lr", type=float, default=0.01)
@@ -117,9 +128,14 @@ def main() -> None:
         # the overlap wire double-buffer lives on the fused flat-buffer path
         print("[train] --schedule overlap implies --fused; enabling")
         args.fused = True
+    fault_tolerant = (args.staleness > 1
+                      or (args.fault_schedule not in (None, "none")))
+    if fault_tolerant and args.schedule != "overlap":
+        ap.error("--staleness > 1 / --fault-schedule need --schedule overlap "
+                 "(the staleness ring generalizes the overlap wire buffer)")
     nontrivial_mixing = (args.mixing_strategy != "static"
                          or args.consensus_rounds > 1 or args.error_feedback
-                         or args.momentum_mixing != "none")
+                         or args.momentum_mixing != "none" or fault_tolerant)
     if nontrivial_mixing and not args.fused:
         # the strategy layer lives on the fused flat-buffer path
         print("[train] non-static mixing strategy implies --fused; enabling")
@@ -145,7 +161,9 @@ def main() -> None:
                                    consensus_rounds=args.consensus_rounds,
                                    topology_schedule=args.topology_schedule,
                                    error_feedback=args.error_feedback,
-                                   momentum_mixing=args.momentum_mixing)
+                                   momentum_mixing=args.momentum_mixing,
+                                   staleness=args.staleness,
+                                   fault_schedule=args.fault_schedule)
 
     from repro.core.consensus import describe_exchange_cost
     program = trainer.program

@@ -1,0 +1,359 @@
+"""ISSUE-6: bounded-staleness exchange with straggler/drop tolerance.
+
+The depth-S wire ring (repro.core.consensus.WireRing) + the deterministic
+fault-injection layer (repro.core.faults.FaultSchedule), stacked execution
+mode.  The sharded half (real shard_map + ppermutes, subprocess mesh) is
+in tests/test_sharded.py::test_sharded_bounded_staleness_acceptance.
+
+Covered here:
+* FaultSchedule spec grammar, determinism, periodicity, validation
+  (incl. the step-0-publishes anchor), arrival tables and accounting;
+* arrival_masked_pi row-stochasticity;
+* MixingProgram staleness/faults axes: validation, trivial-fault
+  normalization, EF incompatibility, sync-schedule incompatibility;
+* S=1/no-faults AND engaged-ring/no-faults are bit-for-bit today's
+  overlap schedule;
+* end-to-end stacked fault tolerance: injected stall + permanent link
+  drop at S in {1, 2, 4} — every step completes, params stay finite,
+  drift vs the fault-free run is bounded;
+* the ring's carried slots are shifted copies, never re-quantized, and
+  the runtime send_age counters match the host-side fault tables;
+* WireRing checkpoints round-trip bit-exact;
+* Lyapunov: bounded_staleness_consensus_bound monotone in S, reducing
+  to schedule_consensus_bound at S=1/no-faults.
+"""
+
+import functools
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus as C
+from repro.core import engine
+from repro.core import lyapunov as L
+from repro.core.faults import (
+    FaultSchedule,
+    arrival_masked_pi,
+    make_fault_schedule,
+    trivial_faults,
+)
+from repro.core.optim import CDSGD, make_optimizer
+from repro.core.topology import fixed_schedule, make_topology
+from repro.core.trainer import CollaborativeTrainer
+from repro.nn.paper_models import (
+    classifier_loss,
+    mlp_classifier_apply,
+    mlp_classifier_template,
+)
+from repro.nn.param import init_params
+
+N_AGENTS = 4
+LOSS = functools.partial(classifier_loss, mlp_classifier_apply)
+FAULT_SPEC = "stall:1:1:3,drop:0:2"   # agent 1 stalls 3 steps, link 0<-2 down
+FAULT_DRIFT_BOUND = 5e-2              # measured ~1.5e-2 on this testbed
+
+
+def _testbed(seed=0):
+    params = init_params(mlp_classifier_template(8, 4, width=16, depth=2),
+                         jax.random.PRNGKey(seed))
+    topo = make_topology("ring", N_AGENTS)
+    rng = np.random.default_rng(seed)
+    batch = {"x": jnp.asarray(rng.standard_normal((N_AGENTS, 8, 8)), jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 4, (N_AGENTS, 8)), jnp.int32)}
+    return params, topo, batch
+
+
+def _max_diff(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(jnp.max(jnp.abs(x - y))), a, b)))
+
+
+def _trainer(params, topo, *, staleness=1, fault=None, lr=0.05,
+             exchange="int8"):
+    return CollaborativeTrainer(LOSS, params, topo,
+                                CDSGD(lr, fused=True), interpret=True,
+                                exchange=exchange, schedule="overlap",
+                                staleness=staleness, fault_schedule=fault)
+
+
+# --------------------------------------------------------------------------
+# FaultSchedule: grammar, determinism, tables
+# --------------------------------------------------------------------------
+
+def test_fault_schedule_grammar():
+    assert make_fault_schedule("none", 4) is None
+    assert make_fault_schedule(None, 4) is None
+
+    f = make_fault_schedule("straggler:2:2", 4)
+    # publishes at t % 3 == 0 only
+    assert f.period == 3
+    assert not f.straggle[0].any()
+    assert f.straggle[1, 2] and f.straggle[2, 2]
+    assert not f.straggle[:, [0, 1, 3]].any()
+
+    f = make_fault_schedule("stall:1:1:3", 4)
+    assert f.period == 4
+    assert list(f.straggle[:, 1]) == [False, True, True, True]
+
+    f = make_fault_schedule("drop:0:2", 4)
+    assert f.period == 1
+    assert not f.linkup[0, 0, 2]
+    assert f.linkup.sum() == 16 - 1
+
+    f = make_fault_schedule("droplink:3:1:2:2", 4)
+    assert f.period == 4
+    assert list(f.linkup[:, 3, 1]) == [True, True, False, False]
+
+    # comma-join takes the lcm of the parts' periods
+    f = make_fault_schedule(FAULT_SPEC, 4)
+    assert f.period == 4 and not f.is_trivial
+    d = f.describe()
+    assert d["spec"] == FAULT_SPEC and d["n_agents"] == 4
+    assert d["drop_fraction"] > 0 and d["straggle_fraction"] > 0
+
+
+def test_fault_schedule_random_deterministic():
+    a = make_fault_schedule("random:0.3:8", 5, seed=7)
+    b = make_fault_schedule("random:0.3:8", 5, seed=7)
+    c = make_fault_schedule("random:0.3:8", 5, seed=8)
+    assert np.array_equal(a.linkup, b.linkup)
+    assert not np.array_equal(a.linkup, c.linkup)
+    # diag never drops, and some off-diag link actually did
+    assert all(a.linkup[t].diagonal().all() for t in range(a.period))
+    assert not a.linkup.all()
+    a.validate()
+
+
+def test_fault_schedule_validation():
+    with pytest.raises(ValueError, match="agent"):
+        make_fault_schedule("straggler:9:2", 4)
+    with pytest.raises(ValueError, match="start must be >= 1"):
+        # a stall window touching step 0 breaks the publishes-at-0 anchor
+        make_fault_schedule("stall:1:0:3", 4)
+    with pytest.raises(ValueError):
+        make_fault_schedule("bogus:1:2", 4)
+    # hand-built schedules go through the same validator
+    f = trivial_faults(4)
+    bad = FaultSchedule(name="bad", n_agents=4, period=1,
+                        straggle=f.straggle,
+                        linkup=~f.linkup)  # diag down
+    with pytest.raises(ValueError, match="diag"):
+        bad.validate()
+
+
+def test_fault_tables_send_age_and_arrival():
+    """The host-side tables implement the exact send_age recurrence the
+    runtime carries: a stalled sender's published payload ages by 1 per
+    missed step, capped at S (= masked), and arrive = linkup AND age < S
+    with the self link always up."""
+    f = make_fault_schedule(FAULT_SPEC, 4)
+    tb = f.tables(2)
+    # agent 1 stalls at t=1..3: age 0,1,2,2 (capped at S=2)
+    assert list(tb["send_age"][:, 1]) == [0, 1, 2, 2]
+    assert not tb["send_age"][:, [0, 2, 3]].any()
+    # at t=1 agent 1's payload is 1 step stale -> still arrives (S=2);
+    # at t=2,3 it is S steps stale -> masked for every receiver but itself
+    assert tb["arrive"][1][:, 1].all()
+    for t in (2, 3):
+        col = tb["arrive"][t][:, 1]
+        assert col[1] and not col[[0, 2, 3]].any()
+    # the dropped link 0<-2 is down at every step
+    assert not tb["arrive"][:, 0, 2].any()
+    # self links always arrive
+    assert all(tb["arrive"][t].diagonal().all() for t in range(4))
+
+    acc = f.arrival_accounting(2)
+    assert len(acc) == f.period
+    assert {"step", "arrived_links", "masked_links", "max_staleness",
+            "mean_staleness"} <= set(acc[0])
+    # t=1: only the drop masked, agent 1's slot is stale (staleness 2)
+    assert acc[1]["masked_links"] == 1 and acc[1]["max_staleness"] == 2
+    # t=2: drop + agent 1 masked for its 3 peers
+    assert acc[2]["masked_links"] == 4
+
+
+def test_arrival_masked_pi_row_stochastic():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        w = rng.random((5, 5)) + 0.1
+        pi = w / w.sum(axis=1, keepdims=True)
+        m = rng.random((5, 5)) < 0.6
+        np.fill_diagonal(m, True)
+        out = arrival_masked_pi(pi, m)
+        np.testing.assert_allclose(out.sum(axis=1), 1.0, atol=1e-12)
+        # masked off-diag entries are exactly zero, their mass on the diag
+        off = ~m & ~np.eye(5, dtype=bool)
+        assert (out[off] == 0).all()
+        np.testing.assert_allclose(
+            np.diag(out), np.diag(pi) + (pi * off).sum(axis=1), atol=1e-12)
+    # all-arrived mask is the identity transform
+    np.testing.assert_array_equal(
+        arrival_masked_pi(pi, np.ones((5, 5), bool)), pi)
+
+
+# --------------------------------------------------------------------------
+# MixingProgram staleness/faults axes
+# --------------------------------------------------------------------------
+
+def test_mixing_program_fault_axes():
+    topo = make_topology("ring", 4)
+    p = C.make_mixing_program(topo)
+    assert p.staleness == 1 and p.faults is None and not p.fault_tolerant
+    assert p.is_trivial
+
+    f = make_fault_schedule(FAULT_SPEC, 4)
+    p = C.make_mixing_program(topo, staleness=3, faults=f)
+    assert p.fault_tolerant and not p.is_trivial
+    d = p.describe()
+    assert d["staleness"] == 3 and d["faults"]["spec"] == FAULT_SPEC
+
+    # trivial faults normalize away entirely
+    p = C.make_mixing_program(topo, faults=trivial_faults(4))
+    assert p.faults is None and not p.fault_tolerant
+
+    with pytest.raises(ValueError, match="staleness"):
+        C.make_mixing_program(topo, staleness=0)
+    with pytest.raises(ValueError, match="error_feedback"):
+        C.make_mixing_program(topo, exchange="int8", error_feedback=True,
+                              faults=f)
+    with pytest.raises(ValueError, match="n_agents|agents"):
+        C.make_mixing_program(topo, faults=make_fault_schedule("drop:0:2", 5))
+
+
+def test_sync_schedule_rejects_fault_program():
+    params, topo, _ = _testbed()
+    with pytest.raises(ValueError, match="overlap"):
+        CollaborativeTrainer(LOSS, params, topo, CDSGD(0.05, fused=True),
+                             interpret=True, schedule="sync",
+                             staleness=2)
+
+
+# --------------------------------------------------------------------------
+# bit-for-bit: the ring at S=1/no-faults IS today's overlap schedule
+# --------------------------------------------------------------------------
+
+def test_no_fault_paths_bitwise_equal_plain_overlap():
+    """Three configs must produce bit-identical trajectories: plain
+    overlap, staleness=1 + fault_schedule='none' (normalized away), and
+    the ENGAGED ring at S in {2, 4} with no faults (sel == 0 selects the
+    fresh generation and the all-arrived mask is exact)."""
+    params, topo, batch = _testbed()
+    ref = _trainer(params, topo)
+    for _ in range(8):
+        ref.step(batch)
+
+    for kw in ({"staleness": 1, "fault": "none"},
+               {"staleness": 2}, {"staleness": 4}):
+        tr = _trainer(params, topo, **kw)
+        for _ in range(8):
+            tr.step(batch)
+        assert _max_diff(ref.state.params, tr.state.params) == 0.0, kw
+
+
+# --------------------------------------------------------------------------
+# end-to-end stacked fault tolerance
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("staleness", [1, 2, 4])
+def test_stacked_fault_drift_bounded(staleness):
+    """Injected stall (one sender s_j up to S stale for a 3-step window)
+    plus a permanently dropped link: training completes every step, the
+    params stay finite, and the drift vs the fault-free overlap run is
+    bounded — the faults cost accuracy smoothly instead of stalling or
+    diverging the run."""
+    params, topo, batch = _testbed()
+    ref = _trainer(params, topo)
+    tr = _trainer(params, topo, staleness=staleness, fault=FAULT_SPEC)
+    losses = []
+    for _ in range(12):
+        ref.step(batch)
+        losses.append(tr.step(batch)["loss"])
+    assert all(np.isfinite(l) for l in losses)
+    assert all(jnp.all(jnp.isfinite(x))
+               for x in jax.tree.leaves(tr.state.params))
+    drift = _max_diff(ref.state.params, tr.state.params)
+    assert 0 < drift < FAULT_DRIFT_BOUND, drift
+    # the runtime send_age counters match the host-side fault tables at
+    # the step the wire is now positioned for (consumption step = 12)
+    f = tr.program.faults
+    tb = f.tables(staleness)
+    np.testing.assert_array_equal(
+        np.asarray(tr.state.opt_state.wire.send_age),
+        tb["send_age"][12 % f.period])
+    # every masked mixing row still sums to exactly 1 (float64 tables)
+    ft = C._fault_tables(tr.program)
+    w = ft["weights"]          # (PW, A, A+1) self-separated form
+    np.testing.assert_allclose(w.sum(axis=2), 1.0, atol=1e-12)
+
+
+def test_ring_slots_are_shifted_copies_never_requantized():
+    """advance_wire pushes the fresh generation and SHIFTS the carried
+    ones bitwise — a carried slot is never re-quantized, so it keeps the
+    SR stream of its original (step, agent, bucket, payload) seed and can
+    never alias a live stream (the structural half of the wire_seed ring
+    test in tests/test_mixing.py)."""
+    params, topo, batch = _testbed()
+    tr = _trainer(params, topo, staleness=3, fault=FAULT_SPEC)
+    prev = jax.tree.map(lambda x: np.asarray(x), tr.state.opt_state.wire)
+    for _ in range(5):
+        tr.step(batch)
+        cur = jax.tree.map(lambda x: np.asarray(x), tr.state.opt_state.wire)
+        for (pp, ps), (cp, cs) in zip(prev.slots, cur.slots):
+            np.testing.assert_array_equal(cp[:, 1:], pp[:, :-1])
+            np.testing.assert_array_equal(cs[:, 1:], ps[:, :-1])
+        prev = cur
+
+
+def test_wire_ring_checkpoint_roundtrip():
+    from repro.checkpoint import restore_train_state, save_train_state
+    params, topo, batch = _testbed()
+    tr = _trainer(params, topo, staleness=3, fault="straggler:2:2")
+    for _ in range(5):
+        tr.step(batch)
+    st = tr.state
+    assert isinstance(st.opt_state.wire, C.WireRing)
+    with tempfile.TemporaryDirectory() as d:
+        save_train_state(d, st.step, st.params, st.opt_state)
+        _, o2 = restore_train_state(d, st.params, st.opt_state)
+    for a, b in zip(jax.tree.leaves(st.opt_state), jax.tree.leaves(o2)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stacked_dependency_report_labels_ring_as_wire():
+    """The jaxpr taint analysis treats every WireRing leaf (slots + age
+    counters) as carried wire state with no change — stacked mode has no
+    collectives, so the report's flags must show the fault path adds no
+    param/batch dependency to any exchange."""
+    params, topo, batch = _testbed()
+    tr = _trainer(params, topo, staleness=2, fault=FAULT_SPEC)
+    rep = engine.exchange_dependency_report(
+        tr._program.step_fn, tr.state.params, tr.state.opt_state, batch)
+    assert rep["n_ppermutes"] == 0          # dense stacked mixing
+    assert not rep["depends_on_params"] and not rep["depends_on_batch"]
+
+
+# --------------------------------------------------------------------------
+# Lyapunov: bounded-staleness consensus bound
+# --------------------------------------------------------------------------
+
+def test_bounded_staleness_bound_monotone_and_reduces():
+    topo = make_topology("ring", 4)
+    f = make_fault_schedule(FAULT_SPEC, 4)
+    # S=1, no faults: exactly Proposition 1's schedule bound
+    assert L.bounded_staleness_consensus_bound(0.01, 1.0, topo) == \
+        pytest.approx(L.schedule_consensus_bound(
+            0.01, 1.0, fixed_schedule(topo)))
+    bounds = [L.bounded_staleness_consensus_bound(
+        0.01, 1.0, topo, staleness=S, faults=f) for S in (1, 2, 4, 8)]
+    # monotone non-decreasing in S (staler payloads, weaker guarantee)
+    assert all(b1 >= b0 for b0, b1 in zip(bounds, bounds[1:])), bounds
+    assert all(np.isfinite(b) and b > 0 for b in bounds)
+    # faults strictly weaken the contraction vs the fault-free schedule
+    assert L.masked_effective_lambda2(topo, f, 1) > \
+        L.masked_effective_lambda2(topo, None, 1)
+    with pytest.raises(ValueError):
+        L.bounded_staleness_consensus_bound(0.01, 1.0, topo, staleness=0)

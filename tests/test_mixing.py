@@ -645,6 +645,42 @@ def test_wire_seed_matches_actual_quantize_stage():
                                               np.asarray(ss))
 
 
+def test_wire_seed_ring_window_collision_free():
+    """ISSUE-6 satellite: wire_seed composition at staleness depth S.
+
+    The depth-S ring re-publishes carried payloads WITHOUT re-quantizing
+    them (bitwise shift, asserted structurally in tests/test_faults.py::
+    test_ring_slots_are_shifted_copies_never_requantized), so a slot
+    carried s <= S steps keeps the SR stream seeded at its quantization
+    step t-s.  That is only sound if no carried seed aliases a LIVE seed:
+    over the ring's (step, payload) index space — every (t, t-s) pair
+    with s <= S_MAX = 16, crossed with agents<=64, buckets<=8,
+    payloads 2 — all seeds in the depth-S window must be distinct, for t
+    in a dense window AND strided across the full 1e6-step range."""
+    S_MAX = 16
+    stride = dict(step=C._SEED_STEP_STRIDE, agent=C._SEED_AGENT_STRIDE,
+                  bucket=C._SEED_BUCKET_STRIDE, payload=C._SEED_PAYLOAD_STRIDE)
+
+    def window_seeds(t):
+        # every seed the depth-S ring can hold alongside step t's live
+        # quantization: generations t-S_MAX .. t, all agents/buckets/payloads
+        s = np.arange(S_MAX + 1, dtype=np.int64)
+        a = np.arange(64, dtype=np.int64)
+        b = np.arange(8, dtype=np.int64)
+        p = np.arange(2, dtype=np.int64)
+        out = (stride["step"] * (t - s[:, None, None, None])
+               + stride["agent"] * a[None, :, None, None]
+               + stride["bucket"] * b[None, None, :, None]
+               + stride["payload"] * p[None, None, None, :])
+        return (out & 0xFFFFFFFF).ravel()
+
+    for t in list(range(S_MAX, S_MAX + 4)) + \
+            [int(x) for x in (np.arange(53) * 18973 + 29) % 1_000_000]:
+        w = window_seeds(t)
+        assert np.unique(w).size == w.size, \
+            f"ring-window seed collision at step {t}"
+
+
 # -------------------------------------------------------------------------
 # THE ISSUE-5 acceptance: momentum-mixed int8 CDMSGD at the caveat lr
 # -------------------------------------------------------------------------

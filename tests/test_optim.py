@@ -256,3 +256,77 @@ def test_fedavg_wire_accounting_bytes_per_e():
     assert e4m["per_step_bytes"] == 2 * e4["per_step_bytes"]
     assert e1["per_sync_bytes"] == int(2 * (N - 1) / N
                                        * spec.exchange_bytes("f32"))
+
+
+# -------------------------------------------------------------------------
+# FedAvg partial participation (ISSUE 6 satellite): k-of-N present agents
+# -------------------------------------------------------------------------
+
+
+def test_fedavg_partial_participation_matches_handrolled_server(setup):
+    """FedAvg E=2 mu=0.9 under a fault schedule vs the hand-rolled
+    k-of-N server reference: at each sync step the server averages ONLY
+    the present (non-straggling) agents — masked sum renormalized by
+    N/k — and broadcasts to everyone, momentum masked identically.
+    Mirrors test_fedavg_matches_handrolled_e_step_reference, which this
+    reduces to when every agent is present."""
+    from repro.core.faults import make_fault_schedule
+    _, comm, params, grads = setup
+    mu, e = 0.9, 2
+    # agent 1 absent at t in {1,2,3} mod 4; agent 3 absent at t in {2,3}
+    faults = make_fault_schedule("stall:1:1:3,stall:3:2:2", N)
+    opt = FedAvg(ALPHA, local_steps=e, mu=mu, faults=faults)
+    st = opt.init(params)
+    p = params
+    x = np.asarray(params["w"], np.float64)
+    v = np.zeros_like(x)
+    g = np.asarray(grads["w"], np.float64)
+    present = ~np.asarray(faults.straggle)            # (P, N)
+    saw_partial = False
+    for t in range(9):
+        p, st = opt.update(p, grads, st, comm)
+        v = mu * v - ALPHA * g
+        x = x + v
+        if (t + 1) % e == 0:
+            m = present[t % faults.period].astype(np.float64)
+            k = m.sum()
+            assert k > 0
+            saw_partial = saw_partial or k < N
+            x = np.broadcast_to((x * m[:, None]).sum(0, keepdims=True) / k,
+                                x.shape).copy()
+            v = np.broadcast_to((v * m[:, None]).sum(0, keepdims=True) / k,
+                                v.shape).copy()
+        np.testing.assert_allclose(np.asarray(p["w"]), x, rtol=0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st.inner["w"]), v, rtol=0,
+                                   atol=1e-5)
+    assert saw_partial, "the schedule never exercised a k < N sync"
+
+
+def test_fedavg_nobody_present_keeps_local_params(setup):
+    """A sync step where EVERY agent straggles is a no-op sync: params
+    keep their local values (no zeroing through the masked sum) and stay
+    divergent across agents."""
+    from repro.core.faults import make_fault_schedule
+    _, comm, params, grads = setup
+    spec = ",".join(f"stall:{j}:1:1" for j in range(N))
+    faults = make_fault_schedule(spec, N)               # all absent at t=1
+    opt = FedAvg(ALPHA, local_steps=2, mu=0.9, faults=faults)
+    ref = FedAvg(ALPHA, local_steps=2, mu=0.9)
+    p, st = params, opt.init(params)
+    pr, str_ = params, ref.init(params)
+    for _ in range(2):                                  # sync lands at t=1
+        p, st = opt.update(p, grads, st, comm)
+        pr, str_ = ref.update(pr, grads, str_, comm)
+    # faulted run skipped the sync: agents still diverge, all finite
+    assert float(jnp.max(jnp.abs(p["w"] - p["w"][0:1]))) > 1e-4
+    assert bool(jnp.all(jnp.isfinite(p["w"])))
+    # the fault-free reference DID average
+    assert float(jnp.max(jnp.abs(pr["w"] - pr["w"][0:1]))) < 1e-6
+    # ... and the faulted params equal plain 2-step local momentum SGD
+    want = np.asarray(params["w"], np.float64)
+    v = np.zeros_like(want)
+    g = np.asarray(grads["w"], np.float64)
+    for _ in range(2):
+        v = 0.9 * v - ALPHA * g
+        want = want + v
+    np.testing.assert_allclose(np.asarray(p["w"]), want, rtol=0, atol=1e-5)

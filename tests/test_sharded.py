@@ -841,3 +841,149 @@ def test_sharded_build_train_step_momentum_mixing():
     assert res["report"]["off_grad_update_critical_path"]
     assert res["residual_live"] > 0.0
     assert res["wire_bytes"] == 2 * res["wire_bytes_base"]
+
+
+# host-side mirror of the subprocess fault table: at t = 0 mod 4 every
+# sender has just published (stall window is steps 1..3)
+FAULT_SEND_AGE_T0 = [0, 0, 0, 0]
+
+
+@pytest.mark.slow
+def test_sharded_bounded_staleness_acceptance():
+    """ISSUE-6 acceptance, sharded half: the depth-S staleness ring +
+    fault-injection layer through the REAL shard_map machinery
+    (make_local_fused_comm -> engine phases -> ppermutes) on the paper
+    MLP testbed, subprocess mesh, injected straggler schedule (one
+    neighbor up to s_j = S steps stale for a 3-step window) plus one
+    permanently dropped link:
+
+    * training completes EVERY step at S in {1, 2, 4}, params finite,
+      and the drift vs the fault-free overlap run is bounded — the same
+      envelope as the stacked test in tests/test_faults.py;
+    * S=1 with no faults (and the ENGAGED ring with no faults) is
+      bit-for-bit today's overlap schedule;
+    * exchange_dependency_report certifies every ppermute consumes ONLY
+      carried wire state at EVERY tested S — the collective count stays
+      the plain overlap schedule's 4 (2 ring shifts x (payload + row
+      scales)): the ring deepens local state, never the wire.
+    """
+    res = run_sub(textwrap.dedent("""
+        import functools, json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core import consensus as C
+        from repro.core import engine
+        from repro.core.faults import make_fault_schedule
+        from repro.core.optim import CDSGD
+        from repro.core.topology import make_topology
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch import steps as steps_lib
+        from repro.nn.paper_models import (classifier_loss,
+                                           mlp_classifier_apply,
+                                           mlp_classifier_template)
+        from repro.nn.param import init_params
+
+        LOSS = functools.partial(classifier_loss, mlp_classifier_apply)
+        A = 4
+        mesh = make_debug_mesh(A, 1)
+        topo = make_topology("ring", A)
+        base = init_params(mlp_classifier_template(8, 4, width=16, depth=2),
+                           jax.random.PRNGKey(0))
+        params0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (A,) + x.shape).copy(), base)
+        rng = np.random.default_rng(0)
+        batch = {"x": jnp.asarray(rng.standard_normal((A, 8, 8)), jnp.float32),
+                 "y": jnp.asarray(rng.integers(0, 4, (A, 8)), jnp.int32)}
+        pspecs = jax.tree.map(
+            lambda x: P(*(("data",) + (None,) * (x.ndim - 1))), params0)
+        state_sp = P("data", None, None)
+        FAULT = make_fault_schedule("stall:1:1:3,drop:0:2", A)
+
+        def build(S, fault):
+            opt = CDSGD(0.05, fused=True)
+            program = C.make_mixing_program(topo, exchange="int8",
+                                            staleness=S, faults=fault)
+            comm = steps_lib.make_local_fused_comm(
+                topo, mesh, "train", interpret=True, exchange="int8",
+                program=program)
+            engine.check_program_support(opt, comm)
+            opt_specs = opt.state_specs(pspecs)
+            n_entries = program.n_payloads
+            if program.fault_tolerant:
+                ring_sp = P("data", None, None, None)
+                wire_specs = C.WireRing(
+                    slots=tuple((ring_sp, ring_sp)
+                                for _ in range(n_entries)),
+                    send_age=P("data"), ages=P("data", None))
+            else:
+                wire_specs = tuple((state_sp, state_sp)
+                                   for _ in range(n_entries))
+            opt_specs = opt_specs._replace(wire=wire_specs)
+            local_wire_init = engine.make_local_wire_init(comm.flat)
+            init_wire = lambda p: steps_lib._shard_map(
+                local_wire_init, mesh, (pspecs,), wire_specs)(p)
+            update_local = engine.make_update_phase(opt, comm, "overlap")
+            update_phase = lambda p, g, s: steps_lib._shard_map(
+                update_local, mesh, (pspecs, pspecs, opt_specs),
+                (pspecs, opt_specs))(p, g, s)
+            return engine.StepProgram(
+                optimizer=opt, comm=comm,
+                grad_phase=engine.make_grad_phase(LOSS),
+                update_phase=update_phase, schedule="overlap",
+                init_wire=init_wire)
+
+        def run(S, fault, steps=16):
+            prog = build(S, fault)
+            with mesh:
+                state = prog.init_state(params0)
+                step = jax.jit(prog.step_fn)
+                p = params0
+                losses = []
+                for _ in range(steps):
+                    p, state, m = step(p, state, batch)
+                    losses.append(float(m["loss"]))
+            return p, state, losses
+
+        def md(a, b):
+            return max(jax.tree.leaves(jax.tree.map(
+                lambda x, y: float(jnp.max(jnp.abs(x - y))), a, b)))
+
+        p_ref, _, _ = run(1, None)
+        out = {"ring_noop_drift": md(p_ref, run(2, None)[0])}
+        for S in (1, 2, 4):
+            pf, sf, losses = run(S, FAULT)
+            prog = build(S, FAULT)
+            with mesh:
+                st = prog.init_state(params0)
+                rep = engine.exchange_dependency_report(
+                    prog.step_fn, params0, st, batch)
+            out[f"S{S}"] = {
+                "drift": md(p_ref, pf),
+                "all_finite": bool(all(np.isfinite(l) for l in losses)
+                                   and all(jnp.all(jnp.isfinite(x))
+                                           for x in jax.tree.leaves(pf))),
+                "n_steps": len(losses),
+                "send_age": np.asarray(sf.wire.send_age).tolist(),
+                "report": rep,
+            }
+        print("RESULT " + json.dumps(out))
+    """), timeout=840)
+    # engaged ring + no faults == plain overlap, bit for bit
+    assert res["ring_noop_drift"] == 0.0
+    for S in (1, 2, 4):
+        r = res[f"S{S}"]
+        assert r["n_steps"] == 16 and r["all_finite"], r
+        # bounded drift vs the fault-free run (stacked envelope, see
+        # tests/test_faults.py::FAULT_DRIFT_BOUND)
+        assert 0 < r["drift"] < 5e-2, r
+        # every collective consumes ONLY carried wire state at every S,
+        # and the count stays the plain overlap schedule's 4 — bytes on
+        # the wire are independent of the ring depth
+        assert r["report"]["n_ppermutes"] == 4, r
+        assert r["report"]["n_ppermutes_carried_only"] == 4, r
+        assert r["report"]["off_grad_update_critical_path"], r
+        assert not r["report"]["depends_on_params"], r
+        # the runtime send_age counters match the host fault table at the
+        # consumption step the wire is positioned for (16 % period 4 = 0)
+        assert r["send_age"] == FAULT_SEND_AGE_T0, r
+
