@@ -37,11 +37,20 @@ carried :class:`repro.core.consensus.WireRing` buffers — that the per-step
 bytes on the wire stay EXACTLY the sync schedule's bytes at every ring
 depth S (only the sender-selected generation moves; the stale slots and
 age counters are local state), and reports the parameter drift vs the
-fault-free run as S grows under an injected straggler+drop schedule.
+fault-free run as S grows under an injected straggler+drop schedule —
+at both shipped wire precisions (int8 AND fp8).
+
+``compressor_frontier`` maps the bytes-vs-drift frontier of the
+``compressor=`` axis (f32 / int8 / fp8 / topk:p / rank:r — see
+``repro.core.consensus.MixingProgram``): every byte count is read from
+the actual carried overlap wire buffers and cross-checked against the
+analytic accounting; asserts topk:0.01 moves >= 25x fewer bytes per
+neighbor than the f32 wire at bounded 20-step drift, and that error
+feedback strictly beats no-EF top-k at equal density.
 
 ``--smoke`` runs only the consensus-path benches (CI-friendly);
 ``--json-out FILE`` writes the records as a JSON file (the CI workflow
-publishes it as the ``BENCH_6.json`` artifact).
+publishes it as the ``BENCH_7.json`` artifact).
 """
 
 import argparse
@@ -423,9 +432,9 @@ def stale_ring(steps_timed: int = 3, drift_steps: int = 10):
     sync_bytes = spec.exchange_bytes("int8")
     fault = "stall:1:1:3,drop:0:2"
 
-    def make(S, fs):
+    def make(S, fs, exch="int8"):
         return CollaborativeTrainer(loss, params, topo, CDSGD(0.01, fused=True),
-                                    schedule="overlap", exchange="int8",
+                                    schedule="overlap", exchange=exch,
                                     staleness=S, fault_schedule=fs,
                                     donate=False)
 
@@ -433,7 +442,11 @@ def stale_ring(steps_timed: int = 3, drift_steps: int = 10):
     for _ in range(drift_steps):
         base.step(batch)
 
-    us, drift, ring_bytes = {}, {}, {}
+    us, drift, drift_fp8, ring_bytes = {}, {}, {}, {}
+    sync_bytes_fp8 = spec.exchange_bytes("fp8")
+    base_fp8 = make(1, None, exch="fp8")
+    for _ in range(drift_steps):
+        base_fp8.step(batch)
     for S in (1, 2, 4):
         tr = make(S, fault)
         ring_bytes[f"S{S}"] = engine.wire_bytes_per_neighbor(
@@ -448,6 +461,17 @@ def stale_ring(steps_timed: int = 3, drift_steps: int = 10):
             float(jnp.max(jnp.abs(a - b))) for a, b in
             zip(jax.tree.leaves(tr.state.params),
                 jax.tree.leaves(base.state.params)))
+        # fp8 leg: same fault schedule at the precision we already ship —
+        # the frontier table must not have holes where only int8 was run
+        tr8 = make(S, fault, exch="fp8")
+        assert engine.wire_bytes_per_neighbor(
+            tr8.state.opt_state.wire) == sync_bytes_fp8
+        for _ in range(drift_steps):
+            tr8.step(batch)
+        drift_fp8[f"S{S}"] = max(
+            float(jnp.max(jnp.abs(a - b))) for a, b in
+            zip(jax.tree.leaves(tr8.state.params),
+                jax.tree.leaves(base_fp8.state.params)))
 
     rec = {
         "bench": "consensus/stale_ring",
@@ -458,11 +482,141 @@ def stale_ring(steps_timed: int = 3, drift_steps: int = 10):
         "sync_wire_bytes_per_neighbor": sync_bytes,
         "ring_bytes_independent_of_S": True,
         "drift_vs_faultfree": drift,
+        "drift_vs_faultfree_fp8": drift_fp8,
     }
     row = ("kernel/stale_ring", us["S4"],
            f"wire/nbr S1={ring_bytes['S1']} S2={ring_bytes['S2']} "
            f"S4={ring_bytes['S4']} (=sync {sync_bytes});"
            f"drift S1={drift['S1']:.1e} S4={drift['S4']:.1e}")
+    return row, rec
+
+
+def compressor_frontier(steps_timed: int = 3, drift_steps: int = 20):
+    """Bytes-vs-drift frontier of the ``compressor=`` axis
+    (f32 / int8 / fp8 / topk:p / rank:r — see repro.core.consensus).
+
+    Every byte count comes from the actual carried wire buffers
+    (:func:`repro.core.engine.wire_bytes_per_neighbor` on the overlap
+    double-buffer), cross-checked against the analytic accounting
+    (``MixingStrategy.bytes_per_neighbor`` and the trainer's
+    ``wire_bytes_per_step``).  Asserts the headline claims:
+
+    * topk:0.01 moves >= 25x fewer bytes per neighbor than the f32 wire;
+    * 20-step parameter drift vs the same-schedule f32 run stays bounded
+      for every compressed leg;
+    * at equal density p, error feedback strictly beats no-EF top-k —
+      the reason the biased compressors are EF-only at config time.
+    """
+    import dataclasses
+
+    from repro.core import engine
+    from repro.core.optim import CDSGD, stacked_comm_ops
+    from repro.core.trainer import CollaborativeTrainer
+
+    key = jax.random.PRNGKey(0)
+    topo = make_topology("ring", 4)
+    base_p = {"w": jax.random.normal(key, (256, 128), jnp.float32),
+              "b": jax.random.normal(key, (300,), jnp.float32)}
+    # de-synchronize the agents so the consensus signal is live and the
+    # drift measures compression quality, not just SR noise
+    stacked = jax.tree.map(
+        lambda x: x[None] + 0.01 * jax.random.normal(
+            jax.random.fold_in(key, 7), (4,) + x.shape, x.dtype), base_p)
+
+    def loss(p, b):
+        return 0.5 * (jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)), {}
+
+    batch = {"x": jnp.zeros((4, 1), jnp.float32)}
+    spec = flatbuf.make_flat_spec(stacked, lead=1)
+    degree = topo.degree()
+
+    def make(compressor):
+        kw = {"compressor": compressor} if compressor != "none" else {}
+        if compressor.startswith(("topk", "rank")):
+            kw["error_feedback"] = True  # biased compressors are EF-only
+        return CollaborativeTrainer(loss, stacked, topo,
+                                    CDSGD(0.01, fused=True), stack=False,
+                                    schedule="overlap", donate=False, **kw)
+
+    legs = ("none", "int8", "fp8", "topk:0.1", "topk:0.01", "rank:4", "rank:1")
+    us, bytes_nbr, drift = {}, {}, {}
+    f32_params = None
+    for leg in legs:
+        tr = make(leg)
+        name = "f32" if leg == "none" else leg
+        actual = engine.wire_bytes_per_neighbor(tr.state.opt_state.wire)
+        # accounting == actual buffers, at every layer that reports bytes
+        analytic = tr.comm.flat.strategy.bytes_per_neighbor(spec)
+        assert actual == analytic, (name, actual, analytic)
+        assert tr.wire_bytes_per_step == actual * degree, (
+            name, tr.wire_bytes_per_step, actual, degree)
+        bytes_nbr[name] = actual
+        us[name] = _time(tr._step_fn, tr.state.params,
+                         tr.state.opt_state, batch, reps=steps_timed)
+        for _ in range(drift_steps):
+            tr.step(batch)
+        if leg == "none":
+            f32_params = tr.state.params
+            drift[name] = 0.0
+        else:
+            drift[name] = max(
+                float(jnp.max(jnp.abs(a - b))) for a, b in
+                zip(jax.tree.leaves(tr.state.params),
+                    jax.tree.leaves(f32_params)))
+
+    # no-EF top-k control at equal p, driven through the engine directly —
+    # make_mixing_program refuses the combination at config time, which is
+    # exactly the claim this leg substantiates
+    prog = dataclasses.replace(
+        consensus_lib.make_mixing_program(
+            topo, compressor="topk:0.1", error_feedback=True),
+        error_feedback=False)
+    opt = CDSGD(0.01, fused=True)
+    comm = stacked_comm_ops(topo, interpret=True, exchange=prog.exchange,
+                            program=prog)
+    sp = engine.StepProgram(
+        optimizer=opt, comm=comm,
+        grad_phase=engine.make_grad_phase(loss, 1),
+        update_phase=engine.make_update_phase(opt, comm, "overlap"),
+        schedule="overlap")
+    state = sp.init_state(stacked)
+    step = jax.jit(sp.step_fn)
+    params = stacked
+    for _ in range(drift_steps):
+        params, state, _ = step(params, state, batch)
+    drift["topk:0.1_noef"] = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in
+        zip(jax.tree.leaves(params), jax.tree.leaves(f32_params)))
+
+    ratio = bytes_nbr["f32"] / bytes_nbr["topk:0.01"]
+    assert ratio >= 25.0, (ratio, bytes_nbr)
+    # bounded drift: the SR-unbiased wires must track the f32 run tightly;
+    # the biased EF legs pay the Lyapunov radius inflation (1 + 2d/(1-d))
+    # instead — their envelope is the f32 trajectory's own magnitude (the
+    # compressed runs stay in the same ball; divergence would blow past it)
+    pmax = max(float(jnp.max(jnp.abs(a)))
+               for a in jax.tree.leaves(f32_params))
+    assert drift["int8"] < 0.2 and drift["fp8"] < 0.5, drift
+    for name, d in drift.items():
+        assert d < 2.0 * pmax, (name, d, pmax, drift)
+    assert drift["topk:0.1"] < drift["topk:0.1_noef"], drift
+
+    rec = {
+        "bench": "consensus/compressor_frontier",
+        "model": "33k f32 params, ring deg 2, CDSGD, overlap schedule",
+        "us_per_step_interp": {k: round(v, 1) for k, v in us.items()},
+        "wire_bytes_per_neighbor": bytes_nbr,
+        "bytes_ratio_f32_over_topk001": round(ratio, 2),
+        "drift_vs_f32_20step": drift,
+        "accounting_matches_actual_buffers": True,
+        "ef_beats_noef_at_equal_p": True,
+    }
+    row = ("kernel/compressor_frontier", us["topk:0.01"],
+           f"bytes/nbr f32={bytes_nbr['f32']} int8={bytes_nbr['int8']} "
+           f"topk:0.01={bytes_nbr['topk:0.01']} rank:1={bytes_nbr['rank:1']} "
+           f"(f32/topk:0.01={ratio:.0f}x);"
+           f"drift topk:0.01={drift['topk:0.01']:.1e} "
+           f"ef<noef@p=0.1 {drift['topk:0.1']:.1e}<{drift['topk:0.1_noef']:.1e}")
     return row, rec
 
 
@@ -517,8 +671,9 @@ def run(smoke: bool = False, json_out: str = None):
     # + momentum-mixing wire accounting (2x params-only; EF still +0)
     # + staleness-ring wire accounting (bytes independent of S) and
     #   drift-vs-S under an injected straggler+drop schedule
+    # + compressor bytes-vs-drift frontier (topk/rank EF rail)
     for fn in (exchange_wire, alias_accounting, schedule_overlap, multi_round,
-               momentum_mix, stale_ring):
+               momentum_mix, stale_ring, compressor_frontier):
         row, rec = fn()
         rows.append(row)
         records.append(rec)

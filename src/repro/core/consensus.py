@@ -68,6 +68,58 @@ MixFn = Callable[[PyTree], PyTree]
 MIXING_STRATEGIES = ("static", "time_varying", "multi_round")
 MOMENTUM_MIXINGS = ("none", "mixed")
 
+# the compressor axis: dense SR quantizers (aliases for ``exchange=``) and
+# the biased EF-rail compressors (see repro.kernels.consensus_update.topk)
+COMPRESSOR_KINDS = ("none", "int8", "fp8", "topk", "rank")
+
+
+def parse_compressor(spec: str):
+    """``"none" | "int8" | "fp8" | "topk:p" | "rank:r"`` -> ``(kind, param)``.
+
+    ``param`` is the float density ``p in (0, 1]`` for ``topk``, the int
+    rank ``r >= 1`` for ``rank``, and ``None`` for the dense kinds.
+    Raises an actionable ``ValueError`` on malformed specs — this is the
+    single parser behind ``--compressor`` and ``make_mixing_program``.
+    """
+    if not isinstance(spec, str):
+        raise TypeError(f"compressor spec must be a str, got "
+                        f"{type(spec).__name__}")
+    kind, _, arg = spec.partition(":")
+    if kind not in COMPRESSOR_KINDS:
+        raise ValueError(
+            f"unknown compressor {spec!r}; expected one of "
+            f"{COMPRESSOR_KINDS[:3]} or 'topk:p' (0 < p <= 1) or "
+            "'rank:r' (int r >= 1)")
+    if kind in ("none", "int8", "fp8"):
+        if arg:
+            raise ValueError(f"compressor {kind!r} takes no parameter "
+                             f"(got {spec!r})")
+        return kind, None
+    if not arg:
+        raise ValueError(
+            f"compressor {kind!r} needs a parameter: "
+            + ("'topk:p' with density 0 < p <= 1 (e.g. 'topk:0.01')"
+               if kind == "topk" else
+               "'rank:r' with int rank r >= 1 (e.g. 'rank:4')"))
+    if kind == "topk":
+        try:
+            p = float(arg)
+        except ValueError:
+            raise ValueError(f"top-k density must be a float, got {arg!r} "
+                             f"in {spec!r}") from None
+        if not (0.0 < p <= 1.0):
+            raise ValueError(f"top-k density must be in (0, 1], got {p!r} "
+                             f"in {spec!r}")
+        return kind, p
+    try:
+        r = int(arg)
+    except ValueError:
+        raise ValueError(f"rank must be an int, got {arg!r} in {spec!r}") \
+            from None
+    if r < 1:
+        raise ValueError(f"rank must be >= 1, got {r} in {spec!r}")
+    return kind, r
+
 
 @dataclasses.dataclass(frozen=True)
 class MixingProgram:
@@ -129,6 +181,11 @@ class MixingProgram:
     # is today's overlap double-buffer, bit-for-bit.
     staleness: int = 1
     faults: Optional[FaultSchedule] = None
+    # the compressor axis: "none" | "int8" | "fp8" (dense aliases — they
+    # normalize ``exchange`` and change nothing else, bit-for-bit) |
+    # "topk:p" | "rank:r" (biased EF-rail compressors; require
+    # error_feedback=True, validated in make_mixing_program)
+    compressor: str = "none"
 
     @property
     def fault_tolerant(self) -> bool:
@@ -137,13 +194,29 @@ class MixingProgram:
         return self.staleness > 1 or self.faults is not None
 
     @property
+    def compressor_kind(self) -> str:
+        return parse_compressor(self.compressor)[0]
+
+    @property
+    def compressor_param(self):
+        """Density ``p`` (topk) / rank ``r`` (rank); None for dense kinds."""
+        return parse_compressor(self.compressor)[1]
+
+    @property
+    def compressed(self) -> bool:
+        """True iff a biased (top-k / rank-r) compressor rides the wire —
+        the dense int8/fp8 aliases resolve to the existing exchange path."""
+        return self.compressor_kind in ("topk", "rank")
+
+    @property
     def is_trivial(self) -> bool:
         """True iff this is exactly the legacy single-round fixed-``Pi``
         program (whose sync path must stay bit-for-bit unchanged)."""
         return (self.strategy == "static" and self.rounds == 1
                 and not self.error_feedback
                 and self.momentum_mixing == "none"
-                and not self.fault_tolerant)
+                and not self.fault_tolerant
+                and not self.compressed)
 
     @property
     def n_payloads(self) -> int:
@@ -161,6 +234,7 @@ class MixingProgram:
             "momentum_mixing": self.momentum_mixing,
             "staleness": self.staleness,
             "faults": self.faults.describe() if self.faults else None,
+            "compressor": self.compressor,
         }
 
 
@@ -174,6 +248,7 @@ def make_mixing_program(
     momentum_mixing: str = "none",
     staleness: int = 1,
     faults: Optional[FaultSchedule] = None,
+    compressor: str = "none",
 ) -> MixingProgram:
     """Validate + build a :class:`MixingProgram` at config time.
 
@@ -181,8 +256,69 @@ def make_mixing_program(
     :class:`TopologySchedule`.  ``strategy="static"`` with ``rounds > 1``
     is promoted to ``"multi_round"`` (they are the same family; ``k = 1``
     multi-round is literally the static strategy object).
+
+    ``compressor="int8"|"fp8"`` are dense aliases: they normalize
+    ``exchange`` to the same precision and change nothing else (bit-for-bit
+    the existing quantized path).  ``"topk:p"`` / ``"rank:r"`` engage the
+    biased EF-rail compressors, which REQUIRE ``error_feedback=True`` and
+    exclude staleness/faults, inner rounds, and momentum mixing — each
+    rejection below names the conflicting flags and the supported
+    alternative.
     """
     _check_exchange(exchange)
+    ckind, _cparam = parse_compressor(compressor)
+    if ckind in ("int8", "fp8"):
+        if exchange not in ("f32", ckind):
+            raise ValueError(
+                f"--compressor {ckind} conflicts with --exchange "
+                f"{exchange}: the dense compressor aliases ARE the "
+                f"quantized exchange — drop --exchange or set it to "
+                f"{ckind!r}")
+        exchange = ckind
+    if ckind in ("topk", "rank"):
+        if not error_feedback:
+            raise ValueError(
+                f"--compressor {compressor} is a biased compressor and "
+                "needs --error-feedback: without the EF residual "
+                "(OptState.residual) the dropped mass accumulates and the "
+                "consensus diverges (Karimireddy et al. 2019) — add "
+                "--error-feedback, or use --compressor int8/fp8 for an "
+                "unbiased dense wire")
+        if staleness > 1 or faults is not None:
+            raise ValueError(
+                f"--compressor {compressor} is incompatible with "
+                "--staleness > 1 / --fault-schedule: the EF residual "
+                "telescoping it requires assumes every carried payload is "
+                "consumed exactly one step later — use --compressor "
+                "int8/fp8 (no EF) with the staleness ring instead")
+        if rounds > 1 or strategy == "multi_round":
+            raise ValueError(
+                f"--compressor {compressor} is incompatible with "
+                "--consensus-rounds > 1: inner i-CDSGD rounds re-compress "
+                "partially mixed buffers without an EF residual to absorb "
+                "the bias — use a single round, or --compressor int8/fp8 "
+                "for multi-round")
+        if momentum_mixing != "none":
+            raise ValueError(
+                f"--compressor {compressor} is incompatible with "
+                "--momentum-mixing mixed: only the params payload rides "
+                "the sparse/low-rank wire — use --compressor int8/fp8 to "
+                "mix the momentum buffer, or momentum_mixing='none'")
+        if ckind == "topk":
+            if exchange not in ("f32", "int8"):
+                raise ValueError(
+                    f"--compressor {compressor} ships int8 SR-quantized "
+                    f"compact values; --exchange {exchange} conflicts — "
+                    "drop --exchange (the compact-value precision is part "
+                    "of the top-k wire contract)")
+            exchange = "int8"
+        else:
+            if exchange != "f32":
+                raise ValueError(
+                    f"--compressor {compressor} ships two dense f32 "
+                    f"factors; --exchange {exchange} conflicts — drop "
+                    "--exchange (quantizing the factors is not part of "
+                    "the rank-r wire contract)")
     if isinstance(topology_or_schedule, Topology):
         schedule = fixed_schedule(topology_or_schedule)
     elif isinstance(topology_or_schedule, TopologySchedule):
@@ -206,10 +342,13 @@ def make_mixing_program(
             f"strategy={strategy!r} takes a fixed topology but the schedule "
             f"{schedule.name!r} has period {schedule.period}; use "
             "strategy='time_varying'")
-    if error_feedback and exchange not in ("int8", "fp8"):
+    if error_feedback and exchange not in ("int8", "fp8") \
+            and ckind not in ("topk", "rank"):
         raise ValueError(
-            f"error_feedback=True needs a quantized exchange (int8|fp8): "
-            f"exchange={exchange!r} has no quantization error to feed back")
+            "--error-feedback needs a lossy wire to feed back: set "
+            "--exchange int8/fp8 (quantization error) or --compressor "
+            f"topk:p/rank:r (compression error); exchange={exchange!r} "
+            "with a dense compressor has no error to carry")
     if momentum_mixing not in MOMENTUM_MIXINGS:
         raise ValueError(f"unknown momentum_mixing {momentum_mixing!r}; "
                          f"expected one of {MOMENTUM_MIXINGS}")
@@ -227,14 +366,17 @@ def make_mixing_program(
             faults = None  # the all-arrive schedule IS the no-fault program
     if error_feedback and (staleness > 1 or faults is not None):
         raise ValueError(
-            "error_feedback is incompatible with staleness > 1 / fault "
-            "injection: the residual telescoping assumes every carried wire "
-            "payload is consumed exactly one step later, which bounded "
-            "staleness breaks by design")
+            "--error-feedback is incompatible with --staleness > 1 / "
+            "--fault-schedule: the residual telescoping assumes every "
+            "carried wire payload is consumed exactly one step later, which "
+            "bounded staleness breaks by design — drop --error-feedback "
+            "(plain SR quantization is unbiased) or run staleness=1 with "
+            "no fault schedule")
     return MixingProgram(schedule=schedule, strategy=strategy, rounds=rounds,
                          error_feedback=error_feedback, exchange=exchange,
                          momentum_mixing=momentum_mixing,
-                         staleness=staleness, faults=faults)
+                         staleness=staleness, faults=faults,
+                         compressor=compressor)
 
 
 # --------------------------------------------------------------------------
@@ -418,6 +560,131 @@ def _quantize_wire_stacked(bufs, seed, n: int, exchange: str, interpret: bool,
 
 
 # --------------------------------------------------------------------------
+# Compressed wire payloads (the biased EF-rail compressors)
+# --------------------------------------------------------------------------
+
+
+class TopKWire(NamedTuple):
+    """Static-shape wire contract of one top-k-compressed bucket.
+
+    The ragged ``ceil(p * n)`` selection is rounded up to a lane-aligned
+    compact tile (:func:`repro.kernels.consensus_update.topk.topk_k_rows`),
+    so every ppermute moves three fixed-shape arrays (a NamedTuple — i.e.
+    a pytree — so checkpointing, PartitionSpecs, and the dependency-report
+    labeling treat it as more wire leaves with zero special casing):
+
+    * ``values``  — int8 ``(*lead, k_rows, 128)`` SR-quantized compact
+      values;
+    * ``indices`` — int32 ``(*lead, k_rows, 128)`` flat dense positions
+      (``row * 128 + lane``);
+    * ``scales``  — f32 ``(*lead, k_rows, 1)`` per-compact-row scales.
+
+    Unlike the dense wire's locally synthesized unit scales, ALL three
+    fields cross the wire (the receiver cannot reconstruct any of them),
+    which the byte accounting prices accordingly.
+    """
+
+    values: Any
+    indices: Any
+    scales: Any
+
+
+class RankWire(NamedTuple):
+    """Wire contract of one rank-r-compressed bucket: two dense f32
+    factors (``reconstruction = p @ qt``), both crossing the wire.
+
+    * ``p``  — f32 ``(*lead, rows, r)`` orthonormal left factor;
+    * ``qt`` — f32 ``(*lead, r, 128)`` right factor.
+
+    The warm-start basis ``Q (128, r)`` is NOT part of the wire — it is
+    local state carried in ``OptState.qwarm`` (like the EF residual, it
+    never crosses the wire).
+    """
+
+    p: Any
+    qt: Any
+
+
+def _decompress_entry(entry, rows: int):
+    """Compressed wire entry -> dense f32 bucket, any leading axes.
+
+    Flattens every axis before the trailing two, maps the per-bucket
+    decompressor, and restores the lead shape — the one gather-dequant
+    form both execution modes (and the EF residual update) share.
+    """
+    from repro.kernels.consensus_update.topk import (
+        rank_decompress_2d, topk_decompress_2d)
+
+    if isinstance(entry, TopKWire):
+        lead_shape = entry.values.shape[:-2]
+        fn = lambda v, i, s: topk_decompress_2d(v, i, s, rows)
+        args = (entry.values, entry.indices, entry.scales)
+    elif isinstance(entry, RankWire):
+        lead_shape = entry.p.shape[:-2]
+        fn = rank_decompress_2d
+        args = (entry.p, entry.qt)
+    else:
+        raise TypeError(f"not a compressed wire entry: {type(entry).__name__}")
+    flat = [a.reshape((-1,) + a.shape[len(lead_shape):]) for a in args]
+    out = jax.vmap(fn)(*flat)
+    return out.reshape(lead_shape + out.shape[-2:])
+
+
+def _is_compressed_entry(entry) -> bool:
+    return isinstance(entry, (TopKWire, RankWire))
+
+
+def _compress_wire_stacked(bufs, seed, n: int, program: MixingProgram,
+                           interpret: bool, qwarm):
+    """Compress agent-stacked ``(A, rows, 128)`` buckets for the wire.
+
+    The compressed analog of :func:`_quantize_wire_stacked`: per-agent
+    top-k value-SR seeds follow the SAME :func:`wire_seed` composition as
+    the dense int8 wire (step/agent/bucket strides — the compact values
+    are just a smaller int8 payload), so stacked and sharded trajectories
+    match bit-for-bit.  Returns ``(wire, qwarm')`` where ``qwarm`` is the
+    per-bucket ``(A, 128, r)`` warm-start stack of the rank compressor
+    (``()`` in and out for top-k).
+    """
+    from repro.kernels.consensus_update import topk as tk
+
+    kind, param = parse_compressor(program.compressor)
+    if kind == "topk":
+        base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
+        agent_seeds = _SEED_AGENT_STRIDE * jnp.arange(n, dtype=jnp.int32)
+        out = []
+        for bi, b in enumerate(bufs):
+            k_rows = tk.topk_k_rows(b.shape[-2], param)
+            v, i, s = jax.vmap(
+                lambda x, sd: tk.topk_compress_2d(x, k_rows, sd,
+                                                  interpret=interpret)
+            )(b.astype(jnp.float32), base + _SEED_BUCKET_STRIDE * bi
+              + agent_seeds)
+            out.append(TopKWire(values=v, indices=i, scales=s))
+        return tuple(out), ()
+    assert kind == "rank", kind
+    wire, nq = [], []
+    for b, q in zip(bufs, qwarm):
+        p, qt, q2 = jax.vmap(tk.rank_compress_2d)(b.astype(jnp.float32), q)
+        wire.append(RankWire(p=p, qt=qt))
+        nq.append(q2)
+    return tuple(wire), tuple(nq)
+
+
+def _qwarm_init_stacked(bufs, n: int, program: MixingProgram):
+    """Initial warm-start state: one ``(A, 128, r)`` orthonormal basis per
+    bucket for the rank compressor, ``()`` otherwise (top-k is stateless
+    beyond the EF residual)."""
+    from repro.kernels.consensus_update.topk import rank_init_q
+
+    kind, param = parse_compressor(program.compressor)
+    if kind != "rank":
+        return ()
+    q0 = rank_init_q(param)
+    return tuple(jnp.broadcast_to(q0, (n,) + q0.shape) + 0.0 for _ in bufs)
+
+
+# --------------------------------------------------------------------------
 # Bounded-staleness wire ring (fault-tolerant overlap schedule)
 # --------------------------------------------------------------------------
 
@@ -552,15 +819,26 @@ class MixingStrategy:
 
     def __init__(self, program: MixingProgram, *, quantize, exchange_t,
                  combine, wire_to_bufs, legacy_gather=None,
-                 bufs_to_state=None, state_to_bufs=None, fault_ops=None):
+                 bufs_to_state=None, state_to_bufs=None, fault_ops=None,
+                 compress=None, qwarm_init=None, meta=None):
         self.program = program
         self.rounds = program.rounds
         self.mixed_momentum = program.momentum_mixing == "mixed"
+        self.compressed = program.compressed
         self._quantize = quantize
         self._exchange_t = exchange_t
         self._combine = combine
         self._wire_to_bufs = wire_to_bufs
         self._legacy_gather = legacy_gather
+        # biased-compressor primitives (topk/rank programs only):
+        # compress(bufs, seed, qwarm) -> (wire, qwarm'), and the
+        # qwarm initializer; the shared ``meta`` dict carries the static
+        # dense bucket row counts the decompressors need (set on every
+        # bufs-seeing call — the compact top-k payload alone cannot
+        # recover the dense shape)
+        self._compress = compress
+        self._qwarm_init = qwarm_init
+        self._meta = meta if meta is not None else {}
         # execution-mode-specific fault-path closures (None = fault-free;
         # see stacked_flat_comm / sharded_flat_comm): masked_weights(t),
         # own_straggle(t), next_ages(t), init_state(), period, S
@@ -577,6 +855,17 @@ class MixingStrategy:
     def _entry(self, step):
         """Schedule entry for optimizer step ``step`` (None = static 0)."""
         return None
+
+    # -- static bucket-shape bookkeeping (compressed programs) --------------
+    def _note_bufs(self, bufs):
+        """Record the static dense row counts the decompressors need.
+
+        Called on every path that sees the packed buckets *before* an
+        exchange can run (quantize/compress, ``continue_from_wire``,
+        residual/qwarm init) — the values are static ints fixed by the
+        comm's bucket layout, so re-recording is idempotent."""
+        if self.compressed:
+            self._meta["rows"] = [int(b.shape[-2]) for b in bufs]
 
     # -- payload splitting (momentum_mixing="mixed") ------------------------
     def _quantize_payloads(self, bufs, seed):
@@ -597,6 +886,17 @@ class MixingStrategy:
 
     # -- the FlatComm stage contract ---------------------------------------
     def quantize_stage(self, bufs, seed):
+        if self.compressed:
+            # reachable only from initial_wire (the x_{-1} := x_0 priming):
+            # the per-step compressions all go through compress_ef — a
+            # biased compressor without EF is rejected at config time.
+            # The warm start consumed here is the deterministic init basis;
+            # OptState.qwarm starts from the same basis, so step 0 re-runs
+            # the iteration one step less warm (a quality ramp, not a
+            # correctness dependency).
+            self._note_bufs(bufs)
+            wire, _ = self._compress(bufs, seed, self._qwarm_init(bufs))
+            return wire
         return self._quantize_payloads(bufs, seed)
 
     def exchange_stage(self, wire, step=None):
@@ -683,6 +983,7 @@ class MixingStrategy:
         round-(k-1) mixed buffer (the fused kernel applies round k +
         gradient in one launch).  Inner rounds run under ``lax.scan``.
         """
+        self._note_bufs(bufs)
         nbrs, w, sc = self.exchange_stage(wire, step)
         if self.rounds == 1:
             return nbrs, w, sc, list(bufs)
@@ -737,11 +1038,57 @@ class MixingStrategy:
             [c - d for c, d in zip(carried, deq)]))
         return wire, new_residual
 
+    def compress_ef(self, bufs, seed, residual, qwarm):
+        """The compressor-axis generalization of :meth:`quantize_ef`.
+
+        ``C(x + e)`` for whatever compressor the program carries, threading
+        the warm-start state of the rank compressor: returns ``(wire,
+        new_residual, new_qwarm)``.  Dense programs delegate to
+        :meth:`quantize_ef` and pass ``qwarm`` through untouched, so the
+        engine calls this unconditionally at both EF sites.  For the biased
+        compressors the residual update uses the same gather-dequant
+        decompression the receivers apply — ``new_residual = (x + e) -
+        decompress(C(x + e))`` — which is exactly what makes the
+        delta-contraction of the EF bound hold
+        (:func:`repro.core.lyapunov.ef_compressed_consensus_bound`).
+        """
+        if not self.compressed:
+            wire, new_residual = self.quantize_ef(bufs, seed, residual)
+            return wire, new_residual, qwarm
+        self._note_bufs(bufs)
+        res = self._state_to_bufs(residual)
+        carried = [b.astype(jnp.float32) + e for b, e in zip(bufs, res)]
+        wire, new_qwarm = self._compress(carried, seed, qwarm)
+        deq = self._wire_to_bufs(wire)
+        new_residual = tuple(self._bufs_to_state(
+            [c - d for c, d in zip(carried, deq)]))
+        return wire, new_residual, new_qwarm
+
     def residual_init(self, bufs):
         """Zero-initialized f32 residuals, one per packed bucket (leading
         agent axes kept, matching the wire state's layout)."""
+        self._note_bufs(bufs)
         return tuple(self._bufs_to_state(
             [jnp.zeros(b.shape, jnp.float32) for b in bufs]))
+
+    def qwarm_init(self, bufs):
+        """Initial compressor warm-start state for ``OptState.qwarm``:
+        the rank compressor's per-bucket orthonormal basis (leading agent
+        axes kept, like the wire/residual), ``()`` for everything else."""
+        if not self.compressed:
+            return ()
+        self._note_bufs(bufs)
+        return self._qwarm_init(bufs)
+
+    # -- wire-byte pricing (the single accounting source) -------------------
+    def bytes_per_neighbor(self, spec: "flatbuf.FlatSpec") -> int:
+        """Bytes ONE whole-model neighbor transfer moves under this
+        program — dense, quantized, and compressed payloads priced in one
+        place (:func:`program_bytes_per_neighbor`); `exchange_bytes_per_
+        step`, the trainer/dryrun printouts, and the microbench all quote
+        this, and ``repro.core.engine.wire_bytes_per_neighbor`` asserts it
+        against the actual carried buffers."""
+        return program_bytes_per_neighbor(spec, self.program)
 
 
 class StaticMixing(MixingStrategy):
@@ -831,22 +1178,55 @@ def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
         jnp.float32)
     period = schedule.period
 
+    meta: dict = {}
+
+    def _rows_of(bi: int) -> int:
+        rows = meta.get("rows")
+        if rows is None:
+            raise RuntimeError(
+                "compressed exchange before any bufs-seeing stage: call "
+                "quantize_stage/compress_ef (or continue_from_wire) once so "
+                "the strategy records the dense bucket row counts")
+        return rows[bi]
+
     def quantize(bufs, seed, payload=0):
         return _quantize_wire_stacked(bufs, seed, n, exchange, interpret,
                                       payload=payload)
 
+    def compress(bufs, seed, qwarm):
+        return _compress_wire_stacked(bufs, seed, n, program, interpret,
+                                      qwarm)
+
+    def qwarm_init(bufs):
+        return _qwarm_init_stacked(bufs, n, program)
+
     def exchange_t(wire, t):
         # stacked simulation: every agent already sees the full stack — the
         # "exchange" is handing the wire payloads to the kernels with the
-        # self-separated [diag(Pi_t) | zero-diag Pi_t] weights.
+        # self-separated [diag(Pi_t) | zero-diag Pi_t] weights.  Compressed
+        # entries decompress to dense f32 stacks with unit scales (the
+        # kernels' in-register dequant multiply becomes the identity) and
+        # feed the same self-separated path — the self term never crossed
+        # the wire and stays full precision at weights[..., 0].
         if t is None or period == 1:
             w = pi_q_stack[0]
         else:
             w = jnp.take(pi_q_stack, t, axis=0)
-        return ([p for p, _ in wire], w, [sc for _, sc in wire])
+        nbrs, scs = [], []
+        for bi, e in enumerate(wire):
+            if _is_compressed_entry(e):
+                d = _decompress_entry(e, _rows_of(bi))
+                nbrs.append(d)
+                scs.append(jnp.ones(d.shape[:-1] + (1,), jnp.float32))
+            else:
+                nbrs.append(e[0])
+                scs.append(e[1])
+        return nbrs, w, scs
 
     def wire_to_bufs(wire):
-        return [p.astype(jnp.float32) * sc for p, sc in wire]
+        return [_decompress_entry(e, _rows_of(bi)) if _is_compressed_entry(e)
+                else e[0].astype(jnp.float32) * e[1]
+                for bi, e in enumerate(wire)]
 
     def combine(nbrs, weights_q, scales, selfs):
         """Full-precision one-round mix of the agent stack (inner rounds).
@@ -886,7 +1266,9 @@ def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
 
     strategy = _make_strategy(program, quantize=quantize, exchange_t=exchange_t,
                               combine=combine, wire_to_bufs=wire_to_bufs,
-                              legacy_gather=legacy_gather, fault_ops=fault_ops)
+                              legacy_gather=legacy_gather, fault_ops=fault_ops,
+                              compress=compress, qwarm_init=qwarm_init,
+                              meta=meta)
 
     return FlatComm(lead=1, batched=True, gather=strategy.gather,
                     interpret=interpret, exchange=exchange, n_agents=n,
@@ -1016,6 +1398,59 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
     quantized = exchange in ("int8", "fp8") and union_keys
     n_total = int(np.prod([t.n_agents for _, t in factors])) if factors else 1
 
+    meta: dict = {}
+
+    def _rows_of(bi: int) -> int:
+        rows = meta.get("rows")
+        if rows is None:
+            raise RuntimeError(
+                "compressed exchange before any bufs-seeing stage: call "
+                "quantize_stage/compress_ef (or continue_from_wire) once so "
+                "the strategy records the dense bucket row counts")
+        return rows[bi]
+
+    def _restore_lead(a):
+        return a.reshape((1,) * lead + a.shape)
+
+    def compress(bufs, seed, qwarm):
+        """Local squeezed buckets -> compressed wire entries (lead axes
+        restored, like ``quantize``).  Top-k value-SR seeds derive from
+        ``lax.axis_index`` with the same :func:`wire_seed` composition as
+        the stacked path; the rank factors draw no randomness."""
+        from repro.kernels.consensus_update import topk as tk
+
+        kind, param = parse_compressor(program.compressor)
+        if kind == "topk":
+            base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32) \
+                + _SEED_AGENT_STRIDE * _agent_index()
+            out = []
+            for bi, b in enumerate(bufs):
+                k_rows = tk.topk_k_rows(b.shape[-2], param)
+                v, i, s = tk.topk_compress_2d(
+                    b.astype(jnp.float32), k_rows,
+                    base + _SEED_BUCKET_STRIDE * bi, interpret=interpret)
+                out.append(TopKWire(values=_restore_lead(v),
+                                    indices=_restore_lead(i),
+                                    scales=_restore_lead(s)))
+            return tuple(out), ()
+        assert kind == "rank", kind
+        wire, nq = [], []
+        for b, q in zip(bufs, qwarm):
+            p, qt, q2 = tk.rank_compress_2d(b.astype(jnp.float32),
+                                            q.reshape(q.shape[lead:]))
+            wire.append(RankWire(p=_restore_lead(p), qt=_restore_lead(qt)))
+            nq.append(_restore_lead(q2))
+        return tuple(wire), tuple(nq)
+
+    def qwarm_init(bufs):
+        from repro.kernels.consensus_update.topk import rank_init_q
+
+        kind, param = parse_compressor(program.compressor)
+        if kind != "rank":
+            return ()
+        q0 = rank_init_q(param)
+        return tuple(_restore_lead(q0) for _ in bufs)
+
     def quantize(bufs, seed, payload=0):
         """Local squeezed buckets -> wire state (lead axes restored).
 
@@ -1042,12 +1477,39 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
 
     def _entry_branch(entry_idx: int):
         """Exchange branch for one schedule entry: its own ppermutes only,
-        padded to the union stencil with zero slots."""
+        padded to the union stencil with zero slots.
+
+        Compressed entries (:class:`TopKWire` / :class:`RankWire`) shift
+        every compact field through the SAME ppermutes — the only arrays
+        that cross the wire are the compact payloads — then decompress
+        per arrived stencil slot into a dense f32 neighbor tile with unit
+        scales, feeding the fused kernels' self-separated path unchanged.
+        """
         wm = entry_wire[entry_idx]
 
         def branch(wire):
             nbrs, scs = [], []
-            for p, sc in wire:
+            for bi, e in enumerate(wire):
+                if _is_compressed_entry(e):
+                    rows = _rows_of(bi)
+                    local = jax.tree.map(
+                        lambda a: a.reshape(a.shape[lead:]), e)
+                    stack = []
+                    for k in union_keys:
+                        if k in wm:
+                            per_axis, combo, _w = wm[k]
+                            shifted = jax.tree.map(
+                                lambda a: _shift_all(a, per_axis, combo),
+                                local)
+                            stack.append(_decompress_entry(shifted, rows))
+                        else:
+                            stack.append(
+                                jnp.zeros((rows, flatbuf.LANE), jnp.float32))
+                    nbrs.append(jnp.stack(stack))
+                    scs.append(jnp.ones((len(union_keys), rows, 1),
+                                        jnp.float32))
+                    continue
+                p, sc = e
                 p = p.reshape(p.shape[lead:])
                 sc = sc.reshape(sc.shape[lead:])
                 stack, sstack = [], []
@@ -1091,8 +1553,16 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
         return list(nbrs), jnp.take(weights_q_stack, t, axis=0), list(scs)
 
     def wire_to_bufs(wire):
-        return [p.reshape(p.shape[lead:]).astype(jnp.float32)
-                * sc.reshape(sc.shape[lead:]) for p, sc in wire]
+        out = []
+        for bi, e in enumerate(wire):
+            if _is_compressed_entry(e):
+                local = jax.tree.map(lambda a: a.reshape(a.shape[lead:]), e)
+                out.append(_decompress_entry(local, _rows_of(bi)))
+            else:
+                p, sc = e
+                out.append(p.reshape(p.shape[lead:]).astype(jnp.float32)
+                           * sc.reshape(sc.shape[lead:]))
+        return out
 
     def bufs_to_state(bufs):
         return [b.reshape((1,) * lead + b.shape) for b in bufs]
@@ -1179,7 +1649,9 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
                               legacy_gather=legacy_gather,
                               bufs_to_state=bufs_to_state,
                               state_to_bufs=state_to_bufs,
-                              fault_ops=fault_ops)
+                              fault_ops=fault_ops,
+                              compress=compress, qwarm_init=qwarm_init,
+                              meta=meta)
 
     return FlatComm(lead=lead, batched=False, gather=strategy.gather,
                     interpret=interpret, exchange=exchange, n_agents=n_total,
@@ -1247,6 +1719,14 @@ def initial_wire_state(fl: FlatComm, params: PyTree) -> tuple:
     # sharded comm, global agent-stacked view: the strategy's quantize is
     # the shard-local one, so replay _quantize_payloads' split on the
     # global quantizer (payload 1 = the momentum half's seed stride)
+    if fl.program is not None and fl.program.compressed:
+        # compressed wires: replay the stacked compressor with seed -1 and
+        # the same per-agent seed composition as the sharded compress;
+        # warm-start output discarded (initial_qwarm_state is the basis)
+        wire, _ = _compress_wire_stacked(
+            bufs, seed, fl.n_agents, fl.program, fl.interpret,
+            _qwarm_init_stacked(bufs, fl.n_agents, fl.program))
+        return wire
     mixed = fl.program is not None and fl.program.momentum_mixing == "mixed"
     b = len(bufs) // 2 if mixed else len(bufs)
     wire = _quantize_wire_stacked(bufs[:b], seed, fl.n_agents, fl.exchange,
@@ -1281,6 +1761,30 @@ def initial_residual_state(fl: FlatComm, params: PyTree) -> tuple:
     spec = flatbuf.make_flat_spec(params, lead=fl.lead)
     bufs = widen_with_momentum(fl, flatbuf.pack(params, spec))
     return fl.strategy.residual_init(bufs)
+
+
+def initial_qwarm_state(fl: FlatComm, params: PyTree) -> tuple:
+    """Warm-start compressor state for the global agent-stacked view.
+
+    ``()`` unless the program runs the rank-r compressor, in which case
+    one ``(A, 128, r)`` orthonormal basis per bucket — the deterministic
+    :func:`repro.kernels.consensus_update.topk.rank_init_q` basis,
+    identical across agents, buckets and execution modes.  Deliberately
+    independent of :func:`initial_wire_state`: the seed ``-1`` priming
+    compress discards its warm-start output, so the power-iteration chain
+    starts from the init basis in both modes (a quality ramp, not a
+    correctness dependency).  The sharded trainer initializes per shard
+    via :func:`repro.core.engine.make_local_qwarm_init` instead.
+    """
+    if fl.program is None or not fl.program.compressed:
+        return ()
+    spec = flatbuf.make_flat_spec(params, lead=fl.lead)
+    bufs = widen_with_momentum(fl, flatbuf.pack(params, spec))
+    if fl.batched:
+        return fl.strategy.qwarm_init(bufs)
+    # sharded comm, global agent-stacked view: replicate the shard-local
+    # init basis across the agent axis (it is agent-independent)
+    return _qwarm_init_stacked(bufs, fl.n_agents, fl.program)
 
 
 # --------------------------------------------------------------------------
@@ -1425,23 +1929,79 @@ class FactoredMix:
 # --------------------------------------------------------------------------
 
 
+def program_bytes_per_neighbor(spec: "flatbuf.FlatSpec",
+                               program: Optional[MixingProgram],
+                               exchange: str = "f32",
+                               payloads: int = 1) -> int:
+    """Bytes one whole-model transfer moves to ONE neighbor — THE payload
+    pricing source (satellite of ISSUE 8).
+
+    Every consumer — :func:`exchange_bytes_per_step`, the trainer/CLI
+    printouts, ``engine``'s estimates, and the microbench frontier — prices
+    through here, so a new wire contract (e.g. the ragged top-k payload)
+    changes the figure everywhere at once instead of silently mispricing
+    wherever a dense-payload assumption was duplicated.
+
+    Dense wires (``compressor`` none/int8/fp8) price via
+    :meth:`repro.core.flatbuf.FlatSpec.exchange_bytes` at the program's
+    wire precision.  Compressed wires price the actual carried fields:
+
+    * ``topk:p`` — per bucket ``k_rows*128`` int8 values + ``k_rows*128``
+      int32 indices + ``k_rows`` f32 row scales (ALL of
+      :class:`TopKWire` crosses the wire — indices are most of the cost,
+      which is why the ≥25x headline needs p≈0.01, not 0.2).
+    * ``rank:r`` — per bucket the two dense f32 factors:
+      ``(rows*r + r*128) * 4``.
+
+    ``program=None`` falls back to the dense pricing of the ``exchange``/
+    ``payloads`` arguments (legacy callers without a program).
+    """
+    if program is None:
+        return int(spec.exchange_bytes(exchange) * payloads)
+    kind, param = parse_compressor(program.compressor)
+    if kind in ("none", "int8", "fp8"):
+        return int(spec.exchange_bytes(program.exchange) * program.n_payloads)
+    from repro.kernels.consensus_update import topk as tk
+
+    total = 0
+    if kind == "topk":
+        for b in spec.buckets:
+            k_rows = tk.topk_k_rows(b.rows, param)
+            total += k_rows * flatbuf.LANE * (1 + 4) + k_rows * 4
+    else:
+        assert kind == "rank", kind
+        r = int(param)
+        for b in spec.buckets:
+            total += (b.rows * r + r * flatbuf.LANE) * 4
+    return total * program.n_payloads
+
+
 def exchange_bytes_per_step(spec: "flatbuf.FlatSpec", topology,
                             exchange: str = "f32", rounds: int = 1,
-                            payloads: int = 1) -> dict:
+                            payloads: int = 1,
+                            program: Optional[MixingProgram] = None) -> dict:
     """Per-step bytes-on-wire estimate for the fused consensus exchange.
 
     The paper's fixed-topology cost model (eq. 5/6): each agent sends/
     receives ``degree`` whole-model transfers per step.  ``per_neighbor``
-    comes from :meth:`repro.core.flatbuf.FlatSpec.exchange_bytes` for the
-    chosen wire precision (int8/fp8 add one f32 scale per 128-lane row).
-    ``topology`` may be a :class:`repro.core.topology.TopologySchedule`
-    (degree = period average), ``rounds`` inner consensus rounds multiply
-    every transfer (k-round i-CDSGD moves exactly ``k x`` the single-round
-    bytes; error feedback moves zero extra — the residual is local state),
-    and ``payloads`` counts the trees on the wire per transfer
+    comes from :func:`program_bytes_per_neighbor` — dense wires price via
+    :meth:`repro.core.flatbuf.FlatSpec.exchange_bytes` for the chosen wire
+    precision (int8/fp8 add one f32 scale per 128-lane row); passing
+    ``program`` prices compressed wires (top-k / rank-r) from their actual
+    carried fields.  ``topology`` may be a
+    :class:`repro.core.topology.TopologySchedule` (degree = period
+    average), ``rounds`` inner consensus rounds multiply every transfer
+    (k-round i-CDSGD moves exactly ``k x`` the single-round bytes; error
+    feedback moves zero extra — the residual is local state), and
+    ``payloads`` counts the trees on the wire per transfer
     (``momentum_mixing="mixed"`` moves params + momentum = 2).
     """
-    per_neighbor = spec.exchange_bytes(exchange) * payloads
+    per_neighbor = program_bytes_per_neighbor(spec, program, exchange,
+                                              payloads)
+    if program is not None:
+        exchange = (program.compressor if program.compressed
+                    else program.exchange)
+        payloads = program.n_payloads
     if isinstance(topology, TopologySchedule):
         degree = topology.mean_degree()
     else:
@@ -1484,15 +2044,18 @@ def mean_exchange_bytes_per_step(spec: "flatbuf.FlatSpec", n_agents: int,
 
 def describe_exchange_cost(params: PyTree, topology,
                            exchange: str = "f32", *, lead: int = 1,
-                           rounds: int = 1, payloads: int = 1) -> str:
+                           rounds: int = 1, payloads: int = 1,
+                           program: Optional[MixingProgram] = None) -> str:
     """One-line human-readable :func:`exchange_bytes_per_step` report
     (shared by the train/dryrun CLIs and the examples)."""
     wire = exchange_bytes_per_step(
         flatbuf.make_flat_spec(params, lead=lead), topology, exchange, rounds,
-        payloads)
+        payloads, program=program)
     per_round = "" if rounds == 1 else f" x {rounds} rounds"
     per_payload = "" if payloads == 1 else f" ({payloads} payload trees)"
-    return (f"exchange={exchange}: {wire['per_step_bytes']:,} bytes/agent/step "
+    # the dict relabels compressed wires by their compressor (topk:p/rank:r)
+    return (f"exchange={wire['exchange']}: "
+            f"{wire['per_step_bytes']:,} bytes/agent/step "
             f"on the wire ({wire['degree']:g} neighbors x "
             f"{wire['per_neighbor_bytes']:,} B{per_round}{per_payload}; native "
             f"{wire['native_per_step_bytes']:,} B)")

@@ -254,6 +254,19 @@ def make_local_residual_init(fl: consensus.FlatComm) -> Callable:
     return local_init
 
 
+def make_local_qwarm_init(fl: consensus.FlatComm) -> Callable:
+    """Per-shard rank-compressor warm-start initializer (inside
+    ``shard_map``): the deterministic init basis per local bucket, the
+    analog of :func:`make_local_residual_init` for ``OptState.qwarm``
+    (``()`` for non-rank programs)."""
+
+    def local_init(params):
+        _, bufs = _pack_wire_bufs(fl, params)
+        return fl.strategy.qwarm_init(bufs)
+
+    return local_init
+
+
 def _exchange_result(spec, nbrs, w, scales, selfs, mixed: bool):
     """Split the strategy's flat per-bucket operand lists into the
     :class:`ExchangeResult` payload groups (params / mixed momentum)."""
@@ -325,8 +338,8 @@ def make_update_phase(optimizer: DistributedOptimizer, comm: CommOps,
                 fl, params,
                 _momentum_payload(optimizer, state) if mixed else None)
             if error_feedback:
-                wire, new_res = strategy.quantize_ef(bufs, state.step,
-                                                     state.residual)
+                wire, new_res, new_qwarm = strategy.compress_ef(
+                    bufs, state.step, state.residual, state.qwarm)
             else:
                 wire = strategy.quantize_stage(bufs, state.step)
             nbrs, w, scales, selfs = strategy.continue_from_wire(
@@ -335,7 +348,8 @@ def make_update_phase(optimizer: DistributedOptimizer, comm: CommOps,
             new_params, new_state = optimizer.update(params, grads, state,
                                                      comm, exchanged=ex)
             if error_feedback:
-                new_state = new_state._replace(residual=new_res)
+                new_state = new_state._replace(residual=new_res,
+                                               qwarm=new_qwarm)
             return new_params, new_state
 
         return update_sync_staged
@@ -358,10 +372,11 @@ def make_update_phase(optimizer: DistributedOptimizer, comm: CommOps,
         # quantize (x_t, v_t) as the wire step t+1 exchanges (one step
         # stale there)
         if error_feedback:
-            new_wire, new_res = strategy.quantize_ef(bufs, state.step,
-                                                     state.residual)
+            new_wire, new_res, new_qwarm = strategy.compress_ef(
+                bufs, state.step, state.residual, state.qwarm)
             return new_params, new_state._replace(wire=new_wire,
-                                                  residual=new_res)
+                                                  residual=new_res,
+                                                  qwarm=new_qwarm)
         # advance_wire = quantize_stage on the fault-free path; with a
         # staleness ring it also pushes the fresh generation and advances
         # the age counters (no extra bytes — the old slots never move)
@@ -400,6 +415,8 @@ class StepProgram:
     init_wire: Optional[Callable[[PyTree], Any]] = None
     # same override for the error-feedback residual buffers
     init_residual: Optional[Callable[[PyTree], Any]] = None
+    # same override for the rank compressor's warm-start basis
+    init_qwarm: Optional[Callable[[PyTree], Any]] = None
 
     def init_state(self, params: PyTree) -> OptState:
         state = self.optimizer.init(params)
@@ -419,6 +436,15 @@ class StepProgram:
             else:
                 state = state._replace(
                     residual=consensus.initial_residual_state(fl, params))
+        if fl is not None and fl.program is not None \
+                and fl.program.compressed:
+            # rank warm-start basis, under BOTH schedules (sync compress_ef
+            # consumes it too); independent of the wire init by design
+            if self.init_qwarm is not None:
+                state = state._replace(qwarm=self.init_qwarm(params))
+            else:
+                state = state._replace(
+                    qwarm=consensus.initial_qwarm_state(fl, params))
         return state
 
     def step_fn(self, params: PyTree, opt_state: OptState, batch):
@@ -445,26 +471,34 @@ def wire_bytes_per_neighbor(wire) -> int:
     the sender-selected slot is the only thing exchanged each step, so the
     bytes are independent of the ring depth ``S``; the stale slots and the
     age counters are local state and move nothing (asserted by
-    ``benchmarks/kernel_microbench.py consensus/stale_ring``)."""
-    if isinstance(wire, consensus.WireRing):
-        total = 0
-        for payload, scales in wire.slots:
+    ``benchmarks/kernel_microbench.py consensus/stale_ring``).
+
+    Compressed entries (:class:`repro.core.consensus.TopKWire` /
+    :class:`repro.core.consensus.RankWire`) count EVERY field — the
+    neighbors can reconstruct nothing locally, so values, indices, scales
+    and both rank factors all cross the wire.  The accounting-side figure
+    is :func:`repro.core.consensus.program_bytes_per_neighbor`; the
+    microbench asserts the two agree on the actual carried buffers."""
+
+    def _entry_bytes(entry, drop_axes: int) -> int:
+        if isinstance(entry, (consensus.TopKWire, consensus.RankWire)):
+            fields = list(entry)
+        else:
+            payload, scales = entry
             quantized = jnp.dtype(payload.dtype).itemsize == 1
-            for x in ((payload, scales) if quantized else (payload,)):
-                per_agent = 1
-                for d in x.shape[2:]:     # drop the agent AND ring axes
-                    per_agent *= d
-                total += per_agent * jnp.dtype(x.dtype).itemsize
-        return total
-    total = 0
-    for payload, scales in wire:
-        quantized = jnp.dtype(payload.dtype).itemsize == 1
-        for x in ((payload, scales) if quantized else (payload,)):
+            fields = [payload, scales] if quantized else [payload]
+        total = 0
+        for x in fields:
             per_agent = 1
-            for d in x.shape[1:]:
+            for d in x.shape[drop_axes:]:
                 per_agent *= d
             total += per_agent * jnp.dtype(x.dtype).itemsize
-    return total
+        return total
+
+    if isinstance(wire, consensus.WireRing):
+        # drop the agent AND ring axes
+        return sum(_entry_bytes(e, 2) for e in wire.slots)
+    return sum(_entry_bytes(e, 1) for e in wire)
 
 
 # --------------------------------------------------------------------------
@@ -584,7 +618,8 @@ def exchange_dependency_report(step_fn, params, opt_state, batch) -> dict:
                  inner=jax.tree.map(lambda _: "state", opt_state.inner),
                  wire=jax.tree.map(lambda _: "wire", opt_state.wire),
                  residual=jax.tree.map(lambda _: "residual",
-                                       opt_state.residual)),
+                                       opt_state.residual),
+                 qwarm=jax.tree.map(lambda _: "qwarm", opt_state.qwarm)),
         jax.tree.map(lambda _: "batch", batch),
     )
     labels = [frozenset([l]) for l in jax.tree.leaves(label_tree)]

@@ -121,6 +121,11 @@ class OptState(NamedTuple):
     # last quantized wire payload; local state, never crosses the wire.
     # () when error feedback is off — the engine owns filling/refreshing.
     residual: Any = ()
+    # warm-start state of the rank-r wire compressor (compressor="rank:r"):
+    # one (A, 128, r) / (1, 128, r) orthonormal basis per flat bucket,
+    # carried like the wire and refreshed by compress_ef each step.  ()
+    # for every other program — the engine owns filling/refreshing.
+    qwarm: Any = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,7 +214,8 @@ class DistributedOptimizer:
         else:
             new_params, new_inner = self.apply(params, grads, state.inner, alpha, comm, state.step)
         return new_params, OptState(step=state.step + 1, inner=new_inner,
-                                    wire=state.wire, residual=state.residual)
+                                    wire=state.wire, residual=state.residual,
+                                    qwarm=state.qwarm)
 
     def state_specs(self, param_specs: PyTree) -> "OptState":
         """PartitionSpec tree mirroring init() (for pjit in_shardings)."""

@@ -102,8 +102,12 @@ class CollaborativeTrainer:
     ``"stall:1:1:3,drop:0:2"``) engage the bounded-staleness wire ring with
     arrival-masked mixing under ``schedule="overlap"`` — injected
     stragglers/drops cost bounded drift instead of a stalled step.
-    Everything validates at construction; non-trivial programs require a
-    ``fused=True`` consensus optimizer.
+    ``compressor=`` selects the wire compressor axis (``"int8"`` /
+    ``"fp8"`` alias the exchange precisions; ``"topk:p"`` / ``"rank:r"``
+    are the biased sparse / low-rank compressors riding the EF rail —
+    they require ``error_feedback=True`` and normalize ``exchange``
+    themselves).  Everything validates at construction; non-trivial
+    programs require a ``fused=True`` consensus optimizer.
     """
 
     def __init__(
@@ -126,6 +130,7 @@ class CollaborativeTrainer:
         momentum_mixing: str = "none",
         staleness: int = 1,
         fault_schedule=None,              # FaultSchedule | spec str (faults.py)
+        compressor: str = "none",
     ):
         self.loss_fn = loss_fn
         self.topology = topology
@@ -155,7 +160,9 @@ class CollaborativeTrainer:
             strategy=mixing_strategy, rounds=consensus_rounds,
             error_feedback=error_feedback, exchange=exchange,
             momentum_mixing=momentum_mixing,
-            staleness=staleness, faults=fault_schedule)
+            staleness=staleness, faults=fault_schedule,
+            compressor=compressor)
+        self.exchange = exchange = self.program.exchange
         self.faults = self.program.faults
         self.comm: CommOps = stacked_comm_ops(topology, interpret=interpret,
                                               exchange=exchange,
@@ -192,7 +199,8 @@ class CollaborativeTrainer:
                 self.program.schedule if not self.program.schedule.is_static
                 else topology,
                 exchange, rounds=self.program.rounds,
-                payloads=self.program.n_payloads)["per_step_bytes"]
+                payloads=self.program.n_payloads,
+                program=self.program)["per_step_bytes"]
         elif isinstance(optimizer, FedAvg):
             self.wire_bytes_per_step = mean_exchange_bytes_per_step(
                 flatbuf.make_flat_spec(stacked, lead=1), topology.n_agents,

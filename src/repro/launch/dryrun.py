@@ -37,7 +37,7 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
            mixing_strategy: str = "static", consensus_rounds: int = 1,
            topology_schedule=None, error_feedback: bool = False,
            momentum_mixing: str = "none", staleness: int = 1,
-           fault_schedule=None):
+           fault_schedule=None, compressor: str = "none"):
     import jax
     from repro.configs import get_config, INPUT_SHAPES
     from repro.core.optim import make_optimizer
@@ -56,13 +56,21 @@ def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
         if fused:
             kw["fused"] = True
         opt = make_optimizer(optimizer_name, 0.01, **kw)
-        bundle = steps_lib.build_train_step(
-            cfg, shape, mesh, opt, mode=mode, topology_name=topology, mixing=mixing,
-            microbatches=microbatches, exchange=exchange, schedule=schedule,
-            mixing_strategy=mixing_strategy, consensus_rounds=consensus_rounds,
-            topology_schedule=topology_schedule, error_feedback=error_feedback,
-            momentum_mixing=momentum_mixing, staleness=staleness,
-            fault_schedule=fault_schedule)
+        try:
+            bundle = steps_lib.build_train_step(
+                cfg, shape, mesh, opt, mode=mode, topology_name=topology, mixing=mixing,
+                microbatches=microbatches, exchange=exchange, schedule=schedule,
+                mixing_strategy=mixing_strategy, consensus_rounds=consensus_rounds,
+                topology_schedule=topology_schedule, error_feedback=error_feedback,
+                momentum_mixing=momentum_mixing, staleness=staleness,
+                fault_schedule=fault_schedule, compressor=compressor)
+        except ValueError as e:
+            if "agent-only sharding" in str(e):
+                # compressed wires don't shard over the production mesh's
+                # model axes (yet) — record the skip instead of crashing
+                # the sweep; the stacked trainer covers compressed perf
+                return None, f"skip: {e}"
+            raise
         params = bundle.param_structs(mesh)
         opt_state = bundle.opt_state_structs(mesh, opt)
         args = (params, opt_state, bundle.batch_specs)
@@ -91,7 +99,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
              mixing_strategy: str = "static", consensus_rounds: int = 1,
              topology_schedule=None, error_feedback: bool = False,
              momentum_mixing: str = "none", staleness: int = 1,
-             fault_schedule=None):
+             fault_schedule=None, compressor: str = "none"):
     import jax
     from repro.analysis.hlo import analyze_hlo
     from repro.analysis.roofline import model_flops, roofline_from_stats
@@ -108,11 +116,12 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                          topology_schedule=topology_schedule,
                          error_feedback=error_feedback,
                          momentum_mixing=momentum_mixing, staleness=staleness,
-                         fault_schedule=fault_schedule)
+                         fault_schedule=fault_schedule, compressor=compressor)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
               "mixing": mixing, "topology": topology, "optimizer": optimizer_name,
               "microbatches": microbatches, "exchange": exchange,
-              "schedule": schedule, "staleness": staleness}
+              "schedule": schedule, "staleness": staleness,
+              "compressor": compressor}
     if skip:
         record["status"] = skip
         _dump(out_dir, label, record)
@@ -133,6 +142,10 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
             print(f"[dryrun] {label}: --exchange {exchange} has no effect on "
                   f"mixing={mixing!r} fused={fused} — reporting native bytes")
         program = bundle.mixing_program
+        if program is not None and mixing == "ppermute_fused" and fused:
+            # the compressor aliases (int8/fp8) normalize the exchange at
+            # program-build time; price what the wire actually carries
+            live = program.exchange
         rounds = program.rounds if program is not None else 1
         payloads = program.n_payloads if program is not None else 1
         wire_topo = bundle.topology
@@ -156,12 +169,18 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                                           "faults": f.describe()}
             record["arrival_accounting"] = f.arrival_accounting(
                 program.staleness)
+        # price through the program so compressed wires (topk/rank) report
+        # their actual carried fields; None when the knob isn't live (the
+        # non-fused fallback moves native f32 regardless of the program)
+        live_program = program if live != "f32" or (
+            program is not None and program.compressed) else None
         record["exchange_bytes_per_step"] = consensus_lib.exchange_bytes_per_step(
             flatbuf.make_flat_spec(args[0], lead=1), wire_topo, live, rounds,
-            payloads)
+            payloads, program=live_program)
         if verbose:
             print(f"[dryrun] {label} " + consensus_lib.describe_exchange_cost(
-                args[0], wire_topo, live, rounds=rounds, payloads=payloads))
+                args[0], wire_topo, live, rounds=rounds, payloads=payloads,
+                program=live_program))
         # which step inputs reach the collective exchange (the overlap
         # schedule's proof: ppermutes consume only carried wire state, so
         # they are off the grad->update critical path)
@@ -287,6 +306,12 @@ def main() -> int:
                     help="deterministic fault-injection spec (e.g. "
                          "'stall:1:1:3,drop:0:2', 'random:0.1:16'; see "
                          "repro.core.faults.make_fault_schedule)")
+    ap.add_argument("--compressor", default="none",
+                    help="wire compressor axis: 'none', 'int8'/'fp8' "
+                         "(aliases), 'topk:p' or 'rank:r' (biased; require "
+                         "--error-feedback); the record's "
+                         "exchange_bytes_per_step prices the compressed "
+                         "payload fields")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     ap.add_argument("--no-analyze", action="store_true")
@@ -318,7 +343,8 @@ def main() -> int:
                        error_feedback=args.error_feedback,
                        momentum_mixing=args.momentum_mixing,
                        staleness=args.staleness,
-                       fault_schedule=args.fault_schedule)
+                       fault_schedule=args.fault_schedule,
+                       compressor=args.compressor)
         if str(rec.get("status", "")).startswith("FAIL"):
             failures += 1
     print(f"[dryrun] done: {len(pairs)} pairs, {failures} failures")

@@ -229,6 +229,7 @@ def build_train_step(
     momentum_mixing: str = "none",  # "mixed": momentum rides the wire too
     staleness: int = 1,           # bounded-staleness ring depth S (overlap)
     fault_schedule=None,          # FaultSchedule | spec str (repro.core.faults)
+    compressor: str = "none",     # none | int8 | fp8 | topk:p | rank:r
 ) -> TrainStepBundle:
     rules = shlib.rules_for_mode(mode, mesh)
     n_agents = shlib.agent_count(mesh, mode)
@@ -244,7 +245,9 @@ def build_train_step(
         strategy=mixing_strategy, rounds=consensus_rounds,
         error_feedback=error_feedback, exchange=exchange,
         momentum_mixing=momentum_mixing,
-        staleness=staleness, faults=fault_schedule)
+        staleness=staleness, faults=fault_schedule,
+        compressor=compressor)
+    exchange = program.exchange   # compressor aliases normalize the precision
     if not program.is_trivial and mixing != "ppermute_fused":
         raise ValueError(
             f"mixing strategy {program.strategy!r} (rounds={program.rounds}, "
@@ -280,10 +283,18 @@ def build_train_step(
         comm = make_mix_comm(topology, mesh, pspecs, mode, mixing)
     init_wire = None
     init_residual = None
+    init_qwarm = None
     agent_axes_t = rules["agent"] if isinstance(rules["agent"], tuple) \
         else (rules["agent"],)
     other_axes = tuple(a for a in mesh.axis_names if a not in agent_axes_t)
     state_sp = P(rules["agent"], other_axes or None, None)
+    if program.compressed and any(mesh.shape[a] > 1 for a in other_axes):
+        raise ValueError(
+            f"compressor={program.compressor!r} supports agent-only sharding: "
+            f"the rank factors / warm-start bases ((r, 128) and (128, r)) and "
+            f"the top-k index payload do not shard over the non-agent mesh "
+            f"axes {other_axes}; use an agent-only mesh or a dense "
+            f"compressor (int8/fp8)")
 
     def _n_buckets():
         # one wire/residual entry per flat bucket per payload tree — the
@@ -307,6 +318,19 @@ def build_train_step(
             return _shard_map(local_residual_init, mesh, (pspecs,),
                               residual_specs)(params)
 
+    if program.compressed and program.compressor_kind == "rank":
+        # the rank compressor's warm-start bases ride the optimizer state
+        # like the wire: one (A, 128, r) stack per bucket, agent-sharded,
+        # initialized inside shard_map (needed under BOTH schedules — the
+        # sync compress_ef consumes them too)
+        qwarm_specs = tuple(state_sp for _ in range(_n_buckets()))
+        opt_specs = opt_specs._replace(qwarm=qwarm_specs)
+        local_qwarm_init = engine.make_local_qwarm_init(comm.flat)
+
+        def init_qwarm(params):
+            return _shard_map(local_qwarm_init, mesh, (pspecs,),
+                              qwarm_specs)(params)
+
     if schedule == "overlap":
         if mixing != "ppermute_fused":
             raise ValueError(
@@ -329,6 +353,20 @@ def build_train_step(
                 slots=tuple((ring_sp, ring_sp) for _ in range(_n_buckets())),
                 send_age=P(rules["agent"]),
                 ages=P(rules["agent"], None))
+        elif program.compressed:
+            # compressed wire entries are NamedTuples (TopKWire/RankWire);
+            # every field carries the leading agent axis and two trailing
+            # unsharded dims, so state_sp applies field-wise (agent-only
+            # meshes — validated above)
+            if program.compressor_kind == "topk":
+                wire_specs = tuple(
+                    consensus_lib.TopKWire(values=state_sp, indices=state_sp,
+                                           scales=state_sp)
+                    for _ in range(_n_buckets()))
+            else:
+                wire_specs = tuple(
+                    consensus_lib.RankWire(p=state_sp, qt=state_sp)
+                    for _ in range(_n_buckets()))
         else:
             wire_specs = tuple((state_sp, state_sp)
                                for _ in range(_n_buckets()))
@@ -359,6 +397,7 @@ def build_train_step(
         schedule=schedule,
         init_wire=init_wire,
         init_residual=init_residual,
+        init_qwarm=init_qwarm,
     )
 
     return TrainStepBundle(

@@ -78,6 +78,13 @@ def main() -> None:
                          "'random:0.1:16' or 'none' (see "
                          "repro.core.faults.make_fault_schedule; requires "
                          "--schedule overlap, implies --fused)")
+    ap.add_argument("--compressor", default="none",
+                    help="wire compressor: 'none', 'int8'/'fp8' (alias the "
+                         "--exchange precisions), 'topk:p' (top-k sparse, "
+                         "density p, e.g. topk:0.01) or 'rank:r' (rank-r "
+                         "PowerSGD-style factors, e.g. rank:4); topk/rank "
+                         "are biased and require --error-feedback "
+                         "(implies --fused)")
     ap.add_argument("--microbatch", type=int, default=1,
                     help="gradient-accumulation microbatches per step")
     ap.add_argument("--lr", type=float, default=0.01)
@@ -135,7 +142,8 @@ def main() -> None:
                  "(the staleness ring generalizes the overlap wire buffer)")
     nontrivial_mixing = (args.mixing_strategy != "static"
                          or args.consensus_rounds > 1 or args.error_feedback
-                         or args.momentum_mixing != "none" or fault_tolerant)
+                         or args.momentum_mixing != "none" or fault_tolerant
+                         or args.compressor != "none")
     if nontrivial_mixing and not args.fused:
         # the strategy layer lives on the fused flat-buffer path
         print("[train] non-static mixing strategy implies --fused; enabling")
@@ -163,7 +171,8 @@ def main() -> None:
                                    error_feedback=args.error_feedback,
                                    momentum_mixing=args.momentum_mixing,
                                    staleness=args.staleness,
-                                   fault_schedule=args.fault_schedule)
+                                   fault_schedule=args.fault_schedule,
+                                   compressor=args.compressor)
 
     from repro.core.consensus import describe_exchange_cost
     program = trainer.program
@@ -185,8 +194,8 @@ def main() -> None:
         print("[train] " + describe_exchange_cost(
             trainer.state.params,
             program.schedule if not program.schedule.is_static else topo,
-            args.exchange, rounds=program.rounds,
-            payloads=program.n_payloads))
+            trainer.exchange, rounds=program.rounds,
+            payloads=program.n_payloads, program=program))
     tokens = make_lm_tokens(1 << 15, vocab=cfg.vocab_size, seed=args.seed)
     batches = lm_agent_batches(tokens, args.agents, args.batch, args.seq, seed=args.seed)
 

@@ -1,0 +1,538 @@
+"""ISSUE-7: the ``compressor=`` axis — top-k sparse + rank-r wire payloads
+on the EF rail (see the "Compressor axis" section of ARCHITECTURE.md).
+
+Covers:
+* the single ``parse_compressor`` parser + the full ``make_mixing_program``
+  option matrix (every rejection is actionable: names the conflicting
+  flags AND a supported alternative),
+* the Pallas top-k threshold kernel (one-sweep k-th-magnitude bracketing)
+  and the exact compress/decompress round trip,
+* the rank-r power-iteration compressor (exact on rank-r inputs,
+  orthonormal warm-start basis),
+* ``compressor="int8"`` as a bit-for-bit alias of the existing dense
+  quantized path (sync AND overlap; the sharded twin lives in the
+  subprocess test below),
+* wire-byte accounting == the actual carried buffers at every layer,
+* checkpoint round-trips of the compressed OptState (wire + residual +
+  rank warm-start basis) bit-exact,
+* sharded overlap + topk: every ppermute carried-only
+  (``exchange_dependency_report``), agent-axis-only sharding enforced.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus as C
+from repro.core import engine, flatbuf
+from repro.core.optim import CDSGD
+from repro.core.topology import make_topology
+from repro.core.trainer import CollaborativeTrainer, TrainState
+from repro.kernels.consensus_update.topk import (
+    rank_compress_2d,
+    rank_decompress_2d,
+    rank_init_q,
+    topk_compress_2d,
+    topk_decompress_2d,
+    topk_k_rows,
+    topk_threshold_2d,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_AGENTS = 4
+
+
+# -------------------------------------------------------------------------
+# parse_compressor + the make_mixing_program option matrix (satellite)
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec,kind,param", [
+    ("none", "none", None),
+    ("int8", "int8", None),
+    ("fp8", "fp8", None),
+    ("topk:0.01", "topk", 0.01),
+    ("topk:1", "topk", 1.0),
+    ("rank:1", "rank", 1),
+    ("rank:16", "rank", 16),
+])
+def test_parse_compressor_valid(spec, kind, param):
+    assert C.parse_compressor(spec) == (kind, param)
+
+
+@pytest.mark.parametrize("spec", [
+    "gzip", "topk", "rank", "topk:0", "topk:1.5", "topk:x", "rank:0",
+    "rank:-1", "rank:1.5", "int8:4", "none:1",
+])
+def test_parse_compressor_rejects(spec):
+    with pytest.raises(ValueError):
+        C.parse_compressor(spec)
+
+
+def _expected_program_ok(compressor, error_feedback, exchange, staleness,
+                         rounds, momentum_mixing):
+    """The documented validity rules, mirrored (ARCHITECTURE.md table)."""
+    kind, _ = C.parse_compressor(compressor)
+    if kind in ("int8", "fp8") and exchange not in ("f32", kind):
+        return False
+    eff_exchange = kind if kind in ("int8", "fp8") else exchange
+    if kind in ("topk", "rank"):
+        if not error_feedback:
+            return False
+        if staleness > 1 or rounds > 1 or momentum_mixing != "none":
+            return False
+        if kind == "topk" and exchange not in ("f32", "int8"):
+            return False
+        if kind == "rank" and exchange != "f32":
+            return False
+    elif error_feedback:
+        if eff_exchange not in ("int8", "fp8"):
+            return False            # dense f32 wire has no error to carry
+        if staleness > 1:
+            return False            # EF needs the one-step-stale contract
+    return True
+
+
+@pytest.mark.parametrize("compressor", ["none", "int8", "fp8", "topk:0.1",
+                                        "rank:2"])
+@pytest.mark.parametrize("error_feedback", [False, True])
+@pytest.mark.parametrize("exchange", ["f32", "int8"])
+@pytest.mark.parametrize("staleness,rounds,momentum_mixing", [
+    (1, 1, "none"), (2, 1, "none"), (1, 3, "none"), (1, 1, "mixed"),
+])
+def test_make_mixing_program_option_matrix(compressor, error_feedback,
+                                           exchange, staleness, rounds,
+                                           momentum_mixing):
+    """The full config matrix: every combination either builds a program
+    with the documented normalizations, or raises an ACTIONABLE ValueError
+    (names the conflicting flag and offers an alternative)."""
+    topo = make_topology("ring", N_AGENTS)
+    kw = dict(compressor=compressor, error_feedback=error_feedback,
+              exchange=exchange, staleness=staleness, rounds=rounds,
+              momentum_mixing=momentum_mixing)
+    ok = _expected_program_ok(compressor, error_feedback, exchange,
+                              staleness, rounds, momentum_mixing)
+    if ok:
+        prog = C.make_mixing_program(topo, **kw)
+        kind, _ = C.parse_compressor(compressor)
+        # the documented exchange normalizations
+        if kind in ("int8", "fp8"):
+            assert prog.exchange == kind
+        elif kind == "topk":
+            assert prog.exchange == "int8"
+        elif kind == "rank":
+            assert prog.exchange == "f32"
+        assert prog.compressed == (kind in ("topk", "rank"))
+    else:
+        with pytest.raises(ValueError) as ei:
+            C.make_mixing_program(topo, **kw)
+        msg = str(ei.value)
+        # actionable: names a flag and points at an alternative
+        assert "--" in msg, msg
+        assert any(w in msg for w in ("use", "drop", "add", "set")), msg
+
+
+def test_compressed_program_rejects_faults():
+    from repro.core.faults import make_fault_schedule
+    topo = make_topology("ring", N_AGENTS)
+    fs = make_fault_schedule("drop:0:2", topo.n_agents)
+    with pytest.raises(ValueError, match="staleness|fault"):
+        C.make_mixing_program(topo, compressor="topk:0.1",
+                              error_feedback=True, faults=fs)
+
+
+# -------------------------------------------------------------------------
+# top-k kernel: k_rows math, threshold bracketing, round trip
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,p,want", [
+    (6, 0.25, 2),      # ceil(0.25*768)=192 -> 2 lanes-rows
+    (6, 1.0, 6),
+    (6, 1e-6, 1),      # floor: at least one compact row
+    (100, 0.01, 1),    # ceil(128)=128 -> 1 row
+    (100, 0.5, 50),
+])
+def test_topk_k_rows_lane_aligned(rows, p, want):
+    assert topk_k_rows(rows, p) == want
+    assert 1 <= topk_k_rows(rows, p) <= rows
+
+
+def test_topk_threshold_brackets_kth_magnitude():
+    """The one-sweep Pallas histogram brackets the k-th largest magnitude:
+    tau selects <= k elements and the true k-th magnitude sits within one
+    geometric bin below tau."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((24, 128)), jnp.float32)
+    n_bins, span = 16, 1e-4
+    for k in (1, 50, 700, 24 * 128):
+        tau, counts = topk_threshold_2d(x, k, n_bins=n_bins, span=span,
+                                        interpret=True)
+        tau = float(tau)
+        a = np.abs(np.asarray(x)).ravel()
+        kth = np.sort(a)[::-1][k - 1]
+        assert np.sum(a >= tau) <= k
+        assert tau >= kth or np.isclose(tau, kth, rtol=1e-6)
+        # ...but never more than one geometric bin above it
+        assert tau * span ** (1.0 / (n_bins - 1)) <= kth + 1e-12, (tau, kth)
+        # histogram sanity: counts nondecreasing as thresholds shrink
+        c = np.asarray(counts)
+        assert np.all(np.diff(c) >= 0)
+
+
+def test_topk_threshold_all_zero_bucket():
+    tau, counts = topk_threshold_2d(jnp.zeros((4, 128), jnp.float32), 8,
+                                    interpret=True)
+    assert float(counts[-1]) == 0.0 and float(tau) > 0.0
+
+
+def test_topk_compress_roundtrip():
+    """Exact selection + SR-int8 values: the decompressed bucket is zero
+    off-support, within one quantization step on-support, and the indices
+    are the true top-K magnitudes (sorted, unique, in range)."""
+    rng = np.random.default_rng(1)
+    rows, k_rows = 6, 2
+    x = jnp.asarray(rng.standard_normal((rows, 128)), jnp.float32)
+    v, i, s = topk_compress_2d(x, k_rows, jnp.int32(7), interpret=True)
+    assert v.shape == (k_rows, 128) and v.dtype == jnp.int8
+    assert i.shape == (k_rows, 128) and i.dtype == jnp.int32
+    assert s.shape == (k_rows, 1) and s.dtype == jnp.float32
+
+    idx = np.asarray(i).ravel()
+    assert np.all(np.diff(idx) > 0)                     # sorted, unique
+    a = np.abs(np.asarray(x)).ravel()
+    want = np.sort(np.argsort(a)[::-1][: k_rows * 128])
+    np.testing.assert_array_equal(idx, want)            # exact top-K support
+
+    dense = topk_decompress_2d(v, i, s, rows)
+    d = np.asarray(dense).ravel()
+    xf = np.asarray(x).ravel()
+    off = np.ones(rows * 128, bool)
+    off[idx] = False
+    assert np.all(d[off] == 0.0)
+    # SR int8 with per-row scales: |deq - x| <= scale (one quant step)
+    step = np.repeat(np.asarray(s).ravel(), 128)
+    assert np.all(np.abs(d[idx] - xf[idx]) <= step + 1e-7)
+
+
+def test_topk_full_density_is_identity_support():
+    """p = 1 keeps every element (the compact payload IS the bucket)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((3, 128)), jnp.float32)
+    v, i, s = topk_compress_2d(x, 3, jnp.int32(0), interpret=True)
+    np.testing.assert_array_equal(np.asarray(i).ravel(),
+                                  np.arange(3 * 128))
+    dense = topk_decompress_2d(v, i, s, 3)
+    assert float(jnp.max(jnp.abs(dense - x))) <= float(jnp.max(s)) + 1e-7
+
+
+# -------------------------------------------------------------------------
+# rank-r power-iteration compressor
+# -------------------------------------------------------------------------
+
+
+def test_rank_compressor_exact_on_rank_r():
+    """One warm-started power iteration per call: on an exactly rank-r
+    matrix the second call reconstructs it to fp accuracy, and the carried
+    basis stays orthonormal."""
+    rng = np.random.default_rng(3)
+    r = 3
+    m = jnp.asarray(rng.standard_normal((40, r)) @
+                    rng.standard_normal((r, 128)), jnp.float32)
+    q = rank_init_q(r)
+    assert q.shape == (128, r)
+    p1, qt1, q2 = rank_compress_2d(m, q)
+    p2, qt2, q3 = rank_compress_2d(m, q2)
+    assert p2.shape == (40, r) and qt2.shape == (r, 128)
+    scale = float(jnp.max(jnp.abs(m)))
+    err = float(jnp.max(jnp.abs(rank_decompress_2d(p2, qt2) - m)))
+    assert err < 1e-3 * scale, err
+    np.testing.assert_allclose(np.asarray(q3.T @ q3), np.eye(r), atol=1e-4)
+
+
+def test_rank_init_q_deterministic_orthonormal():
+    q = rank_init_q(4)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(rank_init_q(4)))
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(4), atol=1e-5)
+
+
+# -------------------------------------------------------------------------
+# trainer-level: int8 alias parity, accounting, checkpoint round trip
+# -------------------------------------------------------------------------
+
+
+def _testbed():
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((40, 128)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((70,)), jnp.float32)}
+    topo = make_topology("ring", N_AGENTS)
+
+    def loss(p, b):
+        return 0.5 * (jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)), {}
+
+    batch = {"x": jnp.zeros((N_AGENTS, 1), jnp.float32)}
+    return params, topo, loss, batch
+
+
+@pytest.mark.parametrize("schedule", ["sync", "overlap"])
+def test_compressor_int8_alias_bit_for_bit(schedule):
+    """compressor="int8" IS the existing exchange="int8" path — identical
+    trajectories bit-for-bit under both exchange schedules."""
+    params, topo, loss, batch = _testbed()
+
+    def run(**kw):
+        tr = CollaborativeTrainer(loss, params, topo, CDSGD(0.01, fused=True),
+                                  schedule=schedule, donate=False, **kw)
+        for _ in range(3):
+            tr.step(batch)
+        return tr.state.params
+
+    a = run(exchange="int8")
+    b = run(compressor="int8")
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("compressor", ["topk:0.1", "rank:2"])
+def test_compressed_accounting_matches_actual_buffers(compressor):
+    """Satellite: ONE source of wire-byte truth.  The strategy's
+    bytes_per_neighbor == program_bytes_per_neighbor == the bytes counted
+    from the actual carried overlap payloads; the trainer multiplies by
+    the topology degree."""
+    params, topo, loss, batch = _testbed()
+    tr = CollaborativeTrainer(loss, params, topo, CDSGD(0.01, fused=True),
+                              schedule="overlap", error_feedback=True,
+                              compressor=compressor, donate=False)
+    spec = flatbuf.make_flat_spec(tr.state.params, lead=1)
+    actual = engine.wire_bytes_per_neighbor(tr.state.opt_state.wire)
+    assert actual == tr.comm.flat.strategy.bytes_per_neighbor(spec)
+    assert actual == C.program_bytes_per_neighbor(spec, tr.program)
+    assert tr.wire_bytes_per_step == actual * topo.degree()
+    # and compression actually compresses vs the dense f32 wire
+    assert actual < spec.exchange_bytes("f32")
+
+
+@pytest.mark.parametrize("compressor", ["topk:0.25", "rank:2"])
+def test_train_state_roundtrip_compressed_bit_exact(tmp_path, compressor):
+    """The compressed OptState — TopKWire/RankWire payloads, EF residuals
+    AND the rank warm-start basis — checkpoints and resumes bit-exact."""
+    from repro.checkpoint import restore_train_state, save_train_state
+    params, topo, loss, batch = _testbed()
+
+    def make():
+        return CollaborativeTrainer(loss, params, topo,
+                                    CDSGD(0.01, fused=True),
+                                    schedule="overlap", error_feedback=True,
+                                    compressor=compressor, donate=False)
+
+    tr = make()
+    if compressor.startswith("rank"):
+        assert len(tr.state.opt_state.qwarm) > 0
+    for _ in range(3):
+        tr.step(batch)
+    d = str(tmp_path / "ckpt")
+    save_train_state(d, tr.state.step, tr.state.params, tr.state.opt_state)
+
+    tr2 = make()                     # fresh wire/residual/qwarm state ...
+    p0, o0 = restore_train_state(d, tr2.state.params, tr2.state.opt_state)
+    tr2.state = TrainState(params=p0, opt_state=o0, step=int(o0.step))
+    for name in ("wire", "residual", "qwarm"):
+        for a, b in zip(jax.tree.leaves(getattr(tr.state.opt_state, name)),
+                        jax.tree.leaves(getattr(o0, name))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    m1, m2 = tr.step(batch), tr2.step(batch)
+    assert m1["loss"] == m2["loss"]
+    for a, b in zip(jax.tree.leaves(tr.state.params),
+                    jax.tree.leaves(tr2.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ef_topk_tracks_f32_closer_than_noef():
+    """The EF rationale, measured: at equal density the EF run's drift off
+    the f32 trajectory is strictly below the (config-forbidden, driven
+    through the engine directly) no-EF run's."""
+    import dataclasses
+
+    from repro.core.optim import stacked_comm_ops
+    params, topo, loss, batch = _testbed()
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (N_AGENTS,) + x.shape) + 0.0,
+        params)
+
+    def drift(program):
+        opt = CDSGD(0.01, fused=True)
+        comm = stacked_comm_ops(topo, interpret=True,
+                                exchange=program.exchange, program=program)
+        sp = engine.StepProgram(
+            optimizer=opt, comm=comm,
+            grad_phase=engine.make_grad_phase(loss, 1),
+            update_phase=engine.make_update_phase(opt, comm, "overlap"),
+            schedule="overlap")
+        state = sp.init_state(stacked)
+        step = jax.jit(sp.step_fn)
+        p = stacked
+        for _ in range(10):
+            p, state, _ = step(p, state, batch)
+        return max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                   zip(jax.tree.leaves(p), jax.tree.leaves(ref)))
+
+    ref_prog = C.make_mixing_program(topo)           # dense f32 reference
+    opt = CDSGD(0.01, fused=True)
+    comm = stacked_comm_ops(topo, interpret=True, program=ref_prog)
+    sp = engine.StepProgram(
+        optimizer=opt, comm=comm,
+        grad_phase=engine.make_grad_phase(loss, 1),
+        update_phase=engine.make_update_phase(opt, comm, "overlap"),
+        schedule="overlap")
+    state = sp.init_state(stacked)
+    step = jax.jit(sp.step_fn)
+    ref = stacked
+    for _ in range(10):
+        ref, state, _ = step(ref, state, batch)
+
+    ef_prog = C.make_mixing_program(topo, compressor="topk:0.1",
+                                    error_feedback=True)
+    noef_prog = dataclasses.replace(ef_prog, error_feedback=False)
+    assert drift(ef_prog) < drift(noef_prog)
+
+
+# -------------------------------------------------------------------------
+# lyapunov: the EF-delta radius inflation
+# -------------------------------------------------------------------------
+
+
+def test_ef_compressed_bound_reduces_and_orders():
+    """delta = 0 for the SR wires (exact reduction to the uncompressed
+    schedule bound); the biased compressors inflate the radius by
+    (1 + 2 delta / (1 - delta)), monotone in delta."""
+    from repro.core import lyapunov
+    topo = make_topology("ring", N_AGENTS)
+    assert lyapunov.compressor_delta("none") == 0.0
+    assert lyapunov.compressor_delta("int8") == 0.0
+    assert lyapunov.compressor_delta("fp8") == 0.0
+    assert lyapunov.compressor_delta("topk:0.25") == pytest.approx(0.75)
+    assert lyapunov.compressor_delta("rank:32") == pytest.approx(0.75)
+    assert lyapunov.compressor_delta("rank:128") == 0.0
+
+    base = lyapunov.ef_compressed_consensus_bound(0.01, 1.0, topo)
+    for c in ("int8", "fp8"):
+        assert lyapunov.ef_compressed_consensus_bound(
+            0.01, 1.0, topo, compressor=c) == base
+    b_half = lyapunov.ef_compressed_consensus_bound(
+        0.01, 1.0, topo, compressor="topk:0.5")
+    b_cent = lyapunov.ef_compressed_consensus_bound(
+        0.01, 1.0, topo, compressor="topk:0.01")
+    assert base < b_half < b_cent
+    # the closed form: base x (1 + 2 delta / (1 - delta))
+    assert b_half == pytest.approx(base * (1.0 + 2.0 * 0.5 / 0.5))
+
+
+# -------------------------------------------------------------------------
+# sharded execution (subprocess, 8 host devices — see tests/test_sharded.py)
+# -------------------------------------------------------------------------
+
+
+def run_sub(code: str, timeout=560) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-4000:]}"
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.slow
+def test_sharded_compressed_overlap_carried_only_and_alias_parity():
+    """The sharded compressed path: (a) overlap + topk keeps EVERY ppermute
+    carried-only (the compressed exchange stays off the grad->update
+    critical path); (b) compressor="int8" == exchange="int8" bit-for-bit
+    on a model-sharded mesh; (c) compressed programs reject non-agent
+    sharding with an actionable error."""
+    res = run_sub(textwrap.dedent("""
+        import dataclasses, json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.core import engine
+        from repro.core.optim import make_optimizer
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch import steps as steps_lib
+        from repro.nn.param import init_params
+
+        cfg = dataclasses.replace(get_config("granite-3-8b").reduced(),
+                                  param_dtype="float32")
+        shape = InputShape("tiny_train", 16, 8, "train")
+        batch = {"inputs": jnp.ones((4, 2, 16), jnp.int32),
+                 "targets": jnp.ones((4, 2, 16), jnp.int32)}
+        out = {}
+
+        # (a) agent-only mesh: overlap+topk, all collectives carried-only
+        mesh = make_debug_mesh(4, 1)
+        b = steps_lib.build_train_step(
+            cfg, shape, mesh, make_optimizer("cdsgd", 0.005, fused=True),
+            mode="train", topology_name="ring", mixing="ppermute_fused",
+            schedule="overlap", error_feedback=True, compressor="topk:0.1")
+        params = init_params(b.param_template, jax.random.PRNGKey(0))
+        with mesh:
+            state = b.init_state(params)
+            out["topk_overlap"] = engine.exchange_dependency_report(
+                b.step_fn, params, state, batch)
+            p1, s1, m = jax.jit(b.step_fn)(params, state, batch)
+        out["topk_run"] = {
+            "finite": bool(all(jnp.all(jnp.isfinite(x)) for x in
+                               jax.tree.leaves(p1))),
+            "loss": float(m["loss"])}
+
+        # (b) int8 alias parity on a model-sharded 4x2 mesh, 3 steps
+        mesh2 = make_debug_mesh(4, 2)
+        outs = {}
+        for label, kw in (("exchange", dict(exchange="int8")),
+                          ("compressor", dict(compressor="int8"))):
+            b2 = steps_lib.build_train_step(
+                cfg, shape, mesh2, make_optimizer("cdsgd", 0.005, fused=True),
+                mode="train", topology_name="ring", mixing="ppermute_fused",
+                schedule="overlap", **kw)
+            p = init_params(b2.param_template, jax.random.PRNGKey(0))
+            with mesh2:
+                s = b2.init_state(p)
+                step = jax.jit(b2.step_fn)
+                for _ in range(3):
+                    p, s, _ = step(p, s, batch)
+            outs[label] = p
+        out["alias_bit_for_bit"] = bool(all(
+            bool(jnp.array_equal(a, bb)) for a, bb in
+            zip(jax.tree.leaves(outs["exchange"]),
+                jax.tree.leaves(outs["compressor"]))))
+
+        # (c) compressed + non-agent sharding: actionable config error
+        try:
+            steps_lib.build_train_step(
+                cfg, shape, mesh2, make_optimizer("cdsgd", 0.005, fused=True),
+                mode="train", topology_name="ring", mixing="ppermute_fused",
+                schedule="overlap", error_feedback=True,
+                compressor="topk:0.1")
+            out["reject"] = "NO ERROR"
+        except ValueError as e:
+            out["reject"] = str(e)
+        print("RESULT " + json.dumps(out))
+    """), timeout=840)
+    rep = res["topk_overlap"]
+    # 2 ring shifts x 3 TopKWire fields = 6 ppermutes, every one carried
+    assert rep["n_ppermutes"] == 6, rep
+    assert rep["n_ppermutes_carried_only"] == 6, rep
+    assert rep["n_ppermutes_fresh"] == 0, rep
+    assert rep["off_grad_update_critical_path"], rep
+    assert res["topk_run"]["finite"]
+    assert res["alias_bit_for_bit"]
+    assert res["reject"] != "NO ERROR"
+    assert "agent-only" in res["reject"] and "int8/fp8" in res["reject"]

@@ -216,7 +216,7 @@ def test_mixing_program_fault_axes():
 
     with pytest.raises(ValueError, match="staleness"):
         C.make_mixing_program(topo, staleness=0)
-    with pytest.raises(ValueError, match="error_feedback"):
+    with pytest.raises(ValueError, match="error.feedback"):
         C.make_mixing_program(topo, exchange="int8", error_feedback=True,
                               faults=f)
     with pytest.raises(ValueError, match="n_agents|agents"):

@@ -645,6 +645,40 @@ def test_wire_seed_matches_actual_quantize_stage():
                                               np.asarray(ss))
 
 
+def test_wire_seed_matches_actual_compress_stage():
+    """ISSUE-7 satellite: the top-k compressor draws the SAME wire_seed
+    streams as the dense int8 wire — the compact values are just a
+    smaller int8 payload, so the stride collision proof above covers the
+    compressor with no new index dimensions.  Ties the proof to the
+    running code the way test_wire_seed_matches_actual_quantize_stage
+    does for the dense stage: per-agent/bucket compressed payloads equal
+    topk_compress_2d at the composed seed, bit-for-bit."""
+    from repro.kernels.consensus_update import topk as tk
+    rng = np.random.default_rng(5)
+    bufs = [jnp.asarray(rng.standard_normal((N_AGENTS, 4, 128)), jnp.float32),
+            jnp.asarray(rng.standard_normal((N_AGENTS, 2, 128)), jnp.float32)]
+    step = 23
+    topo = make_topology("ring", N_AGENTS)
+    prog = C.make_mixing_program(topo, compressor="topk:0.25",
+                                 error_feedback=True)
+    wire, qw = C._compress_wire_stacked(bufs, jnp.int32(step), N_AGENTS,
+                                        prog, True, ())
+    assert qw == ()  # top-k is stateless beyond the EF residual
+    for bi, entry in enumerate(wire):
+        assert isinstance(entry, C.TopKWire)
+        k_rows = tk.topk_k_rows(bufs[bi].shape[-2], 0.25)
+        for j in range(N_AGENTS):
+            v, i, s = tk.topk_compress_2d(
+                bufs[bi][j], k_rows,
+                jnp.int32(C.wire_seed(step, j, bi, 0, 0)), interpret=True)
+            np.testing.assert_array_equal(np.asarray(entry.values[j]),
+                                          np.asarray(v))
+            np.testing.assert_array_equal(np.asarray(entry.indices[j]),
+                                          np.asarray(i))
+            np.testing.assert_array_equal(np.asarray(entry.scales[j]),
+                                          np.asarray(s))
+
+
 def test_wire_seed_ring_window_collision_free():
     """ISSUE-6 satellite: wire_seed composition at staleness depth S.
 
