@@ -48,9 +48,19 @@ analytic accounting; asserts topk:0.01 moves >= 25x fewer bytes per
 neighbor than the f32 wire at bounded 20-step drift, and that error
 feedback strictly beats no-EF top-k at equal density.
 
+``sparse_update`` compares the two operand forms of the fused update on
+a top-k wire at density p in {0.1, 0.01}: dense (``topk_decompress_2d``
+each neighbor, then the dense kernel — the ``sparse_update=False``
+reference) vs sparse (the compact ``TopKWire`` fields fed straight to
+the gather-dequant-accumulate kernel).  Reports measured kernel
+walltime plus the accounted HBM bytes from
+:func:`repro.analysis.roofline.consensus_update_cost`, and asserts the
+sparse form strictly cheaper in BOTH measures at p = 0.01 (the
+acceptance point is p <= 0.05).
+
 ``--smoke`` runs only the consensus-path benches (CI-friendly);
 ``--json-out FILE`` writes the records as a JSON file (the CI workflow
-publishes it as the ``BENCH_7.json`` artifact).
+publishes it as the ``BENCH_9.json`` artifact).
 """
 
 import argparse
@@ -620,6 +630,115 @@ def compressor_frontier(steps_timed: int = 3, drift_steps: int = 20):
     return row, rec
 
 
+def sparse_update(rows_n: int = 8192):
+    """The two operand forms of the fused update on a top-k wire.
+
+    One f32 bucket of ``rows_n`` lane rows, ring stencil S = 2 neighbors.
+    Per density p the SAME compressed payloads drive both paths:
+
+    * dense reference (``sparse_update=False``): ``topk_decompress_2d``
+      each neighbor into a dense f32 bucket, then the dense kernel reads
+      ``rows * 128`` elements per neighbor;
+    * sparse (``sparse_update=True`` default): the compact int8 values /
+      int32 indices / row scales feed ``cdsgd_update_sparse_2d`` directly
+      — ``k_rows * 128`` elements per neighbor.
+
+    Walltime is interpret-mode (not hardware-representative); the number
+    that transfers is the accounted HBM byte ratio from
+    ``consensus_update_cost`` (the kernels are memory-bound).  Asserts
+    sparse strictly cheaper in BOTH measures at p = 0.01.
+    """
+    from repro.analysis.roofline import consensus_update_cost
+    from repro.kernels.consensus_update import topk as tk
+    from repro.kernels.consensus_update.consensus_update import (
+        cdsgd_update_sparse_2d,
+    )
+
+    key = jax.random.PRNGKey(0)
+    topo = make_topology("ring", 4)
+    n_nbr = topo.degree()                         # 2
+    slf = jax.random.normal(key, (rows_n, 128), jnp.float32)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (rows_n, 128),
+                          jnp.float32)
+    w = jnp.array([1 / 3, 1 / 3, 1 / 3], jnp.float32)   # [self, nbr, nbr]
+    spec = flatbuf.make_flat_spec(
+        {"w": jax.ShapeDtypeStruct((rows_n * 128,), jnp.float32)})
+
+    per_p, us = {}, {}
+    for p in (0.1, 0.01):
+        k_rows = tk.topk_k_rows(rows_n, p)
+        wires = [tk.topk_compress_2d(
+            jax.random.normal(jax.random.fold_in(key, 10 + i),
+                              (rows_n, 128), jnp.float32),
+            k_rows, jnp.int32(i), interpret=True) for i in range(n_nbr)]
+        vals = jnp.stack([v for v, _, _ in wires])
+        idx = jnp.stack([i for _, i, _ in wires])
+        scs = jnp.stack([s for _, _, s in wires])
+
+        # single grid step for both forms: the comparison isolates the
+        # operand form, not the block schedule
+        def dense_fn(vals, idx, scs, slf, g):
+            # the sparse_update=False reference: decompress to dense f32,
+            # unit row scales, self separate at weights[0]
+            nb = jnp.stack([tk.topk_decompress_2d(vals[i], idx[i], scs[i],
+                                                  rows_n)
+                            for i in range(n_nbr)])
+            unit = jnp.ones((n_nbr, rows_n, 1), jnp.float32)
+            return cdsgd_update_2d(nb, w, g, 0.05, scales=unit,
+                                   self_buf=slf, block_rows=rows_n,
+                                   interpret=True)
+
+        def sparse_fn(vals, idx, scs, slf, g):
+            return cdsgd_update_sparse_2d(vals, idx, scs, w, g, 0.05,
+                                          self_buf=slf, block_rows=rows_n,
+                                          interpret=True)
+
+        t_dense = _time(jax.jit(dense_fn), vals, idx, scs, slf, g)
+        t_sparse = _time(jax.jit(sparse_fn), vals, idx, scs, slf, g)
+        # parity while we're here: same payloads, same answer (FMA
+        # contraction of the dense accumulate is the only divergence)
+        d = float(jnp.max(jnp.abs(
+            jax.jit(dense_fn)(vals, idx, scs, slf, g)
+            - jax.jit(sparse_fn)(vals, idx, scs, slf, g))))
+        assert d < 1e-5, d
+
+        prog = consensus_lib.make_mixing_program(
+            topo, compressor=f"topk:{p}", error_feedback=True)
+        cost = consensus_update_cost(spec, prog, n_nbr)
+        per_p[str(p)] = {
+            "k_rows": k_rows,
+            "us_per_call_interp": {"dense": round(t_dense, 1),
+                                   "sparse": round(t_sparse, 1)},
+            "walltime_ratio_dense_over_sparse": round(t_dense / t_sparse, 2),
+            "hbm_bytes": {"dense": cost["dense_bytes"],
+                          "sparse": cost["sparse_bytes"]},
+            "hbm_bytes_ratio": round(cost["bytes_ratio"], 2),
+            "flops_ratio": round(cost["flops_ratio"], 2),
+            "max_abs_diff_dense_vs_sparse": d,
+        }
+        us[p] = (t_dense, t_sparse)
+
+    # the acceptance point: at p <= 0.05 sparse is strictly cheaper in
+    # measured walltime AND accounted HBM bytes
+    t_dense, t_sparse = us[0.01]
+    assert t_sparse < t_dense, (t_sparse, t_dense)
+    assert (per_p["0.01"]["hbm_bytes"]["sparse"]
+            < per_p["0.01"]["hbm_bytes"]["dense"]), per_p["0.01"]
+
+    rec = {
+        "bench": "consensus/sparse_update",
+        "model": f"{rows_n * 128 // 1000}k f32 bucket, ring deg 2, CDSGD",
+        "per_density": per_p,
+        "sparse_strictly_cheaper_at_p001": True,
+    }
+    row = ("kernel/sparse_update", us[0.01][1],
+           f"dense_us={us[0.01][0]:.0f}@p=0.01;"
+           f"hbm sparse/dense="
+           f"{per_p['0.01']['hbm_bytes']['sparse'] / per_p['0.01']['hbm_bytes']['dense']:.3f};"
+           f"walltime_ratio={per_p['0.01']['walltime_ratio_dense_over_sparse']}x")
+    return row, rec
+
+
 def run(smoke: bool = False, json_out: str = None):
     key = jax.random.PRNGKey(0)
     rows = []
@@ -672,8 +791,9 @@ def run(smoke: bool = False, json_out: str = None):
     # + staleness-ring wire accounting (bytes independent of S) and
     #   drift-vs-S under an injected straggler+drop schedule
     # + compressor bytes-vs-drift frontier (topk/rank EF rail)
+    # + sparse vs dense operand form of the fused update on the top-k wire
     for fn in (exchange_wire, alias_accounting, schedule_overlap, multi_round,
-               momentum_mix, stale_ring, compressor_frontier):
+               momentum_mix, stale_ring, compressor_frontier, sparse_update):
         row, rec = fn()
         rows.append(row)
         records.append(rec)

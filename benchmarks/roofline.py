@@ -4,6 +4,13 @@ Prints one CSV row per (arch, shape, mesh): the three terms in seconds,
 the dominant bottleneck, and the MODEL_FLOPS / HLO_FLOPs utilization
 ratio.  Also emits a markdown table to results/roofline.md for
 EXPERIMENTS.md inclusion.
+
+Records carrying an ``update_cost`` block (dry-runs with a top-k
+compressor — see ``repro.analysis.roofline.consensus_update_cost``) get
+one extra ``roofline/update_cost`` row pricing the fused consensus
+update's two operand forms: dense (decompress-then-update) vs sparse
+(gather-dequant-accumulate on the compact wire), bytes and FLOPs per
+step from the FlatSpec bucket geometry.
 """
 
 import glob
@@ -46,6 +53,16 @@ def run(mesh_filter: str = "16x16"):
         md.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rl['compute_s']:.3e} "
                   f"| {rl['memory_s']:.3e} | {rl['collective_s']:.3e} | **{rl['dominant']}** "
                   f"| {ratio_s} | {r['fits_v5e_16gb']} |")
+        uc = r.get("update_cost")
+        if uc:
+            rows.append((
+                f"roofline/update_cost/{r['arch']}__{r['shape']}__{r['mesh']}",
+                f"sparse_update={uc['sparse_update']};"
+                f"dense_bytes={uc['dense_bytes']};"
+                f"sparse_bytes={uc['sparse_bytes']};"
+                f"bytes_ratio={uc['bytes_ratio']:.2f};"
+                f"flops_ratio={uc['flops_ratio']:.2f};"
+                f"n_buckets={len(uc['per_bucket'])}"))
     t0 = time.time()
     for name, derived in rows:
         print(f"{name},{1e6*(time.time()-t0):.1f},{derived}")

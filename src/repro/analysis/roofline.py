@@ -115,6 +115,68 @@ def roofline_from_stats(
     )
 
 
+def consensus_update_cost(spec, program, n_neighbors: int) -> Dict:
+    """Analytic HBM bytes + FLOPs of the fused consensus update per step.
+
+    Prices BOTH operand forms of the top-k wire (``compressor="topk:..."``)
+    from the :class:`repro.core.flatbuf.FlatSpec` bucket geometry, per
+    agent per step, so the ``consensus/sparse_update`` microbench has a
+    model to compare its measured walltime ratio against:
+
+    * **dense** (decompress-then-update reference): per neighbor the
+      compact wire is read (``k_rows`` lane rows), a dense f32 bucket is
+      written by the decompress and read back by the kernel —
+      ``2 * 4 * rows * 128`` bytes of dense traffic per neighbor;
+    * **sparse** (``sparse_update=True``): the kernel reads the compact
+      fields directly — no dense neighbor traffic at all.
+
+    Both forms share the self read, grad read, and output write at native
+    bucket precision.  FLOPs count dequant + weight-multiply + accumulate
+    per touched element (``O(rows)`` dense vs ``O(k_rows)`` sparse per
+    neighbor).  Returns per-bucket rows plus the dense/sparse totals and
+    their ratios.
+    """
+    from repro.kernels.consensus_update import topk as tk
+
+    kind, param = program.compressor_kind, program.compressor_param
+    if kind != "topk":
+        raise ValueError(
+            f"consensus_update_cost prices the top-k operand forms; program "
+            f"has compressor={program.compressor!r}")
+    rows_list = [b.rows for b in spec.buckets]
+    k_list = tk.topk_k_rows_for(rows_list, param)
+    per_bucket = []
+    for b, k_rows in zip(spec.buckets, k_list):
+        itemsize = b.bytes // b.n_padded
+        elems = b.n_padded                       # rows * 128
+        k_elems = k_rows * 128
+        compact = k_rows * tk.TOPK_LANE_ROW_BYTES
+        common = 3 * elems * itemsize            # self + grad reads, out write
+        dense_b = common + n_neighbors * (compact + 2 * 4 * elems)
+        sparse_b = common + n_neighbors * compact
+        dense_f = 3 * elems + n_neighbors * (3 * elems + 2 * k_elems)
+        sparse_f = 3 * elems + n_neighbors * 3 * k_elems
+        per_bucket.append({
+            "rows": b.rows, "k_rows": k_rows,
+            "dense_bytes": dense_b, "sparse_bytes": sparse_b,
+            "dense_flops": dense_f, "sparse_flops": sparse_f,
+        })
+    tot = lambda key: sum(pb[key] for pb in per_bucket)
+    out = {
+        "n_neighbors": n_neighbors,
+        "per_bucket": per_bucket,
+        "dense_bytes": tot("dense_bytes"),
+        "sparse_bytes": tot("sparse_bytes"),
+        "dense_flops": tot("dense_flops"),
+        "sparse_flops": tot("sparse_flops"),
+    }
+    out["bytes_ratio"] = (out["dense_bytes"] / out["sparse_bytes"]
+                          if out["sparse_bytes"] else float("nan"))
+    out["flops_ratio"] = (out["dense_flops"] / out["sparse_flops"]
+                          if out["sparse_flops"] else float("nan"))
+    return out
+
+
 def model_flops(cfg, shape) -> float:
     """Analytic MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D_new for
     decode (one token per request), 2*N_active*D for prefill."""

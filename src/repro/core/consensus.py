@@ -78,6 +78,9 @@ def parse_compressor(spec: str):
 
     ``param`` is the float density ``p in (0, 1]`` for ``topk``, the int
     rank ``r >= 1`` for ``rank``, and ``None`` for the dense kinds.
+    ``"topk:auto:B"`` selects adaptive per-bucket density against a total
+    byte budget ``B`` per neighbor (``param = ("auto", B)``; see
+    :func:`repro.kernels.consensus_update.topk.topk_auto_k_rows`).
     Raises an actionable ``ValueError`` on malformed specs — this is the
     single parser behind ``--compressor`` and ``make_mixing_program``.
     """
@@ -102,11 +105,24 @@ def parse_compressor(spec: str):
                if kind == "topk" else
                "'rank:r' with int rank r >= 1 (e.g. 'rank:4')"))
     if kind == "topk":
+        if arg.startswith("auto:") or arg == "auto":
+            _, _, barg = arg.partition(":")
+            try:
+                budget = int(barg)
+            except ValueError:
+                raise ValueError(
+                    f"topk:auto needs an int byte budget per neighbor, got "
+                    f"{barg!r} in {spec!r} (e.g. 'topk:auto:65536')") from None
+            if budget < 1:
+                raise ValueError(f"topk:auto byte budget must be >= 1, got "
+                                 f"{budget} in {spec!r}")
+            return kind, ("auto", budget)
         try:
             p = float(arg)
         except ValueError:
             raise ValueError(f"top-k density must be a float, got {arg!r} "
-                             f"in {spec!r}") from None
+                             f"in {spec!r}; for adaptive per-bucket density "
+                             f"use 'topk:auto:B' with a byte budget") from None
         if not (0.0 < p <= 1.0):
             raise ValueError(f"top-k density must be in (0, 1], got {p!r} "
                              f"in {spec!r}")
@@ -186,6 +202,13 @@ class MixingProgram:
     # "topk:p" | "rank:r" (biased EF-rail compressors; require
     # error_feedback=True, validated in make_mixing_program)
     compressor: str = "none"
+    # sparse operand form of the fused update: with the top-k wire the
+    # *_update_sparse_2d kernels consume the TopKWire fields directly
+    # (scatter-accumulate, O(k_rows) neighbor reads) instead of
+    # densifying via _decompress_entry first (O(rows)).  Default on for
+    # topk (resolved in make_mixing_program); False keeps the dense
+    # decompress path as the reference oracle.
+    sparse_update: bool = False
 
     @property
     def fault_tolerant(self) -> bool:
@@ -235,6 +258,7 @@ class MixingProgram:
             "staleness": self.staleness,
             "faults": self.faults.describe() if self.faults else None,
             "compressor": self.compressor,
+            "sparse_update": self.sparse_update,
         }
 
 
@@ -249,6 +273,7 @@ def make_mixing_program(
     staleness: int = 1,
     faults: Optional[FaultSchedule] = None,
     compressor: str = "none",
+    sparse_update: Optional[bool] = None,
 ) -> MixingProgram:
     """Validate + build a :class:`MixingProgram` at config time.
 
@@ -264,9 +289,24 @@ def make_mixing_program(
     exclude staleness/faults, inner rounds, and momentum mixing — each
     rejection below names the conflicting flags and the supported
     alternative.
+
+    ``sparse_update=None`` resolves to True exactly for the top-k
+    compressor (the sparse operand form of the fused update, see
+    :class:`MixingProgram`); pass ``False`` to force the dense
+    decompress-then-update reference path.  Explicit ``True`` with any
+    other compressor is rejected — only the top-k wire has the compact
+    scatter operand form.
     """
     _check_exchange(exchange)
     ckind, _cparam = parse_compressor(compressor)
+    if sparse_update is None:
+        sparse_update = ckind == "topk"
+    elif sparse_update and ckind != "topk":
+        raise ValueError(
+            f"sparse_update=True needs --compressor topk:p / topk:auto:B "
+            f"(got {compressor!r}): only the top-k wire has the compact "
+            "gather-dequant-accumulate operand form — drop sparse_update "
+            "or switch to a top-k compressor")
     if ckind in ("int8", "fp8"):
         if exchange not in ("f32", ckind):
             raise ValueError(
@@ -376,7 +416,7 @@ def make_mixing_program(
                          error_feedback=error_feedback, exchange=exchange,
                          momentum_mixing=momentum_mixing,
                          staleness=staleness, faults=faults,
-                         compressor=compressor)
+                         compressor=compressor, sparse_update=sparse_update)
 
 
 # --------------------------------------------------------------------------
@@ -653,8 +693,8 @@ def _compress_wire_stacked(bufs, seed, n: int, program: MixingProgram,
         base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32)
         agent_seeds = _SEED_AGENT_STRIDE * jnp.arange(n, dtype=jnp.int32)
         out = []
-        for bi, b in enumerate(bufs):
-            k_rows = tk.topk_k_rows(b.shape[-2], param)
+        k_list = tk.topk_k_rows_for([b.shape[-2] for b in bufs], param)
+        for bi, (b, k_rows) in enumerate(zip(bufs, k_list)):
             v, i, s = jax.vmap(
                 lambda x, sd: tk.topk_compress_2d(x, k_rows, sd,
                                                   interpret=interpret)
@@ -1214,7 +1254,15 @@ def stacked_flat_comm(topology: Topology, *, interpret: bool = True,
             w = jnp.take(pi_q_stack, t, axis=0)
         nbrs, scs = [], []
         for bi, e in enumerate(wire):
-            if _is_compressed_entry(e):
+            if isinstance(e, TopKWire) and program.sparse_update:
+                # sparse operand form: hand the compact wire fields to the
+                # *_update_sparse_2d kernels untouched — no dense
+                # decompressed stack is ever materialized.  scales ride
+                # inside the SparseNeighbors tuple (scs entry None).
+                from repro.kernels.consensus_update.ops import SparseNeighbors
+                nbrs.append(SparseNeighbors(e.values, e.indices, e.scales))
+                scs.append(None)
+            elif _is_compressed_entry(e):
                 d = _decompress_entry(e, _rows_of(bi))
                 nbrs.append(d)
                 scs.append(jnp.ones(d.shape[:-1] + (1,), jnp.float32))
@@ -1424,8 +1472,8 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
             base = _SEED_STEP_STRIDE * jnp.asarray(seed, jnp.int32) \
                 + _SEED_AGENT_STRIDE * _agent_index()
             out = []
-            for bi, b in enumerate(bufs):
-                k_rows = tk.topk_k_rows(b.shape[-2], param)
+            k_list = tk.topk_k_rows_for([b.shape[-2] for b in bufs], param)
+            for bi, (b, k_rows) in enumerate(zip(bufs, k_list)):
                 v, i, s = tk.topk_compress_2d(
                     b.astype(jnp.float32), k_rows,
                     base + _SEED_BUCKET_STRIDE * bi, interpret=interpret)
@@ -1488,8 +1536,31 @@ def sharded_flat_comm(factors: Sequence[Tuple[str, Topology]], *,
         wm = entry_wire[entry_idx]
 
         def branch(wire):
+            from repro.kernels.consensus_update.ops import SparseNeighbors
+
             nbrs, scs = [], []
             for bi, e in enumerate(wire):
+                if isinstance(e, TopKWire) and program.sparse_update:
+                    # sparse operand form: the ppermuted compact fields
+                    # feed the *_update_sparse_2d kernels unchanged; an
+                    # absent union slot ships all-zero values (dequant 0.0
+                    # — and its weight is zero in this entry's row anyway)
+                    local = jax.tree.map(
+                        lambda a: a.reshape(a.shape[lead:]), e)
+                    slots = []
+                    for k in union_keys:
+                        if k in wm:
+                            per_axis, combo, _w = wm[k]
+                            slots.append(jax.tree.map(
+                                lambda a: _shift_all(a, per_axis, combo),
+                                local))
+                        else:
+                            slots.append(jax.tree.map(jnp.zeros_like, local))
+                    nbrs.append(SparseNeighbors(
+                        *(jnp.stack([getattr(s, f) for s in slots])
+                          for f in SparseNeighbors._fields)))
+                    scs.append(None)
+                    continue
                 if _is_compressed_entry(e):
                     rows = _rows_of(bi)
                     local = jax.tree.map(
@@ -1965,9 +2036,9 @@ def program_bytes_per_neighbor(spec: "flatbuf.FlatSpec",
 
     total = 0
     if kind == "topk":
-        for b in spec.buckets:
-            k_rows = tk.topk_k_rows(b.rows, param)
-            total += k_rows * flatbuf.LANE * (1 + 4) + k_rows * 4
+        k_list = tk.topk_k_rows_for([b.rows for b in spec.buckets], param)
+        for k_rows in k_list:
+            total += k_rows * tk.TOPK_LANE_ROW_BYTES
     else:
         assert kind == "rank", kind
         r = int(param)
@@ -2048,17 +2119,28 @@ def describe_exchange_cost(params: PyTree, topology,
                            program: Optional[MixingProgram] = None) -> str:
     """One-line human-readable :func:`exchange_bytes_per_step` report
     (shared by the train/dryrun CLIs and the examples)."""
-    wire = exchange_bytes_per_step(
-        flatbuf.make_flat_spec(params, lead=lead), topology, exchange, rounds,
-        payloads, program=program)
+    spec = flatbuf.make_flat_spec(params, lead=lead)
+    wire = exchange_bytes_per_step(spec, topology, exchange, rounds,
+                                   payloads, program=program)
     per_round = "" if rounds == 1 else f" x {rounds} rounds"
     per_payload = "" if payloads == 1 else f" ({payloads} payload trees)"
+    auto = ""
+    if program is not None and program.compressor_kind == "topk" \
+            and isinstance(program.compressor_param, tuple):
+        # topk:auto:B — surface the per-bucket densities the budget
+        # solver actually chose (not the nominal spec string)
+        from repro.kernels.consensus_update import topk as tk
+
+        rows_list = [b.rows for b in spec.buckets]
+        k_list = tk.topk_k_rows_for(rows_list, program.compressor_param)
+        dens = ", ".join(f"{k / r:.3g}" for k, r in zip(k_list, rows_list))
+        auto = f"; auto per-bucket p=[{dens}]"
     # the dict relabels compressed wires by their compressor (topk:p/rank:r)
     return (f"exchange={wire['exchange']}: "
             f"{wire['per_step_bytes']:,} bytes/agent/step "
             f"on the wire ({wire['degree']:g} neighbors x "
             f"{wire['per_neighbor_bytes']:,} B{per_round}{per_payload}; native "
-            f"{wire['native_per_step_bytes']:,} B)")
+            f"{wire['native_per_step_bytes']:,} B){auto}")
 
 
 # --------------------------------------------------------------------------

@@ -147,6 +147,14 @@ class ExchangeResult:
     weight against — the freshly packed momentum (single round) or the
     round-``k-1`` partially mixed buffer (multi-round), exactly mirroring
     ``selfs``.
+
+    Sparse operand variant (``MixingProgram.sparse_update`` with the top-k
+    compressor): a bucket's ``neighbors`` entry is a
+    :class:`repro.kernels.consensus_update.ops.SparseNeighbors` tuple (the
+    raw ``TopKWire`` compact fields) and its ``scales`` entry is ``None``
+    — the per-compact-row scales ride inside the tuple and the fused
+    kernels scatter-accumulate straight from the wire instead of reading
+    a dense decompressed stack.
     """
 
     spec: Any                     # flatbuf.FlatSpec of the param pytree
@@ -392,8 +400,11 @@ class CDMSGDNesterov(CDMSGD):
 
     def init_inner(self, params):
         if self.fused:
-            # lookahead_0 = x_0 + mu * 0 = x_0
-            return (tree_zeros_like(params), params)
+            # lookahead_0 = x_0 + mu * 0 = x_0 — copied, NOT aliased: the
+            # trainer donates params and optimizer state to the jitted
+            # step, and donating the same buffer through both arguments is
+            # a runtime error on the very first step
+            return (tree_zeros_like(params), jax.tree.map(jnp.copy, params))
         return tree_zeros_like(params)
 
     def inner_specs(self, param_specs):

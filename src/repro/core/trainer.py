@@ -106,7 +106,11 @@ class CollaborativeTrainer:
     ``"fp8"`` alias the exchange precisions; ``"topk:p"`` / ``"rank:r"``
     are the biased sparse / low-rank compressors riding the EF rail —
     they require ``error_feedback=True`` and normalize ``exchange``
-    themselves).  Everything validates at construction; non-trivial
+    themselves; ``"topk:auto:B"`` picks per-bucket densities against a
+    byte budget).  With a top-k compressor ``sparse_update`` (default on)
+    feeds the compact wire fields straight to the fused sparse kernels —
+    ``sparse_update=False`` forces the dense decompress-then-update
+    reference path.  Everything validates at construction; non-trivial
     programs require a ``fused=True`` consensus optimizer.
     """
 
@@ -131,6 +135,7 @@ class CollaborativeTrainer:
         staleness: int = 1,
         fault_schedule=None,              # FaultSchedule | spec str (faults.py)
         compressor: str = "none",
+        sparse_update: Optional[bool] = None,
     ):
         self.loss_fn = loss_fn
         self.topology = topology
@@ -161,7 +166,7 @@ class CollaborativeTrainer:
             error_feedback=error_feedback, exchange=exchange,
             momentum_mixing=momentum_mixing,
             staleness=staleness, faults=fault_schedule,
-            compressor=compressor)
+            compressor=compressor, sparse_update=sparse_update)
         self.exchange = exchange = self.program.exchange
         self.faults = self.program.faults
         self.comm: CommOps = stacked_comm_ops(topology, interpret=interpret,

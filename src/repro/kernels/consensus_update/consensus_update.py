@@ -34,6 +34,29 @@ stays centered — via ``pltpu.prng_random_bits`` on TPU and a
 ``jax.random``-based fallback under interpret mode (the TPU PRNG
 primitives have no CPU lowering).
 
+Sparse (top-k wire) operand form
+--------------------------------
+The neighbor stack may also arrive **top-k compressed** — the
+:class:`repro.core.consensus.TopKWire` compact fields (int8 ``values
+(S, k_rows, 128)``, int32 flat ``indices (S, k_rows, 128)``, f32 ``scales
+(S, k_rows, 1)``) — consumed directly by the ``*_update_sparse_2d`` entry
+points: the kernel scatter-accumulates ``w[s+1] * scale * dequant(value)``
+into the self-separated f32 accumulator, so the neighbor mix reads
+``k_rows * 128`` elements per neighbor instead of ``rows * 128`` and the
+dense decompressed buffer is never materialized in HBM.  The compact
+operands stay resident across the row-block grid (constant index_map);
+each grid step masks the flat indices into its own block's element range
+``[row0 * 128, (row0 + block_rows) * 128)`` using a per-block ``row0``
+OPERAND — like the quantize seeds, ``pl.program_id`` would silently
+re-bind under the stacked mode's vmap over agents.  The in-kernel scatter
+is a value-level ``.at[].add`` on the flattened VMEM tile (exact under
+interpret mode; a compiled TPU lowering routes it through Mosaic's
+scatter support or falls back to XLA outside the kernel — this container
+runs interpret).  The dense gather-dequant path
+(:func:`repro.kernels.consensus_update.topk.topk_decompress_2d` + the
+dense kernels) stays exported as the reference oracle; the two paths
+agree bit-for-bit at f32 accumulation (tested).
+
 In-place updates
 ----------------
 Every fused kernel threads ``input_output_aliases``: the gradient operand
@@ -193,6 +216,32 @@ def _mix_stencil(w_ref, nbrs_ref, scales_ref, self_ref, n_stencil: int, shape):
     return acc
 
 
+def _sparse_stencil(w_ref, row0_ref, vals_ref, idx_ref, sc_ref, self_ref,
+                    n_stencil: int, shape):
+    """f32 mixing accumulation over top-k compact neighbor payloads.
+
+    The self tile stays dense at ``weights[0]`` exactly like the quantized
+    form; each neighbor contributes ``w[s+1] * scale * dequant(value)``
+    scatter-accumulated at its flat dense indices.  ``row0_ref`` holds this
+    grid step's first dense row (a per-block operand, NOT ``program_id`` —
+    see the quantize-seed comment above): indices outside the block's
+    element range are masked to contribute 0.0 at position 0, so a compact
+    element lands in exactly one grid step.  Per element the accumulation
+    order matches the dense oracle (stencil-major, f32), so the two forms
+    agree bit-for-bit.
+    """
+    block_elems = shape[0] * shape[1]
+    acc = (w_ref[0] * self_ref[...].astype(jnp.float32)).reshape(block_elems)
+    base = row0_ref[0] * LANE
+    for s in range(n_stencil):
+        deq = vals_ref[s].astype(jnp.float32) * sc_ref[s]   # (k_rows, 128)
+        li = idx_ref[s].reshape(-1) - base
+        ok = (li >= 0) & (li < block_elems)
+        contrib = jnp.where(ok, w_ref[s + 1] * deq.reshape(-1), 0.0)
+        acc = acc.at[jnp.where(ok, li, 0)].add(contrib)
+    return acc.reshape(shape)
+
+
 def _cdsgd_body(w_ref, alpha_ref, nbrs_ref, scales_ref, self_ref, grad_ref,
                 out_ref, *, n_stencil: int):
     acc = _mix_stencil(w_ref, nbrs_ref, scales_ref, self_ref, n_stencil,
@@ -339,6 +388,46 @@ def _cdadam_kernel_qm(w, scal, slf, nbrs, scales, mnbrs, mscales, grad, m, v,
     nv[...] = new_v.astype(nv.dtype)
 
 
+def _cdsgd_kernel_s(w, a, row0, slf, vals, idx, sc, grad, out, *, n_stencil):
+    acc = _sparse_stencil(w, row0, vals, idx, sc, slf, n_stencil, out.shape)
+    acc -= a[0] * grad[...].astype(jnp.float32)
+    out[...] = acc.astype(out.dtype)
+
+
+def _cdmsgd_kernel_s(w, a, m, row0, slf, vals, idx, sc, grad, mom, out, nmom,
+                     *, n_stencil):
+    v = m[0] * mom[...].astype(jnp.float32) \
+        - a[0] * grad[...].astype(jnp.float32)
+    acc = _sparse_stencil(w, row0, vals, idx, sc, slf, n_stencil, out.shape)
+    out[...] = (acc + v).astype(out.dtype)
+    nmom[...] = v.astype(nmom.dtype)
+
+
+def _cdmsgd_nesterov_kernel_s(w, a, m, row0, slf, vals, idx, sc, grad, mom,
+                              out, nmom, look, *, n_stencil):
+    mu = m[0]
+    v = mu * mom[...].astype(jnp.float32) \
+        - a[0] * grad[...].astype(jnp.float32)
+    acc = _sparse_stencil(w, row0, vals, idx, sc, slf, n_stencil, out.shape)
+    x = acc + v
+    out[...] = x.astype(out.dtype)
+    nmom[...] = v.astype(nmom.dtype)
+    look[...] = (x + mu * v).astype(look.dtype)
+
+
+def _cdadam_kernel_s(w, scal, row0, slf, vals, idx, sc, grad, m, v, out, nm,
+                     nv, *, n_stencil):
+    alpha, b1, b2, eps, bc1, bc2 = (scal[i] for i in range(6))
+    g = grad[...].astype(jnp.float32)
+    new_m = b1 * m[...].astype(jnp.float32) + (1.0 - b1) * g
+    new_v = b2 * v[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    acc = _sparse_stencil(w, row0, vals, idx, sc, slf, n_stencil, out.shape)
+    step_dir = (new_m / bc1) / (jnp.sqrt(new_v / bc2) + eps)
+    out[...] = (acc - alpha * step_dir).astype(out.dtype)
+    nm[...] = new_m.astype(nm.dtype)
+    nv[...] = new_v.astype(nv.dtype)
+
+
 def _grid_and_specs(rows: int, block_rows: int, n_stencil: int):
     grid = (pl.cdiv(rows, block_rows),)
     nbr_spec = pl.BlockSpec((n_stencil, block_rows, LANE), lambda i: (0, i, 0))
@@ -379,6 +468,220 @@ def _mix_operands(quantized, s, nbr_spec, scale_spec, mat_spec,
     assert self_buf is not None and scales.shape[0] == s
     return ([mat_spec, nbr_spec, scale_spec],
             [self_buf, neighbors, scales], s + 1)
+
+
+def _sparse_operands(values, indices, scales, self_buf, grad,
+                     block_rows: int):
+    """Shared setup of the ``*_update_sparse_2d`` entry points.
+
+    Validates the compact-field shapes, builds the grid over the DENSE row
+    blocks (the outputs/self/grad are dense — only the neighbor operands
+    shrink), and returns ``(grid, mat_spec, sparse_specs, sparse_args,
+    s)``: the compact stacks get whole-array BlockSpecs (constant
+    index_map — they stay resident across grid steps) and the per-block
+    ``row0`` operand tells each step which dense element range it owns.
+    """
+    s, k_rows, lane = values.shape
+    assert lane == LANE, values.shape
+    assert indices.shape == (s, k_rows, LANE), (indices.shape, values.shape)
+    assert scales.shape == (s, k_rows, 1), (scales.shape, values.shape)
+    assert self_buf is not None, "sparse operand form needs the self buffer"
+    rows, lane2 = self_buf.shape
+    assert lane2 == LANE and grad.shape == (rows, LANE)
+    assert k_rows <= rows, (k_rows, rows)
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    mat_spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    row0s = block_rows * jnp.arange(grid[0], dtype=jnp.int32)
+    sparse_specs = [
+        pl.BlockSpec((1,), lambda i: (i,)),                    # row0
+        mat_spec,                                              # self tile
+        pl.BlockSpec((s, k_rows, LANE), lambda i: (0, 0, 0)),  # values
+        pl.BlockSpec((s, k_rows, LANE), lambda i: (0, 0, 0)),  # indices
+        pl.BlockSpec((s, k_rows, 1), lambda i: (0, 0, 0)),     # scales
+    ]
+    sparse_args = [row0s, self_buf, values, indices.astype(jnp.int32), scales]
+    return grid, mat_spec, sparse_specs, sparse_args, s
+
+
+def cdsgd_update_sparse_2d(
+    values: jnp.ndarray,          # (S, k_rows, 128) int8 compact values
+    indices: jnp.ndarray,         # (S, k_rows, 128) int32 flat dense indices
+    scales: jnp.ndarray,          # (S, k_rows, 1) f32 per-compact-row scales
+    weights: jnp.ndarray,         # (S+1,) f32 self-separated weights
+    grad: jnp.ndarray,            # (rows, 128) — donated to out
+    alpha,
+    *,
+    self_buf: jnp.ndarray,        # (rows, 128) native self tile
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    alias: bool = True,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """CDSGD update consuming the top-k wire directly (see module docs)."""
+    grid, mat_spec, sp_specs, sp_args, s = _sparse_operands(
+        values, indices, scales, self_buf, grad, block_rows)
+    assert weights.shape == (s + 1,), (weights.shape, s)
+    kernel = functools.partial(_cdsgd_kernel_s, n_stencil=s)
+    in_specs = [
+        pl.BlockSpec((s + 1,), lambda i: (0,)),    # weights
+        pl.BlockSpec((1,), lambda i: (0,)),        # alpha
+        *sp_specs,
+        mat_spec,                                  # grad
+    ]
+    args = [weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
+            *sp_args, grad]
+    grad_idx = len(args) - 1
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=mat_spec,
+        out_shape=jax.ShapeDtypeStruct(grad.shape, grad.dtype),
+        input_output_aliases=_aliases(alias, ((grad_idx, 0),)),
+        interpret=interpret,
+    )(*args)
+
+
+def cdmsgd_update_sparse_2d(
+    values: jnp.ndarray,
+    indices: jnp.ndarray,
+    scales: jnp.ndarray,
+    weights: jnp.ndarray,         # (S+1,)
+    grad: jnp.ndarray,            # donated to params out
+    momentum: jnp.ndarray,        # donated to new momentum
+    alpha,
+    mu,
+    *,
+    self_buf: jnp.ndarray,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    alias: bool = True,
+    interpret: bool = False,
+):
+    """CDMSGD update on the sparse operand form (local momentum only — the
+    top-k programs exclude ``momentum_mixing`` at config time)."""
+    grid, mat_spec, sp_specs, sp_args, s = _sparse_operands(
+        values, indices, scales, self_buf, grad, block_rows)
+    assert weights.shape == (s + 1,), (weights.shape, s)
+    kernel = functools.partial(_cdmsgd_kernel_s, n_stencil=s)
+    in_specs = [
+        pl.BlockSpec((s + 1,), lambda i: (0,)),    # weights
+        pl.BlockSpec((1,), lambda i: (0,)),        # alpha
+        pl.BlockSpec((1,), lambda i: (0,)),        # mu
+        *sp_specs,
+        mat_spec, mat_spec,                        # grad, momentum
+    ]
+    args = [weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
+            jnp.asarray([mu], jnp.float32), *sp_args, grad, momentum]
+    g_idx = len(args) - 2
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(mat_spec, mat_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(grad.shape, grad.dtype),
+            jax.ShapeDtypeStruct(momentum.shape, momentum.dtype),
+        ),
+        input_output_aliases=_aliases(alias, ((g_idx, 0), (g_idx + 1, 1))),
+        interpret=interpret,
+    )(*args)
+
+
+def cdmsgd_nesterov_update_sparse_2d(
+    values: jnp.ndarray,
+    indices: jnp.ndarray,
+    scales: jnp.ndarray,
+    weights: jnp.ndarray,
+    grad: jnp.ndarray,
+    momentum: jnp.ndarray,
+    alpha,
+    mu,
+    *,
+    self_buf: jnp.ndarray,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    alias: bool = True,
+    interpret: bool = False,
+):
+    """Returns ``(x', v', x' + mu v')`` like the dense Nesterov form, with
+    the neighbor mix on the sparse operands."""
+    grid, mat_spec, sp_specs, sp_args, s = _sparse_operands(
+        values, indices, scales, self_buf, grad, block_rows)
+    assert weights.shape == (s + 1,), (weights.shape, s)
+    kernel = functools.partial(_cdmsgd_nesterov_kernel_s, n_stencil=s)
+    in_specs = [
+        pl.BlockSpec((s + 1,), lambda i: (0,)),    # weights
+        pl.BlockSpec((1,), lambda i: (0,)),        # alpha
+        pl.BlockSpec((1,), lambda i: (0,)),        # mu
+        *sp_specs,
+        mat_spec, mat_spec,                        # grad, momentum
+    ]
+    args = [weights.astype(jnp.float32), jnp.asarray([alpha], jnp.float32),
+            jnp.asarray([mu], jnp.float32), *sp_args, grad, momentum]
+    g_idx = len(args) - 2
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(mat_spec, mat_spec, mat_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(grad.shape, grad.dtype),
+            jax.ShapeDtypeStruct(momentum.shape, momentum.dtype),
+            jax.ShapeDtypeStruct(grad.shape, grad.dtype),
+        ),
+        input_output_aliases=_aliases(alias, ((g_idx, 0), (g_idx + 1, 1))),
+        interpret=interpret,
+    )(*args)
+
+
+def cdadam_update_sparse_2d(
+    values: jnp.ndarray,
+    indices: jnp.ndarray,
+    scales: jnp.ndarray,
+    weights: jnp.ndarray,
+    grad: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    alpha,
+    b1,
+    b2,
+    eps,
+    bc1,
+    bc2,
+    *,
+    self_buf: jnp.ndarray,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    alias: bool = True,
+    interpret: bool = False,
+):
+    """Returns ``(x', m', v')`` — local Adam moments, sparse neighbor mix."""
+    grid, mat_spec, sp_specs, sp_args, s = _sparse_operands(
+        values, indices, scales, self_buf, grad, block_rows)
+    assert weights.shape == (s + 1,), (weights.shape, s)
+    kernel = functools.partial(_cdadam_kernel_s, n_stencil=s)
+    scal = jnp.stack([jnp.asarray(x, jnp.float32) for x in
+                      (alpha, b1, b2, eps, bc1, bc2)])
+    in_specs = [
+        pl.BlockSpec((s + 1,), lambda i: (0,)),    # weights
+        pl.BlockSpec((6,), lambda i: (0,)),        # packed scalars
+        *sp_specs,
+        mat_spec, mat_spec, mat_spec,              # grad, m, v
+    ]
+    args = [weights.astype(jnp.float32), scal, *sp_args, grad, m, v]
+    g_idx = len(args) - 3
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(mat_spec, mat_spec, mat_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(grad.shape, grad.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ),
+        input_output_aliases=_aliases(
+            alias, ((g_idx, 0), (g_idx + 1, 1), (g_idx + 2, 2))),
+        interpret=interpret,
+    )(*args)
 
 
 def cdsgd_update_2d(

@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import functools
 import re
-from typing import Any, List, Sequence, Tuple
+from typing import Any, List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,9 +49,32 @@ from repro.kernels.consensus_update.consensus_update import (
     cdmsgd_update_2d,
     cdmsgd_nesterov_update_2d,
     cdadam_update_2d,
+    cdsgd_update_sparse_2d,
+    cdmsgd_update_sparse_2d,
+    cdmsgd_nesterov_update_sparse_2d,
+    cdadam_update_sparse_2d,
 )
 
 PyTree = Any
+
+
+class SparseNeighbors(NamedTuple):
+    """Top-k compact neighbor operands for one dtype bucket.
+
+    Passing this as ``neighbors`` to a ``*_update_flat`` entry point selects
+    the sparse operand form: the kernel scatter-accumulates straight from the
+    wire fields instead of reading a dense decompressed stack.  The fields
+    are the :class:`repro.core.consensus.TopKWire` payloads stacked over the
+    stencil — ``(S, k_rows, 128)`` int8 values, int32 flat dense indices,
+    and ``(S, k_rows, 1)`` f32 scales.  ``self_buf`` is required (the self
+    tile never crosses the wire) and ``scales=None`` (per-compact-row scales
+    ride inside this tuple).  In the stacked simulation the same compact
+    stack is shared by every agent, exactly like the dense quantized form.
+    """
+
+    values: jnp.ndarray
+    indices: jnp.ndarray
+    scales: jnp.ndarray
 
 
 def alias_groups(jaxpr_text: str) -> List[List[Tuple[int, int]]]:
@@ -75,6 +98,15 @@ def alias_groups(jaxpr_text: str) -> List[List[Tuple[int, int]]]:
 
 def cdsgd_update_flat(neighbors, weights, grad, alpha, *, scales=None,
                       self_buf=None, interpret: bool = True):
+    if isinstance(neighbors, SparseNeighbors):
+        nb = neighbors
+        if weights.ndim == 2:
+            return jax.vmap(lambda w, sb, g: cdsgd_update_sparse_2d(
+                nb.values, nb.indices, nb.scales, w, g, alpha, self_buf=sb,
+                interpret=interpret))(weights, self_buf, grad)
+        return cdsgd_update_sparse_2d(nb.values, nb.indices, nb.scales,
+                                      weights, grad, alpha,
+                                      self_buf=self_buf, interpret=interpret)
     if weights.ndim == 2:
         if scales is not None:
             return jax.vmap(lambda w, sb, g: cdsgd_update_2d(
@@ -89,6 +121,16 @@ def cdsgd_update_flat(neighbors, weights, grad, alpha, *, scales=None,
 def cdmsgd_update_flat(neighbors, weights, grad, momentum, alpha, mu, *,
                        scales=None, self_buf=None, mom_neighbors=None,
                        mom_scales=None, interpret: bool = True):
+    if isinstance(neighbors, SparseNeighbors):
+        nb = neighbors
+        if weights.ndim == 2:
+            return jax.vmap(lambda w, sb, g, v: cdmsgd_update_sparse_2d(
+                nb.values, nb.indices, nb.scales, w, g, v, alpha, mu,
+                self_buf=sb, interpret=interpret))(
+                    weights, self_buf, grad, momentum)
+        return cdmsgd_update_sparse_2d(nb.values, nb.indices, nb.scales,
+                                       weights, grad, momentum, alpha, mu,
+                                       self_buf=self_buf, interpret=interpret)
     if weights.ndim == 2:
         if mom_neighbors is not None:
             # mixed momentum: the per-agent momentum row is the momentum
@@ -114,6 +156,17 @@ def cdmsgd_nesterov_update_flat(neighbors, weights, grad, momentum, alpha, mu,
                                 *, scales=None, self_buf=None,
                                 mom_neighbors=None, mom_scales=None,
                                 interpret: bool = True):
+    if isinstance(neighbors, SparseNeighbors):
+        nb = neighbors
+        if weights.ndim == 2:
+            return jax.vmap(
+                lambda w, sb, g, v: cdmsgd_nesterov_update_sparse_2d(
+                    nb.values, nb.indices, nb.scales, w, g, v, alpha, mu,
+                    self_buf=sb, interpret=interpret))(
+                        weights, self_buf, grad, momentum)
+        return cdmsgd_nesterov_update_sparse_2d(
+            nb.values, nb.indices, nb.scales, weights, grad, momentum,
+            alpha, mu, self_buf=self_buf, interpret=interpret)
     if weights.ndim == 2:
         if mom_neighbors is not None:
             return jax.vmap(lambda w, sb, g, v: cdmsgd_nesterov_update_2d(
@@ -139,6 +192,17 @@ def cdadam_update_flat(neighbors, weights, grad, m, v, alpha, b1, b2, eps,
                        bc1, bc2, *, scales=None, self_buf=None,
                        mom_neighbors=None, mom_scales=None,
                        interpret: bool = True):
+    if isinstance(neighbors, SparseNeighbors):
+        nb = neighbors
+        if weights.ndim == 2:
+            return jax.vmap(lambda w, sb, g, mi, vi: cdadam_update_sparse_2d(
+                nb.values, nb.indices, nb.scales, w, g, mi, vi, alpha, b1,
+                b2, eps, bc1, bc2, self_buf=sb, interpret=interpret))(
+                    weights, self_buf, grad, m, v)
+        return cdadam_update_sparse_2d(nb.values, nb.indices, nb.scales,
+                                       weights, grad, m, v, alpha, b1, b2,
+                                       eps, bc1, bc2, self_buf=self_buf,
+                                       interpret=interpret)
     if weights.ndim == 2:
         if mom_neighbors is not None:
             return jax.vmap(lambda w, sb, g, mi, vi: cdadam_update_2d(

@@ -92,6 +92,65 @@ def topk_k_rows(rows: int, p: float) -> int:
     return min(rows, max(1, -(-k // LANE)))
 
 
+#: Wire bytes of ONE compact lane row: 128 int8 values + 128 int32 flat
+#: indices + one f32 row scale.  The single price every byte account and
+#: the ``topk:auto`` budget solver use.
+TOPK_LANE_ROW_BYTES = LANE * (1 + 4) + 4
+
+
+def topk_auto_k_rows(rows_list, budget: int):
+    """Per-bucket compact row counts meeting a total byte budget per neighbor.
+
+    ``topk:auto:B`` adaptive density: given the dense row counts of every
+    bucket, choose ``k_rows[i]`` so that ``sum(k_rows) *
+    TOPK_LANE_ROW_BYTES <= budget`` with at least one lane row per bucket
+    (a bucket that ships nothing would stall its EF residual forever).
+    Rows are spread proportionally to each bucket's size, then a greedy
+    top-up hands the integer remainder to the largest uncovered buckets
+    (deterministic: ties break toward the lower bucket index) — so unless
+    every bucket saturates at full density, the shortfall under ``budget``
+    is less than one lane row total.
+    """
+    rows_list = list(rows_list)
+    n = len(rows_list)
+    floor_bytes = n * TOPK_LANE_ROW_BYTES
+    if budget < floor_bytes:
+        raise ValueError(
+            f"topk:auto budget {budget} B cannot cover one compact lane row "
+            f"per bucket ({n} buckets x {TOPK_LANE_ROW_BYTES} B = "
+            f"{floor_bytes} B minimum)")
+    afford = budget // TOPK_LANE_ROW_BYTES
+    k = [1] * n
+    rem = afford - n
+    frac = [r - 1 for r in rows_list]
+    total_frac = sum(frac)
+    if total_frac > 0:
+        for i in range(n):
+            k[i] += min(frac[i], rem * frac[i] // total_frac)
+    while sum(k) < afford:
+        cands = [(rows_list[i] - k[i], -i) for i in range(n)
+                 if k[i] < rows_list[i]]
+        if not cands:
+            break                       # every bucket already full density
+        uncovered, neg_i = max(cands)
+        k[-neg_i] += 1
+    return k
+
+
+def topk_k_rows_for(rows_list, param):
+    """Per-bucket ``k_rows`` for a parsed ``topk`` compressor parameter.
+
+    ``param`` is either a float density ``p`` (``topk:p`` — applied to each
+    bucket independently) or the tuple ``("auto", budget_bytes)`` from
+    ``topk:auto:B`` (the byte-budget solver above).
+    """
+    if isinstance(param, tuple):
+        kind, budget = param
+        assert kind == "auto", param
+        return topk_auto_k_rows(rows_list, budget)
+    return [topk_k_rows(r, param) for r in rows_list]
+
+
 # --------------------------------------------------------------------------
 # Pallas magnitude-threshold kernel (one HBM sweep)
 # --------------------------------------------------------------------------

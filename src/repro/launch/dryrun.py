@@ -174,9 +174,22 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         # non-fused fallback moves native f32 regardless of the program)
         live_program = program if live != "f32" or (
             program is not None and program.compressed) else None
+        flat_spec = flatbuf.make_flat_spec(args[0], lead=1)
         record["exchange_bytes_per_step"] = consensus_lib.exchange_bytes_per_step(
-            flatbuf.make_flat_spec(args[0], lead=1), wire_topo, live, rounds,
-            payloads, program=live_program)
+            flat_spec, wire_topo, live, rounds, payloads,
+            program=live_program)
+        if program is not None and program.compressor_kind == "topk":
+            # dense-vs-sparse operand bytes/FLOPs of the fused update per
+            # bucket (the compute-side analog of exchange_bytes_per_step),
+            # plus which form the program actually runs
+            from repro.analysis.roofline import consensus_update_cost
+            degree = (wire_topo.mean_degree()
+                      if hasattr(wire_topo, "mean_degree")
+                      else wire_topo.degree())
+            record["update_cost"] = {
+                "sparse_update": program.sparse_update,
+                **consensus_update_cost(flat_spec, program, int(degree)),
+            }
         if verbose:
             print(f"[dryrun] {label} " + consensus_lib.describe_exchange_cost(
                 args[0], wire_topo, live, rounds=rounds, payloads=payloads,
@@ -308,10 +321,12 @@ def main() -> int:
                          "repro.core.faults.make_fault_schedule)")
     ap.add_argument("--compressor", default="none",
                     help="wire compressor axis: 'none', 'int8'/'fp8' "
-                         "(aliases), 'topk:p' or 'rank:r' (biased; require "
-                         "--error-feedback); the record's "
+                         "(aliases), 'topk:p', 'topk:auto:B' (per-bucket "
+                         "density against a byte budget) or 'rank:r' "
+                         "(biased; require --error-feedback); the record's "
                          "exchange_bytes_per_step prices the compressed "
-                         "payload fields")
+                         "payload fields and top-k records update_cost "
+                         "(dense vs sparse operand bytes per bucket)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     ap.add_argument("--no-analyze", action="store_true")

@@ -229,7 +229,8 @@ def build_train_step(
     momentum_mixing: str = "none",  # "mixed": momentum rides the wire too
     staleness: int = 1,           # bounded-staleness ring depth S (overlap)
     fault_schedule=None,          # FaultSchedule | spec str (repro.core.faults)
-    compressor: str = "none",     # none | int8 | fp8 | topk:p | rank:r
+    compressor: str = "none",     # none | int8 | fp8 | topk:p|auto:B | rank:r
+    sparse_update: Optional[bool] = None,  # sparse fused update (topk default)
 ) -> TrainStepBundle:
     rules = shlib.rules_for_mode(mode, mesh)
     n_agents = shlib.agent_count(mesh, mode)
@@ -246,7 +247,7 @@ def build_train_step(
         error_feedback=error_feedback, exchange=exchange,
         momentum_mixing=momentum_mixing,
         staleness=staleness, faults=fault_schedule,
-        compressor=compressor)
+        compressor=compressor, sparse_update=sparse_update)
     exchange = program.exchange   # compressor aliases normalize the precision
     if not program.is_trivial and mixing != "ppermute_fused":
         raise ValueError(

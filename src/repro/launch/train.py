@@ -81,10 +81,20 @@ def main() -> None:
     ap.add_argument("--compressor", default="none",
                     help="wire compressor: 'none', 'int8'/'fp8' (alias the "
                          "--exchange precisions), 'topk:p' (top-k sparse, "
-                         "density p, e.g. topk:0.01) or 'rank:r' (rank-r "
-                         "PowerSGD-style factors, e.g. rank:4); topk/rank "
-                         "are biased and require --error-feedback "
-                         "(implies --fused)")
+                         "density p, e.g. topk:0.01), 'topk:auto:B' "
+                         "(adaptive per-bucket density against a byte "
+                         "budget B per neighbor, e.g. topk:auto:65536) or "
+                         "'rank:r' (rank-r PowerSGD-style factors, e.g. "
+                         "rank:4); topk/rank are biased and require "
+                         "--error-feedback (implies --fused)")
+    ap.add_argument("--sparse-update", default=None,
+                    choices=["on", "off"],
+                    help="top-k compressor only: 'on' (the default for "
+                         "topk) feeds the compact wire fields straight to "
+                         "the fused sparse scatter-accumulate kernels "
+                         "(O(k_rows) neighbor reads); 'off' forces the "
+                         "dense decompress-then-update reference path "
+                         "(O(rows))")
     ap.add_argument("--microbatch", type=int, default=1,
                     help="gradient-accumulation microbatches per step")
     ap.add_argument("--lr", type=float, default=0.01)
@@ -172,7 +182,10 @@ def main() -> None:
                                    momentum_mixing=args.momentum_mixing,
                                    staleness=args.staleness,
                                    fault_schedule=args.fault_schedule,
-                                   compressor=args.compressor)
+                                   compressor=args.compressor,
+                                   sparse_update=(None if args.sparse_update
+                                                  is None else
+                                                  args.sparse_update == "on"))
 
     from repro.core.consensus import describe_exchange_cost
     program = trainer.program
