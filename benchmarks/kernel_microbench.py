@@ -217,8 +217,8 @@ def alias_accounting(rows_n: int = 8192):
 
     out = {}
     for name, alias in (("aliased", True), ("unaliased", False)):
-        jaxpr = str(jax.make_jaxpr(lambda *a: cdmsgd_update_2d(
-            *a, 0.05, 0.9, alias=alias, interpret=True))(nb, w, g, mom))
+        jaxpr = jax.make_jaxpr(lambda *a: cdmsgd_update_2d(
+            *a, 0.05, 0.9, alias=alias, interpret=True))(nb, w, g, mom)
         groups = cons_ops.alias_groups(jaxpr)
         n_aliased = len(groups[0]) if groups else 0
         out[name] = {"aliased_outputs": n_aliased,

@@ -1,0 +1,48 @@
+"""Loaders for launch-produced JSON records, with schema versioning.
+
+``launch/dryrun.py`` has been writing ``results/dryrun/*.json`` since PR 4
+without a version stamp.  PR 10 adds two fields:
+
+* ``version`` — integer schema version (``DRYRUN_SCHEMA_VERSION``);
+* ``verify``  — the static contract-checker report
+  (``repro.analysis.staticcheck.CheckReport.as_dict()``), or ``None`` when
+  the checker did not run (non-train modes, pre-PR-10 records, or checker
+  failure — failures land as a ``"FAIL: ..."`` string, never an exception).
+
+``load_dryrun_record`` normalizes records from any era so downstream
+consumers (benchmarks/README.md tables, CI diffing) can read one shape:
+missing ``version`` means 1 (pre-checker), missing ``verify`` means None.
+"""
+
+import json
+
+# bump when the dryrun record shape changes; loaders must keep reading
+# every older version
+DRYRUN_SCHEMA_VERSION = 2
+
+
+def load_dryrun_record(path):
+    """Read one ``results/dryrun/*.json`` record, normalized to the current
+    schema: ``version`` defaults to 1 and ``verify`` to None for records
+    written before PR 10."""
+    with open(path) as f:
+        rec = json.load(f)
+    rec.setdefault("version", 1)
+    rec.setdefault("verify", None)
+    return rec
+
+
+def verify_summary(rec):
+    """One-line human summary of a record's verify block: ``"not run"``,
+    the failure string, or ``"ok (N rules)"`` / ``"FAIL: rule, rule"``."""
+    v = rec.get("verify")
+    if v is None:
+        return "not run"
+    if isinstance(v, str):
+        return v
+    rules = v.get("rules", [])
+    bad = [r["rule"] for r in rules if not r.get("ok", False)
+           and not r.get("skipped", False)]
+    if bad:
+        return "FAIL: " + ", ".join(bad)
+    return f"ok ({len(rules)} rules)"

@@ -514,12 +514,21 @@ def _sub_jaxprs(params: dict):
                 yield x
 
 
-def _taint_walk(jaxpr, in_taints, hits, prims):
+def _taint_walk(jaxpr, in_taints, hits, prims, path=()):
     """Propagate per-invar label sets through ``jaxpr``; collect the merged
     input labels of every eqn whose primitive name contains one of
     ``prims``.  Conservative: opaque/unmatched sub-jaxprs taint all
     outputs with the union of inputs, and loop-carried sub-jaxprs
     (scan/while) iterate to a fixpoint.  Returns per-outvar label sets.
+
+    ``path`` names the enclosing call chain as a tuple of
+    ``(primitive_name, eqn_index, sub_jaxpr_index)`` frames.  Hits are
+    keyed ``((path, id(eqn)), primitive_name, labels)``: jax shares
+    sub-jaxpr objects between call sites (two ``pjit`` eqns of the same
+    jitted fn carry the *same* inner eqn objects), so a bare ``id(eqn)``
+    would merge structurally distinct collectives reached through
+    different call sites — the path disambiguates them, while fixpoint
+    re-walks of one site (same path) still dedupe.
     """
     env = {}
 
@@ -530,19 +539,16 @@ def _taint_walk(jaxpr, in_taints, hits, prims):
 
     for v, t in zip(jaxpr.invars, in_taints):
         env[v] = frozenset(t)
-    for eqn in jaxpr.eqns:
+    for ei, eqn in enumerate(jaxpr.eqns):
         ins = [read(v) for v in eqn.invars]
         merged = frozenset().union(*ins) if ins else frozenset()
         if any(p in eqn.primitive.name for p in prims):
-            # keyed by eqn identity: loop-carried sub-jaxprs are re-walked
-            # to a fixpoint, so the same collective may be visited several
-            # times — the report merges the taints and counts it once
-            hits.append((id(eqn), eqn.primitive.name, merged))
+            hits.append(((path, id(eqn)), eqn.primitive.name, merged))
         out_ts = None
         subs = list(_sub_jaxprs(eqn.params))
         if subs:
             acc = None
-            for sub in subs:
+            for si, sub in enumerate(subs):
                 j = sub.jaxpr if isinstance(sub, jax.core.ClosedJaxpr) else sub
                 n = len(j.invars)
                 if n == len(ins):
@@ -552,8 +558,9 @@ def _taint_walk(jaxpr, in_taints, hits, prims):
                 else:
                     sub_in = [merged] * n
                 looping = eqn.primitive.name in ("scan", "while")
+                sub_path = path + ((eqn.primitive.name, ei, si),)
                 for _ in range(5):
-                    sub_out = _taint_walk(j, sub_in, hits, prims)
+                    sub_out = _taint_walk(j, sub_in, hits, prims, sub_path)
                     if not looping:
                         break
                     # feed carried-output taints back into the carried inputs
@@ -584,6 +591,67 @@ def _taint_walk(jaxpr, in_taints, hits, prims):
     return [read(v) for v in jaxpr.outvars]
 
 
+#: step-input label names, in the order `step_input_labels` emits them
+STEP_INPUT_LABELS = ("params", "state", "wire", "residual", "qwarm", "batch")
+
+#: primitive-name substrings of every collective the census audits
+COLLECTIVE_PRIMS = ("ppermute", "psum", "all_gather", "all_to_all",
+                    "all_reduce", "reduce_scatter")
+
+
+def step_input_labels(params, opt_state, batch):
+    """Per-flat-input label sets for ``step_fn(params, opt_state, batch)``:
+    ``params`` / ``state`` / ``wire`` / ``residual`` / ``qwarm`` / ``batch``
+    (the taxonomy both the dependency report and the static checker's
+    collective census taint through the traced step)."""
+    label_tree = (
+        jax.tree.map(lambda _: "params", params),
+        OptState(step="state",
+                 inner=jax.tree.map(lambda _: "state", opt_state.inner),
+                 wire=jax.tree.map(lambda _: "wire", opt_state.wire),
+                 residual=jax.tree.map(lambda _: "residual",
+                                       opt_state.residual),
+                 qwarm=jax.tree.map(lambda _: "qwarm", opt_state.qwarm)),
+        jax.tree.map(lambda _: "batch", batch),
+    )
+    return [frozenset([l]) for l in jax.tree.leaves(label_tree)]
+
+
+def collective_taint_hits(step_fn, params, opt_state, batch, *,
+                          prims=("ppermute",), closed=None):
+    """Trace ``step_fn`` and return one record per (collective eqn,
+    enclosing call path): ``{"prim", "path", "labels"}``.
+
+    The shared engine under both ``exchange_dependency_report`` and the
+    static checker's collective census.  Two structurally distinct
+    collectives that happen to live in a shared (cloned) sub-jaxpr object
+    are counted separately — hits key on the call path, not bare eqn
+    identity — while fixpoint re-walks of loop bodies merge into one
+    record per site with the union of the taints seen.
+
+    Works on concrete arrays or ShapeDtypeStructs.  ``closed`` lets a
+    caller that already traced the step (the static checker shares one
+    jaxpr across passes) skip the re-trace.
+    """
+    labels = step_input_labels(params, opt_state, batch)
+    if closed is None:
+        closed = jax.make_jaxpr(step_fn)(params, opt_state, batch)
+    assert len(closed.jaxpr.invars) == len(labels), \
+        (len(closed.jaxpr.invars), len(labels))
+    hits: list = []
+    _taint_walk(closed.jaxpr, labels, hits, prims=prims)
+    merged: dict = {}
+    names: dict = {}
+    order: list = []
+    for key, name, taint in hits:
+        if key not in merged:
+            order.append(key)
+        merged[key] = merged.get(key, frozenset()) | taint
+        names[key] = name
+    return [{"prim": names[k], "path": k[0], "labels": merged[k]}
+            for k in order]
+
+
 def exchange_dependency_report(step_fn, params, opt_state, batch) -> dict:
     """Which step inputs can reach the collective exchange, from the jaxpr.
 
@@ -606,32 +674,17 @@ def exchange_dependency_report(step_fn, params, opt_state, batch) -> dict:
       (``n_ppermutes_fresh``) and the all-hits summary
       ``off_grad_update_critical_path`` is True only for ``k = 1``.
 
-    Collectives are counted per jaxpr equation: a ``ppermute`` inside the
-    multi-round ``lax.scan`` counts once regardless of trip count.
+    Collectives are counted per (jaxpr equation, enclosing call path): a
+    ``ppermute`` inside the multi-round ``lax.scan`` counts once regardless
+    of trip count, while the same eqn object reached through two distinct
+    call sites (jax shares cloned sub-jaxprs) counts twice.
 
     Works on concrete arrays or ShapeDtypeStructs.  Programs whose mixing
     has no ``ppermute`` (stacked dense ``Pi``) report ``n_ppermutes == 0``.
     """
-    label_tree = (
-        jax.tree.map(lambda _: "params", params),
-        OptState(step="state",
-                 inner=jax.tree.map(lambda _: "state", opt_state.inner),
-                 wire=jax.tree.map(lambda _: "wire", opt_state.wire),
-                 residual=jax.tree.map(lambda _: "residual",
-                                       opt_state.residual),
-                 qwarm=jax.tree.map(lambda _: "qwarm", opt_state.qwarm)),
-        jax.tree.map(lambda _: "batch", batch),
-    )
-    labels = [frozenset([l]) for l in jax.tree.leaves(label_tree)]
-    closed = jax.make_jaxpr(step_fn)(params, opt_state, batch)
-    assert len(closed.jaxpr.invars) == len(labels), \
-        (len(closed.jaxpr.invars), len(labels))
-    hits: list = []
-    _taint_walk(closed.jaxpr, labels, hits, prims=("ppermute",))
-    by_eqn: dict = {}
-    for key, _name, taint in hits:
-        by_eqn[key] = by_eqn.get(key, frozenset()) | taint
-    taints = list(by_eqn.values())
+    hits = collective_taint_hits(step_fn, params, opt_state, batch,
+                                 prims=("ppermute",))
+    taints = [h["labels"] for h in hits]
     union = frozenset().union(*taints) if taints else frozenset()
     carried = [t for t in taints if not (t & frozenset(("params", "batch")))]
     return {

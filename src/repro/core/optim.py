@@ -185,6 +185,15 @@ class DistributedOptimizer:
     compiled mode is owned by the ``FlatComm`` (True on CPU, False on TPU).
     """
 
+    #: declared in-place contract of the fused path: how many
+    #: ``(input, output)`` ``input_output_aliases`` pairs every fused bucket
+    #: launch must carry (params always alias in place; momentum-family
+    #: optimizers alias their inner buffers too).  ``None`` = no fused
+    #: in-place contract (baselines / reference-path optimizers).  The
+    #: static checker's alias-coverage pass audits the traced step against
+    #: this number (see :mod:`repro.analysis.staticcheck`).
+    fused_alias_pairs = None
+
     def __init__(self, schedule: Schedule | float, *, fused: bool = False):
         self.schedule: Schedule = fixed(schedule) if isinstance(schedule, (int, float)) else schedule
         self.fused = fused
@@ -300,6 +309,8 @@ def _flat_setup(fl, params, step, *trees, exchanged=None):
 class CDSGD(DistributedOptimizer):
     """Algorithm 1: ``x_{k+1} = Pi x_k - alpha g(x_k)``."""
 
+    fused_alias_pairs = 1   # params in-place
+
     def apply(self, params, grads, inner, alpha, comm, step):
         mixed = comm.mix(params)
         # final .astype keeps bf16 params bf16 (traced f32 alpha promotes)
@@ -330,6 +341,8 @@ class CDMSGD(DistributedOptimizer):
     dynamics then contract together instead of fighting, which is what
     stabilizes quantized exchanges at large step sizes.
     """
+
+    fused_alias_pairs = 2   # params + momentum v in-place
 
     def __init__(self, schedule, mu: float = 0.9, **kw):
         super().__init__(schedule, **kw)
@@ -397,6 +410,8 @@ class CDMSGDNesterov(CDMSGD):
     ``(v, lookahead)``: the kernel emits ``x' + mu v'`` in the same HBM
     sweep as the update, so ``grad_params`` is a free state lookup.
     """
+
+    fused_alias_pairs = 2   # params + momentum v in-place (lookahead is new)
 
     def init_inner(self, params):
         if self.fused:
@@ -470,6 +485,8 @@ class CDAdam(DistributedOptimizer):
     a positive per-coordinate scale, not a direction, and mixing it would
     skew the bias correction.
     """
+
+    fused_alias_pairs = 3   # params + both Adam moments in-place
 
     def __init__(self, schedule, b1=0.9, b2=0.999, eps=1e-8, **kw):
         super().__init__(schedule, **kw)

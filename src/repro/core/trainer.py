@@ -187,8 +187,10 @@ class CollaborativeTrainer:
         self.state = TrainState(params=stacked,
                                 opt_state=self._program.init_state(stacked))
         self.history = MetricHistory()
+        # recorded for the static checker's alias/donation-coverage pass
+        self.donate_argnums = (0, 1) if donate else ()
         self._step_fn = jax.jit(self._program.step_fn,
-                                donate_argnums=(0, 1) if donate else ())
+                                donate_argnums=self.donate_argnums)
         self._eval_fn = jax.jit(self._make_eval())
         # per-step neighbor-exchange cost of the fused flat path (estimate;
         # train_loop reports the cumulative figure alongside steps/sec).

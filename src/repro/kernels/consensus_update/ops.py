@@ -36,7 +36,6 @@ pass ``interpret=False`` for the compiled path.
 from __future__ import annotations
 
 import functools
-import re
 from typing import Any, List, NamedTuple, Sequence, Tuple
 
 import jax
@@ -77,18 +76,45 @@ class SparseNeighbors(NamedTuple):
     scales: jnp.ndarray
 
 
-def alias_groups(jaxpr_text: str) -> List[List[Tuple[int, int]]]:
-    """``input_output_aliases`` pairs per pallas_call in a printed jaxpr.
+def _eqn_sub_jaxprs(params: dict):
+    for v in params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vals:
+            if isinstance(x, (jax.core.Jaxpr, jax.core.ClosedJaxpr)):
+                yield x.jaxpr if isinstance(x, jax.core.ClosedJaxpr) else x
 
-    Shared accounting helper (tests + benchmarks): one inner list per
-    launch, each entry an ``(input_index, output_index)`` alias.  Parses
-    the jaxpr text because the params are not otherwise reachable from a
-    traced callable.
+
+def alias_groups(jaxpr) -> List[List[Tuple[int, int]]]:
+    """``input_output_aliases`` pairs per ``pallas_call`` eqn in a jaxpr.
+
+    Shared accounting helper (tests, benchmarks, and the static checker's
+    alias-coverage pass): one inner list per launch in eqn order, each
+    entry an ``(input_index, output_index)`` alias pair, read structurally
+    from ``eqn.params["input_output_aliases"]``.  Accepts a ``Jaxpr`` or
+    ``ClosedJaxpr`` (e.g. ``jax.make_jaxpr(fn)(*args)``) and recurses into
+    call/control-flow sub-jaxprs; the kernel body itself is not descended
+    into.  Printed jaxpr text is rejected — the old regex parse of it
+    silently returned ``[]`` whenever jax's pretty-printer elided or
+    reformatted the params.
     """
-    groups = re.findall(r"input_output_aliases=\(((?:\(\d+, \d+\),? ?)*)\)",
-                        jaxpr_text)
-    return [[(int(a), int(b)) for a, b in re.findall(r"\((\d+), (\d+)\)", g)]
-            for g in groups]
+    if isinstance(jaxpr, str):
+        raise TypeError(
+            "alias_groups walks jaxpr eqns structurally; pass the jaxpr "
+            "object from jax.make_jaxpr(...), not its printed text")
+    j = jaxpr.jaxpr if isinstance(jaxpr, jax.core.ClosedJaxpr) else jaxpr
+    out: List[List[Tuple[int, int]]] = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                pairs = eqn.params.get("input_output_aliases", ())
+                out.append([(int(a), int(b)) for a, b in pairs])
+                continue
+            for sub in _eqn_sub_jaxprs(eqn.params):
+                walk(sub)
+
+    walk(j)
+    return out
 
 
 # --------------------------------------------------------------------------

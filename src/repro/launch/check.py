@@ -1,0 +1,271 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Certify the wire contract of every supported StepProgram configuration.
+
+The two lines above MUST stay first: the sharded matrix runs on 8 host
+placeholder devices and jax locks the device count at first init.  Do not
+import this module from tests — they manage their own device count (the
+subprocess idiom in test_sharded.py).
+
+``python -m repro.launch.check`` assembles every supported (schedule x
+exchange x mixing-strategy x compressor x staleness) configuration in BOTH
+execution modes — the stacked MLP-testbed trainer and the sharded
+``build_train_step`` bundle on debug meshes — and runs the static
+contract checker (``repro.analysis.staticcheck``) over each.  Tracing
+only: no config in the default matrix compiles or executes a step, so the
+full sweep is CI-cheap (~2 min on 2 cores).
+
+``--hlo N`` additionally compiles the first N HLO-tier configs on the
+agent-only 8x1 mesh and cross-checks the collective-permute bytes that XLA
+actually emitted against the analytic accounting
+(``bytes.hlo_collective_permute``), and audits jax's dropped-donation
+warnings (``alias.dropped_donations``).
+
+Exit status is non-zero iff any rule fails, so CI can use this as a hard
+gate.  ``--json-out`` writes a BENCH-style record with one entry per
+config: label, ok, walltime, and the full per-rule evidence.
+
+Usage:
+  python -m repro.launch.check                    # full matrix, both modes
+  python -m repro.launch.check --mode stacked     # trainer matrix only
+  python -m repro.launch.check --only topk        # label substring filter
+  python -m repro.launch.check --hlo 2 --json-out BENCH_10.json
+  python -m repro.launch.check --list             # print matrix and exit
+"""
+
+import argparse
+import functools
+import json
+import sys
+import time
+
+
+# --------------------------------------------------------------------------
+# the supported configuration matrix
+#
+# Each entry is (label, optimizer_name, trainer/build kwargs).  The same
+# knobs drive both modes; entries whose knobs only exist in one mode carry
+# a "modes" key.  Keep this list in sync with ROADMAP.md's supported-config
+# table — a config missing here is a config CI does not certify.
+# --------------------------------------------------------------------------
+
+ALT = "alternating:ring:fully_connected"
+
+MATRIX = [
+    ("sync_f32", "cdsgd", {}),
+    ("sync_int8", "cdmsgd", dict(exchange="int8")),
+    ("sync_nesterov_f32", "cdmsgd_nesterov", {}),
+    ("overlap_f32", "cdsgd", dict(schedule="overlap")),
+    ("overlap_int8", "cdmsgd", dict(schedule="overlap", exchange="int8")),
+    ("sync_rounds2", "cdsgd",
+     dict(exchange="int8", mixing_strategy="multi_round", consensus_rounds=2)),
+    ("sync_rounds3_adam", "cdadam",
+     dict(exchange="int8", mixing_strategy="multi_round", consensus_rounds=3)),
+    ("overlap_rounds3", "cdmsgd",
+     dict(schedule="overlap", exchange="int8",
+          mixing_strategy="multi_round", consensus_rounds=3)),
+    ("sync_tv_int8", "cdmsgd",
+     dict(exchange="int8", mixing_strategy="time_varying",
+          topology_schedule=ALT)),
+    ("overlap_tv_int8", "cdmsgd",
+     dict(schedule="overlap", exchange="int8",
+          mixing_strategy="time_varying", topology_schedule=ALT)),
+    ("overlap_mom_mixed", "cdmsgd",
+     dict(schedule="overlap", exchange="int8", momentum_mixing="mixed")),
+    ("overlap_S4", "cdsgd",
+     dict(schedule="overlap", exchange="int8", staleness=4)),
+    ("overlap_S4_faults", "cdsgd",
+     dict(schedule="overlap", exchange="int8", staleness=4,
+          fault_schedule="stall:1:1:3")),
+    ("sync_ef_topk", "cdsgd",
+     dict(error_feedback=True, compressor="topk:0.25")),
+    ("overlap_ef_topk", "cdsgd",
+     dict(schedule="overlap", exchange="int8", error_feedback=True,
+          compressor="topk:0.25")),
+    ("overlap_ef_topk_auto", "cdmsgd",
+     dict(schedule="overlap", error_feedback=True,
+          compressor="topk:auto:65536")),
+    ("overlap_ef_rank", "cdmsgd_nesterov",
+     dict(schedule="overlap", error_feedback=True, compressor="rank:2")),
+]
+
+# compressed wires require every bucket row on one shard, so those sharded
+# configs run on the agent-only 8x1 debug mesh; dense configs exercise the
+# model axis (4 agents x 2-way model sharding) where per-shard re-padding
+# is live in the byte accounting
+COMPRESSED = {"sync_ef_topk", "overlap_ef_topk", "overlap_ef_topk_auto",
+              "overlap_ef_rank"}
+
+# configs the --hlo tier compiles (agent-only mesh: the analytic cp-bytes
+# closed form is exact there), in priority order
+HLO_TIER = ["overlap_int8", "sync_int8", "overlap_ef_topk", "overlap_S4"]
+
+
+def stacked_reports(entries, *, verbose=True):
+    """Run the stacked matrix: the paper's MLP testbed on a 4-agent ring."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.analysis import staticcheck
+    from repro.core.optim import make_optimizer
+    from repro.core.topology import make_topology
+    from repro.core.trainer import CollaborativeTrainer
+    from repro.nn.paper_models import (classifier_loss, mlp_classifier_apply,
+                                       mlp_classifier_template)
+    from repro.nn.param import init_params
+
+    loss = functools.partial(classifier_loss, mlp_classifier_apply)
+    params = init_params(mlp_classifier_template(8, 4, width=16, depth=2),
+                         jax.random.PRNGKey(0))
+    topo = make_topology("ring", 4)
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.standard_normal((4, 8, 8)), jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 4, (4, 8)), jnp.int32)}
+
+    reports = []
+    for label, opt_name, kw in entries:
+        opt = make_optimizer(opt_name, 0.05, fused=True)
+        tr = CollaborativeTrainer(loss, params, topo, opt, **kw)
+        rep = staticcheck.check_trainer(tr, batch, label=f"stacked/{label}",
+                                        checkify_indices=True)
+        reports.append(rep)
+        if verbose:
+            print(rep.summary())
+    return reports
+
+
+def sharded_reports(entries, *, hlo_n=0, verbose=True):
+    """Run the sharded matrix: ``build_train_step`` bundles on debug meshes
+    (shape templates only — compile is reserved for the --hlo tier)."""
+    import dataclasses
+
+    from repro.analysis import staticcheck
+    from repro.configs import get_config
+    from repro.configs.base import InputShape
+    from repro.core.optim import make_optimizer
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_debug_mesh
+
+    cfg = dataclasses.replace(get_config("granite-3-8b").reduced(),
+                              param_dtype="float32")
+    shape = InputShape("tiny_train", 16, 8, "train")
+    hlo_labels = [l for l in HLO_TIER
+                  if any(e[0] == l for e in entries)][:max(0, hlo_n)]
+
+    reports = []
+    for label, opt_name, kw in entries:
+        dims = (8, 1) if label in COMPRESSED else (4, 2)
+        mesh = make_debug_mesh(*dims)
+        opt = make_optimizer(opt_name, 0.05, fused=True)
+        bundle = steps_lib.build_train_step(
+            cfg, shape, mesh, opt, mode="train", topology_name="ring",
+            mixing="ppermute_fused", **kw)
+        full = f"sharded/{label} {dims[0]}x{dims[1]}"
+        with mesh:
+            rep = staticcheck.check_bundle(bundle, mesh, label=full)
+        reports.append(rep)
+        if verbose:
+            print(rep.summary())
+        if label in hlo_labels:
+            reports.append(_hlo_report(cfg, shape, opt_name, kw, label,
+                                       verbose=verbose))
+    return reports
+
+
+def _hlo_report(cfg, shape, opt_name, kw, label, *, verbose=True):
+    """Compile one config on the agent-only mesh and certify against the
+    HLO the compiler actually emitted (collective bytes + donation audit)."""
+    import warnings
+
+    import jax
+    from repro.analysis import staticcheck
+    from repro.analysis.hlo import analyze_hlo
+    from repro.core.optim import make_optimizer
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_debug_mesh
+
+    mesh = make_debug_mesh(8, 1)
+    opt = make_optimizer(opt_name, 0.05, fused=True)
+    bundle = steps_lib.build_train_step(
+        cfg, shape, mesh, opt, mode="train", topology_name="ring",
+        mixing="ppermute_fused", **kw)
+    with mesh:
+        params = bundle.param_structs(mesh)
+        opt_state = bundle.opt_state_structs(mesh, opt)
+        with warnings.catch_warnings(record=True) as wlog:
+            warnings.simplefilter("always")
+            compiled = jax.jit(
+                bundle.step_fn, donate_argnums=bundle.donate_argnums,
+            ).lower(params, opt_state, bundle.batch_specs).compile()
+        dropped = [str(w.message) for w in wlog
+                   if "donat" in str(w.message).lower()]
+        stats = analyze_hlo(compiled.as_text())
+        rep = staticcheck.check_bundle(
+            bundle, mesh, label=f"sharded/{label} 8x1 +hlo",
+            hlo_stats=stats, dropped_donations=dropped)
+    if verbose:
+        print(rep.summary())
+    return rep
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.check", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--mode", choices=["stacked", "sharded", "all"],
+                    default="all")
+    ap.add_argument("--only", default="",
+                    help="run only configs whose label contains this substring")
+    ap.add_argument("--hlo", type=int, default=0, metavar="N",
+                    help="compile the first N HLO-tier configs on the 8x1 "
+                         "mesh and cross-check emitted collective bytes")
+    ap.add_argument("--json-out", default="",
+                    help="write a BENCH-style JSON record of every report")
+    ap.add_argument("--list", action="store_true",
+                    help="print the config matrix and exit")
+    args = ap.parse_args(argv)
+
+    entries = [e for e in MATRIX if args.only in e[0]]
+    if args.list:
+        for label, opt_name, kw in entries:
+            print(f"{label:24s} {opt_name:16s} {kw}")
+        return 0
+    if not entries:
+        print(f"[check] no config label contains {args.only!r}", file=sys.stderr)
+        return 2
+
+    t0 = time.time()
+    reports = []
+    if args.mode in ("stacked", "all"):
+        reports += stacked_reports(entries)
+    if args.mode in ("sharded", "all"):
+        reports += sharded_reports(entries, hlo_n=args.hlo)
+
+    n_rules = sum(len(r.results) for r in reports)
+    failures = [(r.label, f) for r in reports for f in r.failures()]
+    print(f"\n[check] {len(reports)} configs, {n_rules} rules, "
+          f"{len(failures)} failures ({time.time() - t0:.0f}s)")
+    for label, f in failures:
+        print(f"[check] FAIL {label} :: {f.rule}: {f.detail}")
+
+    if args.json_out:
+        record = {
+            "bench": "staticcheck",
+            "version": 1,
+            "mode": args.mode,
+            "ok": not failures,
+            "n_configs": len(reports),
+            "n_rules": n_rules,
+            "walltime_s": round(time.time() - t0, 1),
+            "configs": [r.as_dict() for r in reports],
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(record, f, indent=1, default=str)
+        print(f"[check] wrote {args.json_out}")
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

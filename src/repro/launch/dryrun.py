@@ -28,6 +28,7 @@ import json
 import sys
 import time
 import traceback
+import warnings
 
 
 def _build(arch: str, shape_name: str, *, multi_pod: bool, mode: str,
@@ -117,11 +118,13 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                          error_feedback=error_feedback,
                          momentum_mixing=momentum_mixing, staleness=staleness,
                          fault_schedule=fault_schedule, compressor=compressor)
-    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
+    from repro.analysis.records import DRYRUN_SCHEMA_VERSION
+    record = {"version": DRYRUN_SCHEMA_VERSION,
+              "arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
               "mixing": mixing, "topology": topology, "optimizer": optimizer_name,
               "microbatches": microbatches, "exchange": exchange,
               "schedule": schedule, "staleness": staleness,
-              "compressor": compressor}
+              "compressor": compressor, "verify": None}
     if skip:
         record["status"] = skip
         _dump(out_dir, label, record)
@@ -208,11 +211,19 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         except Exception as e:  # analysis must never sink the record
             record["exchange_schedule"] = f"FAIL: {type(e).__name__}: {e}"
     donate = bundle.donate_argnums if bundle is not None else ()
+    stats = None
     try:
         with mesh:
-            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
-            t_lower = time.time() - t0
-            compiled = lowered.compile()
+            # record donation warnings from this one compile so the static
+            # checker's alias.dropped_donations rule can audit them without
+            # paying for a second compile
+            with warnings.catch_warnings(record=True) as wlog:
+                warnings.simplefilter("always")
+                lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+            drop_msgs = [str(w.message) for w in wlog
+                         if "donat" in str(w.message).lower()]
             t_compile = time.time() - t0 - t_lower
             ma = compiled.memory_analysis()
             ca = compiled.cost_analysis() or {}
@@ -248,6 +259,21 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
                 record["collective_bytes"] = stats.collective_bytes
                 record["collective_count"] = stats.collective_count
                 record["while_trip_counts"] = stats.trip_counts
+            if bundle is not None and mode == "train":
+                # static wire-contract certification (PR 10): census, alias/
+                # donation coverage, byte accounting, seed streams, sparse
+                # invariants — the record-level proof that this config's
+                # program honors its declared contract
+                try:
+                    from repro.analysis import staticcheck
+                    rep = staticcheck.check_bundle(
+                        bundle, mesh, label=label, hlo_stats=stats,
+                        dropped_donations=drop_msgs)
+                    record["verify"] = rep.as_dict()
+                    if verbose:
+                        print(f"[dryrun] {label} verify: {rep.summary()}")
+                except Exception as e:  # analysis must never sink the record
+                    record["verify"] = f"FAIL: {type(e).__name__}: {e}"
     except Exception as e:
         record["status"] = f"FAIL: {type(e).__name__}: {e}"
         record["traceback"] = traceback.format_exc()[-4000:]

@@ -106,6 +106,11 @@ class TrainStepBundle:
     # StepProgram state initializer (fills the overlap wire double-buffer);
     # falls back to optimizer.init when absent.
     init_state: Optional[Callable] = None
+    # the optimizer the step was assembled around — the static checker
+    # (repro.analysis.staticcheck) reads its declared alias contract and
+    # the dryrun verify block threads it through without re-deriving the
+    # launch configuration.
+    optimizer: Optional[DistributedOptimizer] = None
 
     def param_structs(self, mesh: Mesh) -> PyTree:
         def leaf(pd, spec):
@@ -413,6 +418,7 @@ def build_train_step(
         schedule=schedule,
         mixing_program=program if mixing == "ppermute_fused" else None,
         init_state=step_program.init_state,
+        optimizer=optimizer,
     )
 
 

@@ -263,3 +263,116 @@ def test_dependency_report_stacked_has_no_ppermutes():
 
 # (the build_train_step fused=False warning needs a >= 2-agent mesh, so it
 # lives in the test_sharded.py subprocess suite)
+
+
+# -------------------------------------------------------------------------
+# _taint_walk edge cases (the engine under the static checker's census)
+# -------------------------------------------------------------------------
+
+
+def _walk(fn, in_labels, *args, prims=("sin",)):
+    """Trace ``fn`` and walk it with one label per positional arg; returns
+    (merged-hits keyed by call path, output label sets)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    hits = []
+    outs = engine._taint_walk(closed.jaxpr, [frozenset([l]) for l in in_labels],
+                              hits, prims=prims)
+    merged = {}
+    for key, name, taint in hits:
+        merged[key] = merged.get(key, frozenset()) | taint
+    return merged, outs
+
+
+def test_taint_walk_cond_visits_both_branches():
+    """A hit inside ONE cond branch is found, tainted only by what that
+    branch actually reads; the cond output unions both branches."""
+    def f(p, x, y):
+        return jax.lax.cond(p > 0,
+                            lambda a, b: jnp.sin(a) * 1.0,
+                            lambda a, b: b * 2.0, x, y)
+
+    merged, outs = _walk(f, ["pred", "x", "y"],
+                         jnp.float32(1), jnp.ones(3), jnp.ones(3))
+    assert len(merged) == 1                      # sin lives in one branch
+    (taint,) = merged.values()
+    assert "x" in taint and "y" not in taint
+    assert outs[0] >= frozenset({"x", "y"})      # union over branches
+
+
+def test_taint_walk_while_fixpoint_merges_rotated_carry():
+    """The body swaps the two carried slots, so after the fixpoint the hit
+    inside the loop has absorbed BOTH input labels even though iteration 1
+    only shows it one of them."""
+    def f(a, b):
+        def cond(c):
+            return jnp.sum(c[0]) < 100.0
+
+        def body(c):
+            x, y = c
+            return jnp.sin(y), x + 1.0
+
+        return jax.lax.while_loop(cond, body, (a, b))
+
+    merged, _ = _walk(f, ["a", "b"], jnp.ones(3), jnp.ones(3))
+    assert len(merged) == 1                      # one site, fixpoint-deduped
+    (taint,) = merged.values()
+    assert taint >= frozenset({"a", "b"})
+
+
+def test_taint_walk_custom_vjp_descends_into_primal_jaxpr():
+    """custom_vjp_call_jaxpr is NOT opaque: the walk descends into the
+    primal ``fun_jaxpr``, so an output that only reads ``x`` taints {x}
+    even though the call's operands include ``y`` — while the hit recorded
+    for the call itself keeps the full operand taint (the conservative
+    record the census consumes)."""
+    @jax.custom_vjp
+    def g(x, y):
+        return x * 1.0
+
+    g.defvjp(lambda x, y: (g(x, y), (x, y)),
+             lambda res, ct: (ct, ct))
+
+    def f(x, y):
+        return g(x, y) + 0.0
+
+    merged, outs = _walk(f, ["x", "y"], jnp.ones(3), jnp.ones(3),
+                         prims=("custom_vjp",))
+    assert merged, "the custom_vjp call itself must be walkable"
+    (taint,) = merged.values()
+    assert taint == frozenset({"x", "y"})        # call-site record
+    assert outs[0] == frozenset({"x"})           # precise primal data flow
+
+
+def test_taint_walk_nested_scan_paths_and_labels():
+    """A hit two scan levels deep carries both enclosing frames in its call
+    path and the labels that actually reach it."""
+    def f(a, b):
+        def outer(carry, _):
+            def inner(c2, __):
+                return jnp.sin(c2) + jnp.min(b), None
+            c, _ = jax.lax.scan(inner, carry, None, length=2)
+            return c, None
+        out, _ = jax.lax.scan(outer, a, None, length=2)
+        return out
+
+    merged, _ = _walk(f, ["a", "b"], jnp.float32(0), jnp.ones(3))
+    assert len(merged) == 1
+    ((path, _),) = merged.keys()
+    assert [frame[0] for frame in path].count("scan") == 2
+    (taint,) = merged.values()
+    assert taint >= frozenset({"a", "b"})
+
+
+def test_taint_walk_shared_jaxpr_counts_each_call_site():
+    """jax shares the inner jaxpr OBJECT between two pjit call sites of the
+    same jitted fn; keying hits on the enclosing call path (not bare eqn
+    identity) keeps the two structurally distinct sites distinct."""
+    inner = jax.jit(lambda t: jnp.sin(t))
+
+    def f(a, b):
+        return inner(a) + inner(b)
+
+    merged, _ = _walk(f, ["a", "b"], jnp.ones(3), jnp.ones(3))
+    assert len(merged) == 2, "one hit per call site, not one per eqn object"
+    taints = sorted(sorted(t) for t in merged.values())
+    assert taints == [["a"], ["b"]]

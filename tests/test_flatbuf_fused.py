@@ -436,8 +436,8 @@ def test_fused_updates_alias_grad_and_state(cls, kw, n_aliased):
     _, comm, params, grads = _stacked_setup()
     opt = cls(0.05, fused=True, **kw)
     state = opt.init(params)
-    jaxpr = str(jax.make_jaxpr(
-        lambda p, g, s: opt.update(p, g, s, comm))(params, grads, state))
+    jaxpr = jax.make_jaxpr(
+        lambda p, g, s: opt.update(p, g, s, comm))(params, grads, state)
     spec = flatbuf.make_flat_spec(params, lead=1)
     groups = kops.alias_groups(jaxpr)
     assert len(groups) == spec.n_buckets          # every launch aliases
@@ -455,8 +455,8 @@ def test_quantized_fused_also_aliases():
     opt = CDMSGD(0.05, mu=0.9, fused=True)
     state = opt.init(params)
     new_params, _ = opt.update(params, grads, state, comm)
-    jaxpr = str(jax.make_jaxpr(
-        lambda p, g, s: opt.update(p, g, s, comm))(params, grads, state))
+    jaxpr = jax.make_jaxpr(
+        lambda p, g, s: opt.update(p, g, s, comm))(params, grads, state)
     assert len(kops.alias_groups(jaxpr)) == flatbuf.make_flat_spec(params, lead=1).n_buckets
     for x in jax.tree.leaves(new_params):
         assert bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))

@@ -123,9 +123,17 @@ def test_sharded_fused_train_step_matches_dense():
             }
             with mesh:
                 if mixing == "ppermute_fused":
-                    jaxpr = str(jax.make_jaxpr(b.step_fn)(params, opt_state, batch))
-                    counts = {"pallas": jaxpr.count("pallas_call"),
-                              "ppermute": jaxpr.count("ppermute")}
+                    # structured census via the static checker (PR 10) in
+                    # place of counting substrings of the printed jaxpr
+                    from repro.analysis import staticcheck
+                    from repro.kernels.consensus_update import ops as kops
+                    jaxpr = jax.make_jaxpr(b.step_fn)(params, opt_state, batch)
+                    rep = staticcheck.check_bundle(
+                        b, mesh, batch, passes=("census",))
+                    counts = {"pallas": len(kops.alias_groups(jaxpr)),
+                              "ppermute": rep.rule("census.ppermute_count").evidence["actual"],
+                              "census_ok": rep.rule("census.ppermute_count").ok,
+                              "critical_path_ok": rep.rule("census.critical_path").ok}
                 step = jax.jit(b.step_fn)
                 new_params, new_state, metrics = step(params, opt_state, batch)
             outs[mixing] = (new_params, float(metrics["loss"]))
@@ -138,12 +146,16 @@ def test_sharded_fused_train_step_matches_dense():
             "max_param_diff": max(jax.tree.leaves(diffs)),
             "n_buckets": 1, "pallas_calls": counts["pallas"],
             "ppermutes": counts["ppermute"],
+            "census_ok": counts["census_ok"],
+            "critical_path_ok": counts["critical_path_ok"],
         }))
     """))
     assert abs(res["loss_dense"] - res["loss_fused"]) < 1e-4
     assert res["max_param_diff"] < 1e-3, "fused update must equal dense Pi"
     assert res["pallas_calls"] == res["n_buckets"], "one kernel launch per bucket"
     assert res["ppermutes"] == 2, "ring = one ppermute per non-zero shift"
+    assert res["census_ok"], "checker's closed-form count must match the trace"
+    assert res["critical_path_ok"], "sync schedule: every ppermute may read params"
 
 
 @pytest.mark.slow
@@ -196,8 +208,13 @@ def test_sharded_quantized_fused_tracks_dense_over_20_steps():
             }
             with mesh:
                 if mixing == "ppermute_fused":
-                    jaxpr = str(jax.make_jaxpr(b.step_fn)(params, opt_state, batch))
-                    counts = {"ppermute": jaxpr.count("ppermute")}
+                    # structured census: the checker's closed form predicts
+                    # 2 fields (int8 payload + row scales) per non-zero shift
+                    from repro.analysis import staticcheck
+                    rep = staticcheck.check_bundle(
+                        b, mesh, batch, passes=("census",))
+                    counts = {"ppermute": rep.rule("census.ppermute_count").evidence["actual"],
+                              "census_ok": rep.rule("census.ppermute_count").ok}
                 step = jax.jit(b.step_fn, donate_argnums=b.donate_argnums)
                 for _ in range(20):
                     params, opt_state, metrics = step(params, opt_state, batch)
@@ -212,12 +229,14 @@ def test_sharded_quantized_fused_tracks_dense_over_20_steps():
             "max_param_diff": max(jax.tree.leaves(diffs)),
             "param_scale": scale,
             "ppermutes": counts["ppermute"],
+            "census_ok": counts["census_ok"],
             "finite": bool(all(jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(pq))),
         }))
     """))
     assert res["finite"]
     # int8 payload + (rows, 1) scales each ppermute per non-zero ring shift
     assert res["ppermutes"] == 4
+    assert res["census_ok"], "checker's closed-form count must match the trace"
     assert abs(res["loss_dense"] - res["loss_int8"]) < 5e-2
     assert res["max_param_diff"] < 1e-1, "int8 must track the exact mix"
 

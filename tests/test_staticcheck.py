@@ -1,0 +1,290 @@
+"""StepProgram contract checker: certification + deliberately-broken programs.
+
+The checker (``repro.analysis.staticcheck``) is only trustworthy if it
+fails CLOSED: every test here that breaks a program contract on purpose
+asserts that the matching NAMED rule fails with actionable evidence, not
+merely that "some rule" failed.  The happy paths assert full-matrix
+certification on the paper's stacked MLP testbed; the sharded mode is
+certified in a subprocess (8 host devices — the test_sharded.py idiom).
+"""
+
+import functools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import records, staticcheck
+from repro.core import consensus
+from repro.core.optim import (CDSGD, CDMSGD, CDMSGDNesterov, CDAdam,
+                              tree_zeros_like)
+from repro.core.topology import make_topology
+from repro.core.trainer import CollaborativeTrainer
+from repro.nn.paper_models import (classifier_loss, mlp_classifier_apply,
+                                   mlp_classifier_template)
+from repro.nn.param import init_params
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LOSS = functools.partial(classifier_loss, mlp_classifier_apply)
+N_AGENTS = 4
+
+
+def _testbed(seed=0):
+    params = init_params(mlp_classifier_template(8, 4, width=16, depth=2),
+                         jax.random.PRNGKey(seed))
+    topo = make_topology("ring", N_AGENTS)
+    rng = np.random.default_rng(seed)
+    batch = {"x": jnp.asarray(rng.standard_normal((N_AGENTS, 8, 8)), jnp.float32),
+             "y": jnp.asarray(rng.integers(0, 4, (N_AGENTS, 8)), jnp.int32)}
+    return params, topo, batch
+
+
+def _check(optimizer, *, label="t", checkify_indices=False, **kw):
+    params, topo, batch = _testbed()
+    tr = CollaborativeTrainer(LOSS, params, topo, optimizer, **kw)
+    return staticcheck.check_trainer(tr, batch, label=label,
+                                     checkify_indices=checkify_indices)
+
+
+# -------------------------------------------------------------------------
+# happy path: every stacked configuration class certifies
+# -------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("label,opt,kw", [
+    ("sync_f32", CDSGD(0.05, fused=True), {}),
+    ("overlap_int8", CDMSGD(0.05, fused=True),
+     dict(schedule="overlap", exchange="int8")),
+    ("sync_rounds3", CDAdam(0.05, fused=True),
+     dict(exchange="int8", mixing_strategy="multi_round", consensus_rounds=3)),
+    ("overlap_S4", CDSGD(0.05, fused=True),
+     dict(schedule="overlap", exchange="int8", staleness=4)),
+    ("overlap_ef_topk", CDSGD(0.05, fused=True),
+     dict(schedule="overlap", exchange="int8", error_feedback=True,
+          compressor="topk:0.25")),
+    ("overlap_ef_rank", CDMSGDNesterov(0.05, fused=True),
+     dict(schedule="overlap", error_feedback=True, compressor="rank:2")),
+])
+def test_supported_configs_certify(label, opt, kw):
+    rep = _check(opt, label=label, checkify_indices=True, **kw)
+    assert rep.ok, rep.summary()
+    # every non-skipped rule carries a human-readable detail line
+    for r in rep.results:
+        if not r.skipped:
+            assert r.detail, f"{r.rule} certified without evidence"
+
+
+def test_report_shape_and_lookup():
+    rep = _check(CDMSGD(0.05, fused=True), label="shape",
+                 schedule="overlap", exchange="int8")
+    d = rep.as_dict()
+    assert d["version"] == staticcheck.SCHEMA_VERSION
+    assert d["ok"] is True and d["label"] == "shape"
+    assert {"rule", "ok", "detail", "evidence", "skipped"} <= set(d["rules"][0])
+    json.dumps(d, default=str)   # machine-readable end to end
+    census = rep.rule("census.ppermute_count")
+    # ring of 4: 2 non-zero shifts x 2 fields (int8 + scales) x 2 buckets
+    assert census.evidence["actual"] == census.evidence["predicted"]
+    assert "[OK]" in rep.summary()
+    with pytest.raises(KeyError):
+        rep.rule("no.such.rule")
+
+
+def test_census_prediction_closed_form():
+    """The closed form prices fields/buckets/rounds without tracing."""
+    params, topo, batch = _testbed()
+    tr = CollaborativeTrainer(LOSS, params, topo, CDMSGD(0.05, fused=True),
+                              schedule="overlap", exchange="int8",
+                              mixing_strategy="multi_round",
+                              consensus_rounds=3)
+    import jax.tree_util  # noqa: F401  (spec built from live params)
+    from repro.core import flatbuf
+    spec = flatbuf.make_flat_spec(params, lead=1)
+    pred = staticcheck.predict_collectives(tr.program, spec, "overlap",
+                                           "stacked")
+    # stacked execution moves wire state by gather, not collectives
+    assert pred["total"] == 0
+
+
+# -------------------------------------------------------------------------
+# deliberately-broken programs fail the matching NAMED rule
+# -------------------------------------------------------------------------
+
+
+class BuggyNesterov(CDMSGDNesterov):
+    """Reintroduces the PR 9 bug: fused init aliases the params tree into
+    the inner state, so donating (params, opt_state) donates one buffer
+    twice."""
+
+    def init_inner(self, p):
+        if self.fused:
+            return (tree_zeros_like(p), p)
+        return tree_zeros_like(p)
+
+
+def test_double_donation_detected_with_buffer_paths():
+    rep = _check(BuggyNesterov(0.05, fused=True), label="buggy-nesterov")
+    r = rep.rule("alias.double_donation")
+    assert not r.ok
+    assert not rep.ok
+    dup = r.evidence["duplicates"]
+    assert dup, "evidence must name the doubly-donated buffers"
+    # each duplicate names BOTH tree paths sharing one buffer
+    flat = " ".join(str(p) for paths in dup for p in paths)
+    assert "arg0" in flat and "arg1" in flat
+
+
+class NoAliasCDSGD(CDSGD):
+    """Fused CDSGD whose kernel launch silently drops in-place aliasing —
+    the exact regression alias.fused_coverage exists to catch."""
+
+    def apply_fused(self, p, grads, inner, alpha, comm, step, *,
+                    exchanged=None):
+        from repro.core.optim import _flat_setup
+        from repro.kernels.consensus_update.consensus_update import (
+            cdsgd_update_2d)
+        fl = comm.flat
+        spec, nbrs, w, scs, sfs, (g,) = _flat_setup(fl, p, step, grads,
+                                                    exchanged=exchanged)
+        outs = [jax.vmap(lambda wr, gb2: cdsgd_update_2d(
+                    nb, wr, gb2, alpha, interpret=fl.interpret, alias=False))(w, gb)
+                for nb, gb in zip(nbrs, g)]
+        return fl.unpack(outs, spec), inner
+
+
+def test_dropped_alias_detected_per_launch():
+    rep = _check(NoAliasCDSGD(0.05, fused=True), label="no-alias")
+    r = rep.rule("alias.fused_coverage")
+    assert not r.ok
+    assert "0/2" in r.detail or "alias" in r.detail
+
+
+def test_seed_stride_collision_detected(monkeypatch):
+    """Colliding stream strides (agent == bucket) must fail the
+    config-time disjointness proof."""
+    monkeypatch.setattr(consensus, "_SEED_AGENT_STRIDE",
+                        consensus._SEED_BUCKET_STRIDE)
+    rep = _check(CDMSGD(0.05, fused=True), label="bad-strides",
+                 schedule="overlap", exchange="int8")
+    r = rep.rule("seeds.strides_distinct")
+    assert not r.ok
+
+
+def test_claimed_overlap_on_sync_program_is_caught_stacked_census():
+    """A sync-assembled stacked step claimed as overlap: stacked mode has
+    no collectives, so the census stays green — the defense in stacked
+    mode is the byte/alias rails.  The REAL fresh-collective detection is
+    sharded (see test_sharded_claimed_overlap below); here we pin that the
+    checker still runs end to end under a wrong claim without crashing."""
+    params, topo, batch = _testbed()
+    tr = CollaborativeTrainer(LOSS, params, topo, CDSGD(0.05, fused=True),
+                              exchange="int8", schedule="sync")
+    rep = staticcheck.check_program(
+        tr._program.step_fn, tr.state.params, tr.state.opt_state, batch,
+        program=tr.program, optimizer=tr.optimizer, schedule="overlap",
+        mode="stacked", n_agents=N_AGENTS, label="sync-claiming-overlap")
+    assert rep.rule("census.ppermute_count").evidence["actual"] == 0
+
+
+# -------------------------------------------------------------------------
+# sharded mode: census + claimed-overlap breakage (subprocess, 8 devices)
+# -------------------------------------------------------------------------
+
+
+def run_sub(code: str, timeout=560) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-4000:]}"
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.slow
+def test_sharded_claimed_overlap_fails_critical_path_rule():
+    """The acceptance scenario: a sync-assembled SHARDED program checked
+    against the overlap contract must fail census.critical_path with the
+    fresh ppermutes named in evidence (they read params — the exchange is
+    back on the grad->update critical path)."""
+    res = run_sub(textwrap.dedent("""
+        import dataclasses, json
+        import jax
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.core.optim import make_optimizer
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch import steps as steps_lib
+        from repro.analysis import staticcheck
+
+        cfg = dataclasses.replace(get_config("granite-3-8b").reduced(),
+                                  param_dtype="float32")
+        shape = InputShape("tiny_train", 16, 8, "train")
+        mesh = make_debug_mesh(4, 2)
+        opt = make_optimizer("cdmsgd", 0.05, fused=True)
+        b = steps_lib.build_train_step(cfg, shape, mesh, opt, mode="train",
+                                       topology_name="ring",
+                                       mixing="ppermute_fused",
+                                       exchange="int8", schedule="sync")
+        with mesh:
+            good = staticcheck.check_bundle(b, mesh, label="sync-honest")
+            params = b.param_structs(mesh)
+            st = b.opt_state_structs(mesh, opt)
+            lied = staticcheck.check_program(
+                b.step_fn, params, st, b.batch_specs,
+                program=b.mixing_program, optimizer=opt, schedule="overlap",
+                mode="sharded", n_agents=b.n_agents,
+                label="sync-claiming-overlap",
+                row_shard=2)
+        cp = lied.rule("census.critical_path")
+        print("RESULT " + json.dumps({
+            "honest_ok": good.ok,
+            "lied_ok": lied.ok,
+            "critical_path_ok": cp.ok,
+            "detail": cp.detail,
+            "fresh_labels": sorted({l for h in cp.evidence["fresh_hits"]
+                                    for l in h["labels"]}),
+        }))
+    """))
+    assert res["honest_ok"], "the honest sync claim must certify"
+    assert not res["lied_ok"]
+    assert not res["critical_path_ok"]
+    assert "critical path" in res["detail"]
+    assert "params" in res["fresh_labels"], \
+        "evidence must show the fresh collectives reading params"
+
+
+# -------------------------------------------------------------------------
+# dryrun record schema: v2 loader reads the pre-checker v1 artifact
+# -------------------------------------------------------------------------
+
+
+def test_dryrun_loader_reads_v1_artifact():
+    """The seed repo ships a pre-PR-10 dryrun record (no version/verify);
+    the v2 loader must normalize it instead of crashing."""
+    path = os.path.join(
+        REPO, "results", "dryrun",
+        "granite-3-8b__train_4k__16x16__train_ppermute_fused.json")
+    rec = records.load_dryrun_record(path)
+    assert rec["version"] == 1
+    assert rec["verify"] is None
+    assert records.verify_summary(rec) == "not run"
+
+
+def test_verify_summary_of_v2_record(tmp_path):
+    rep = _check(CDSGD(0.05, fused=True), label="v2")
+    rec = {"version": records.DRYRUN_SCHEMA_VERSION, "status": "ok",
+           "verify": rep.as_dict()}
+    p = tmp_path / "rec.json"
+    p.write_text(json.dumps(rec, default=str))
+    loaded = records.load_dryrun_record(str(p))
+    assert loaded["version"] == records.DRYRUN_SCHEMA_VERSION
+    s = records.verify_summary(loaded)
+    assert s.startswith("ok (")
